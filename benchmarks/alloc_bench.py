@@ -1,0 +1,60 @@
+"""Global-memory management benchmarks (paper §IV.B.3).
+
+Cost of collective aligned allocation (translation-table insert +
+shared-cursor alloc), non-collective allocation, pointer dereference,
+and gptr pack/unpack — the constant-overhead ingredients of every DART
+one-sided op.
+"""
+
+from __future__ import annotations
+
+from repro.core import (DART_TEAM_ALL, DartConfig, GlobalPtr, dart_exit,
+                        dart_init, dart_memalloc, dart_memfree,
+                        dart_team_memalloc_aligned, dart_team_memfree)
+from repro.core.onesided import deref
+
+from .common import Report, time_call
+
+
+def run(report: Report, *, repeats: int = 200):
+    ctx = dart_init(n_units=16, config=DartConfig(
+        non_collective_pool_bytes=1 << 22, team_pool_bytes=1 << 22))
+
+    def coll_alloc_free():
+        g = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 4096)
+        dart_team_memfree(ctx, DART_TEAM_ALL, g)
+
+    t = time_call(coll_alloc_free, repeats=repeats)
+    report.add("globmem/collective_alloc_free", t.mean_us)
+
+    def local_alloc_free():
+        g = dart_memalloc(ctx, 4096, unit=3)
+        dart_memfree(ctx, g)
+
+    t = time_call(local_alloc_free, repeats=repeats)
+    report.add("globmem/noncollective_alloc_free", t.mean_us)
+
+    g = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 4096)
+
+    def deref_collective():
+        deref(ctx.heap, ctx.teams_by_slot, g.setunit(7))
+
+    t = time_call(deref_collective, repeats=repeats)
+    report.add("gptr/deref_collective", t.mean_us,
+               "incl. abs->rel unit translation")
+
+    g2 = dart_memalloc(ctx, 4096, unit=5)
+
+    def deref_noncollective():
+        deref(ctx.heap, ctx.teams_by_slot, g2)
+
+    t = time_call(deref_noncollective, repeats=repeats)
+    report.add("gptr/deref_noncollective", t.mean_us,
+               "no unit translation (paper §IV.B.4)")
+
+    def pack_unpack():
+        GlobalPtr.unpack(g.pack())
+
+    t = time_call(pack_unpack, repeats=repeats)
+    report.add("gptr/pack_unpack", t.mean_us)
+    dart_exit(ctx)

@@ -1,0 +1,64 @@
+"""DART team collectives vs raw lax (paper §IV.B.5 overhead story).
+
+Runs in a subprocess-friendly way on the host plane: the DART
+collective path (team translation + segment lookup + jitted op) vs the
+identical raw jitted op, per payload size.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (DART_TEAM_ALL, DartConfig, dart_allreduce,
+                        dart_bcast, dart_exit, dart_init,
+                        dart_team_memalloc_aligned)
+from repro.core import runtime as rt
+
+from .common import Report, fit_constant_overhead, time_call
+
+
+def run(report: Report, *, repeats: int = 20):
+    n_units = 16
+    pool = 1 << 21
+    ctx = dart_init(n_units=n_units, config=DartConfig(
+        non_collective_pool_bytes=4096, team_pool_bytes=pool))
+    gp = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, pool // 2)
+    poolid = ctx.teams[DART_TEAM_ALL].slot + 1
+
+    sizes = [2 ** p for p in range(6, 19, 4)]
+    t_dart, t_raw = [], []
+    for nbytes in sizes:
+        n = nbytes // 4
+        shape = (n,)
+
+        @jax.jit
+        def raw_allreduce(arena):
+            raw = jax.lax.dynamic_slice(arena, (0, 0),
+                                        (arena.shape[0], n * 4))
+            vals = jax.vmap(lambda r: jax.lax.bitcast_convert_type(
+                r.reshape(n, 4), jnp.float32).reshape(-1))(raw)
+            return vals.sum(axis=0)
+
+        def dart_ar():
+            dart_allreduce(ctx, gp, shape, jnp.float32, op="sum")
+
+        def raw_ar():
+            raw_allreduce(ctx.state[poolid]).block_until_ready()
+
+        td = time_call(dart_ar, repeats=repeats)
+        tr = time_call(raw_ar, repeats=repeats)
+        t_dart.append(td.mean_us)
+        t_raw.append(tr.mean_us)
+        report.add(f"allreduce/{nbytes}B/dart", td.mean_us,
+                   f"raw={tr.mean_us:.3f}us")
+
+        def dart_bc():
+            dart_bcast(ctx, gp, nbytes)
+
+        t = time_call(dart_bc, repeats=repeats)
+        report.add(f"bcast/{nbytes}B/dart", t.mean_us)
+
+    c, se = fit_constant_overhead(sizes, t_dart, t_raw)
+    report.add("overhead_fit/allreduce", c, f"stderr={se:.3f}us")
+    dart_exit(ctx)

@@ -1,0 +1,69 @@
+"""Shared benchmark machinery: timers, CSV output, overhead-model fit."""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+OUT_DIR = pathlib.Path(__file__).parent / "out"
+
+
+@dataclasses.dataclass
+class Timing:
+    mean_us: float
+    std_us: float
+    n: int
+
+
+def time_call(fn: Callable[[], None], *, repeats: int = 30,
+              warmup: int = 5) -> Timing:
+    for _ in range(warmup):
+        fn()
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        samples.append((time.perf_counter() - t0) * 1e6)
+    a = np.asarray(samples)
+    # drop outliers beyond 3 MAD (scheduler noise on a 1-core box)
+    med = np.median(a)
+    mad = np.median(np.abs(a - med)) + 1e-9
+    a = a[np.abs(a - med) < 5 * mad]
+    return Timing(float(a.mean()), float(a.std()), len(a))
+
+
+def fit_constant_overhead(sizes: Sequence[int],
+                          t_dart_us: Sequence[float],
+                          t_raw_us: Sequence[float]
+                          ) -> Tuple[float, float]:
+    """Paper §V model: t_DART(m) − t_raw(m) = c.
+
+    Least-squares constant fit; returns (c_us, std_err_us)."""
+    d = np.asarray(t_dart_us) - np.asarray(t_raw_us)
+    c = float(d.mean())
+    se = float(d.std(ddof=1) / np.sqrt(len(d))) if len(d) > 1 else 0.0
+    return c, se
+
+
+class Report:
+    """Collects `name,us_per_call,derived` CSV rows (benchmarks spec)."""
+
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, us: float, derived: str = ""):
+        self.rows.append((name, us, derived))
+        print(f"{name},{us:.3f},{derived}")
+
+    def save(self, fname: str):
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        p = OUT_DIR / fname
+        with open(p, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            for name, us, derived in self.rows:
+                f.write(f"{name},{us:.3f},{derived}\n")
+        return p

@@ -1,0 +1,82 @@
+"""MCS lock benchmarks (paper §IV.B.6 + §VI future work).
+
+* uncontended acquire/release latency
+* contended throughput (N threads hammering one lock)
+* tail-placement congestion: unit0 (paper) vs round_robin
+  (beyond-paper §VI) — measured via the atomics provider's per-home
+  traffic counters, plus a naive central spinlock baseline for
+  contrast.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.core import (LockService, Team, ThreadedAtomics,
+                        group_from_units)
+
+from .common import Report, time_call
+
+
+def _mk(n=8, placement="unit0"):
+    at = ThreadedAtomics(n)
+    svc = LockService(at, tail_placement=placement)
+    team = Team(teamid=0, group=group_from_units(range(n)), slot=0)
+    return at, svc, team
+
+
+def run(report: Report, *, repeats: int = 200):
+    # -- uncontended latency ---------------------------------------------
+    _, svc, team = _mk()
+    lock = svc.create_lock(team)
+
+    def acq_rel():
+        svc.acquire(lock, 0)
+        svc.release(lock, 0)
+
+    t = time_call(acq_rel, repeats=repeats)
+    report.add("lock/uncontended_acq_rel", t.mean_us)
+
+    def try_acq():
+        svc.try_acquire(lock, 0)
+        svc.release(lock, 0)
+
+    t = time_call(try_acq, repeats=repeats)
+    report.add("lock/uncontended_try_acq_rel", t.mean_us)
+
+    # -- contended throughput --------------------------------------------
+    for n_threads in (2, 4, 8):
+        _, svc, team = _mk(n_threads)
+        lock = svc.create_lock(team)
+        iters = 200
+
+        def worker(u):
+            for _ in range(iters):
+                svc.acquire(lock, u)
+                svc.release(lock, u)
+
+        t0 = time.perf_counter()
+        ts = [threading.Thread(target=worker, args=(u,))
+              for u in range(n_threads)]
+        for th in ts:
+            th.start()
+        for th in ts:
+            th.join()
+        dt = time.perf_counter() - t0
+        per_cs = dt / (n_threads * iters) * 1e6
+        report.add(f"lock/contended_{n_threads}threads", per_cs,
+                   f"{n_threads * iters / dt:.0f} cs/s")
+
+    # -- tail placement congestion (paper §VI) ----------------------------
+    for placement in ("unit0", "round_robin"):
+        at, svc, team = _mk(8, placement)
+        locks = [svc.create_lock(team) for _ in range(16)]
+        for i, l in enumerate(locks):
+            for _ in range(50):
+                svc.acquire(l, i % 8)
+                svc.release(l, i % 8)
+        peak = max(at.home_traffic.values())
+        total = sum(at.home_traffic.values())
+        report.add(f"lock/tail_traffic_peak/{placement}", float(peak),
+                   f"total={total} imbalance={peak / (total / 8):.2f}x")

@@ -1,0 +1,178 @@
+"""Paper figures 8–15: DTCT / DTIT / bandwidth of DART put/get vs the
+raw substrate (semantically equivalent jitted XLA ops).
+
+Mirrors §V of the paper:
+
+* DTCT — blocking put/get completion time, message sizes 1B…2MiB
+* DTIT — non-blocking put/get *initiation* time (call returns after
+  issuing; completion explicitly not awaited — §V.A)
+* bandwidth — many overlapping non-blocking ops, then waitall
+* three relative placements.  On this CPU container the three are
+  physically identical (one device); they still exercise the three
+  distinct runtime paths (self-access, intra-pod neighbour, cross-pod
+  unit translation).  On a real mesh the same benchmark binds units to
+  chips, so the placement dimension becomes physical.
+* overhead model fit: t_DART(m) − t_raw(m) = c (constant), as in the
+  paper's analysis (they report c ≈ 0 blocking, ~80–130 ns
+  non-blocking on Cray XE6; ours is µs-scale because the per-call cost
+  is Python dispatch rather than a C library call — same model, shifted
+  constant; see EXPERIMENTS.md §Paper-repro).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DART_TEAM_ALL, DartConfig, dart_exit, dart_init,
+                        dart_team_memalloc_aligned, dart_waitall)
+from repro.core import runtime as rt
+from repro.core.onesided import _arena_read, _arena_write
+
+from .common import Report, fit_constant_overhead, time_call
+
+N_UNITS = 16
+PLACEMENTS = {
+    "intra_unit": (0, 0),        # self-access
+    "inter_unit_ici": (0, 1),    # intra-pod neighbour
+    "inter_pod_dcn": (0, 8),     # unit in the "other pod" half
+}
+
+
+def _mk_ctx(pool_bytes: int):
+    return dart_init(n_units=N_UNITS, config=DartConfig(
+        non_collective_pool_bytes=pool_bytes,
+        team_pool_bytes=pool_bytes))
+
+
+def run(report: Report, *, full: bool = False, repeats: int = 20):
+    max_pow = 21 if full else 18
+    sizes = [2 ** p for p in range(0, max_pow + 1, 3)]
+    pool = 1 << 22
+    ctx = _mk_ctx(pool)
+    gp = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, pool // 2)
+    team = ctx.teams[DART_TEAM_ALL]
+    poolid = team.slot + 1
+
+    fits = {}
+    for place, (src, dst) in PLACEMENTS.items():
+        ptr = gp.setunit(dst)
+        t_dart_put, t_raw_put = [], []
+        t_dart_get, t_raw_get = [], []
+        t_dart_puti, t_dart_geti = [], []
+        for nbytes in sizes:
+            n = max(nbytes // 4, 1)
+            val = jnp.arange(n, dtype=jnp.float32)
+            payload = jax.lax.bitcast_convert_type(val, jnp.uint8
+                                                   ).reshape(-1)
+            row = jnp.uint32(team.myid(dst))
+            off = jnp.uint32(ptr.addr)
+
+            # --- blocking put (DTCT) --------------------------------
+            def dart_put_block():
+                rt.dart_put_blocking(ctx, ptr, val)
+
+            def raw_put_block():
+                ctx.state[poolid] = _arena_write(
+                    ctx.state[poolid], row, off, payload)
+                ctx.state[poolid].block_until_ready()
+
+            td = time_call(dart_put_block, repeats=repeats)
+            tr = time_call(raw_put_block, repeats=repeats)
+            t_dart_put.append(td.mean_us)
+            t_raw_put.append(tr.mean_us)
+            report.add(f"dtct_put/{place}/{nbytes}B/dart", td.mean_us,
+                       f"raw={tr.mean_us:.3f}us")
+
+            # --- blocking get (DTCT) --------------------------------
+            def dart_get_block():
+                rt.dart_get_blocking(ctx, ptr, (n,), jnp.float32)
+
+            def raw_get_block():
+                _arena_read(ctx.state[poolid], row, off,
+                            int(n * 4)).block_until_ready()
+
+            td = time_call(dart_get_block, repeats=repeats)
+            tr = time_call(raw_get_block, repeats=repeats)
+            t_dart_get.append(td.mean_us)
+            t_raw_get.append(tr.mean_us)
+            report.add(f"dtct_get/{place}/{nbytes}B/dart", td.mean_us,
+                       f"raw={tr.mean_us:.3f}us")
+
+            # --- non-blocking initiation (DTIT) ---------------------
+            def dart_put_init():
+                rt.dart_put(ctx, ptr, val)
+
+            def dart_get_init():
+                rt.dart_get(ctx, ptr, (n,), jnp.float32)
+
+            ti = time_call(dart_put_init, repeats=repeats)
+            t_dart_puti.append(ti.mean_us)
+            report.add(f"dtit_put/{place}/{nbytes}B/dart", ti.mean_us)
+            ti = time_call(dart_get_init, repeats=repeats)
+            t_dart_geti.append(ti.mean_us)
+            report.add(f"dtit_get/{place}/{nbytes}B/dart", ti.mean_us)
+
+        for kind, td, tr in (("put", t_dart_put, t_raw_put),
+                             ("get", t_dart_get, t_raw_get)):
+            c, se = fit_constant_overhead(sizes, td, tr)
+            fits[f"{kind}/{place}"] = (c, se)
+            report.add(f"overhead_fit/{kind}/{place}", c,
+                       f"stderr={se:.3f}us (model t_DART-t_raw=c)")
+
+    # --- bandwidth (figs 12-15): overlapping non-blocking then waitall --
+    for place, (src, dst) in PLACEMENTS.items():
+        ptr = gp.setunit(dst)
+        for nbytes in [2 ** p for p in range(10, max_pow + 1, 4)]:
+            n = nbytes // 4
+            val = jnp.arange(n, dtype=jnp.float32)
+            inflight = 8
+
+            def dart_put_bw():
+                hs = [rt.dart_put(ctx, ptr + (i * nbytes) % (pool // 4),
+                                  val) for i in range(inflight)]
+                dart_waitall(hs)
+
+            t = time_call(dart_put_bw, repeats=max(repeats // 2, 5))
+            bw = inflight * nbytes / (t.mean_us * 1e-6) / 1e9
+            report.add(f"bw_put_nb/{place}/{nbytes}B", t.mean_us,
+                       f"{bw:.3f}GB/s")
+
+            def dart_get_bw():
+                out = [rt.dart_get(ctx, ptr + (i * nbytes) % (pool // 4),
+                                   (n,), jnp.float32)[1]
+                       for i in range(inflight)]
+                dart_waitall(out)
+
+            t = time_call(dart_get_bw, repeats=max(repeats // 2, 5))
+            bw = inflight * nbytes / (t.mean_us * 1e-6) / 1e9
+            report.add(f"bw_get_nb/{place}/{nbytes}B", t.mean_us,
+                       f"{bw:.3f}GB/s")
+
+    # --- §VI shared-memory window: zero-copy view vs one-sided get -----
+    from repro.core import (dart_shm_view, dart_team_memalloc_shared,
+                            shm_supported)
+    if shm_supported(ctx):
+        gs = dart_team_memalloc_shared(ctx, DART_TEAM_ALL, 1 << 18)
+        for nbytes in (64, 4096, 262144):
+            n = nbytes // 4
+            rt.dart_put_blocking(ctx, gs.setunit(1),
+                                 jnp.arange(n, dtype=jnp.float32))
+
+            def shm_read():
+                dart_shm_view(ctx, gs.setunit(1), (n,), jnp.float32)
+
+            def get_read():
+                rt.dart_get_blocking(ctx, gs.setunit(1), (n,), jnp.float32)
+
+            ts = time_call(shm_read, repeats=repeats)
+            tg = time_call(get_read, repeats=repeats)
+            report.add(f"shm_view/{nbytes}B", ts.mean_us,
+                       f"get={tg.mean_us:.3f}us "
+                       f"speedup={tg.mean_us / ts.mean_us:.1f}x")
+
+    dart_exit(ctx)
+    return fits

@@ -1,0 +1,146 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+derives, per (arch × shape × mesh):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_link_bytes_per_device / collective_bw
+
+Hardware constants (v5e-like, per instructions): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI; we assume ring collectives use 2 links
+concurrently => 100 GB/s effective per-chip collective bandwidth
+(DESIGN.md §7).  cost_analysis() is per-device post-SPMD (verified
+empirically — see EXPERIMENTS.md §Dry-run methodology), so no /chips is
+applied.
+
+MODEL_FLOPS uses 6·N·D (dense) / 6·N_active·D (MoE) for training; for
+inference steps the factor is 2·N (forward only) per token.  The ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy
+waste (remat=full targets ~6/8 = 0.75 for training).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / ICI link
+COLL_BW = 2 * LINK_BW        # bidirectional ring: 2 links in flight
+
+SHAPE_TOKENS = {
+    # tokens processed per executed step
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,        # one token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(rec: Dict) -> float:
+    n = rec["active_param_count"]
+    tokens = SHAPE_TOKENS[rec["shape"]]
+    if rec["kind"] == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens
+
+
+def analyse(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok"):
+        return None
+    n_dev = rec["n_devices"]
+    t_compute = rec["flops_per_device"] / PEAK_FLOPS
+    t_memory = rec["bytes_accessed_per_device"] / HBM_BW
+    t_coll = rec["collective_link_bytes_per_device"] / COLL_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_total = rec["flops_per_device"] * n_dev
+    useful = mf / hlo_total if hlo_total else 0.0
+    step_time = max(terms.values())
+    # roofline fraction: useful model FLOPs per chip-second vs peak
+    mfu_bound = (mf / n_dev / step_time) / PEAK_FLOPS if step_time else 0.0
+    return {
+        **{f"t_{k}_s": v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": mfu_bound,
+        "step_time_bound_s": step_time,
+    }
+
+
+LEVER = {
+    ("train", "compute"): "cut HLO/MODEL flops gap (remat policy, fused "
+                          "attention) — compute-bound is the good case",
+    ("train", "memory"): "raise arithmetic intensity: larger per-chip "
+                         "batch, bf16 master/opt state, fused norms",
+    ("train", "collective"): "shrink FSDP/TP traffic: 2D sharding, "
+                             "overlapped all-gathers, grad compression",
+    ("prefill", "compute"): "fused block attention; good case",
+    ("prefill", "memory"): "KV cache layout + flash-style tiling",
+    ("prefill", "collective"): "sequence-parallel attention instead of "
+                               "activation all-gathers",
+    ("decode", "compute"): "batch more sequences per chip",
+    ("decode", "memory"): "decode is weight/KV-bandwidth bound by nature: "
+                          "quantize weights/KV, widen batch",
+    ("decode", "collective"): "keep TP collectives off the token path "
+                              "(all-gather weights once, ring KV)",
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--md", default=None, help="write markdown table here")
+    args = ap.parse_args()
+
+    rows: List[Dict] = []
+    for p in sorted(pathlib.Path(args.dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("tag"):
+            continue
+        if rec["mesh"] != args.mesh:
+            continue
+        if not rec.get("applicable", True):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "skip": rec.get("skip_reason", "n/a")})
+            continue
+        a = analyse(rec)
+        if a is None:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "skip": "FAILED: " + rec.get("error", "?")})
+            continue
+        rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                     "kind": rec["kind"], **a})
+
+    hdr = (f"| arch | shape | compute s | memory s | collective s | "
+           f"dominant | MODEL/HLO | roofline frac | lever |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if "skip" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | {r['skip'][:60]} |")
+            continue
+        lever = LEVER.get((r["kind"], r["dominant"]), "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.1%} | {lever[:70]} |")
+    table = "\n".join(lines)
+    print(table)
+    if args.md:
+        pathlib.Path(args.md).write_text(table + "\n")
+
+
+if __name__ == "__main__":
+    main()

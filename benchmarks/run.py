@@ -1,0 +1,71 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV (spec) and writes
+benchmarks/out/*.csv.  Mapping to the paper:
+
+    put_get    — figs 8/9 (DTCT), 10/11 (DTIT), 12–15 (bandwidth),
+                 + the §V.C constant-overhead model fit
+    collective — §IV.B.5 collectives overhead
+    lock       — §IV.B.6 MCS lock + §VI balanced-tail comparison
+    teamlist   — §IV.B.2 slot allocator + §VI O(1) variant
+    alloc      — §IV.B.3 allocation/dereference costs
+
+Roofline tables (§Roofline) are produced by the dry-run pipeline
+(``python -m repro.launch.dryrun --all`` then
+``python -m benchmarks.roofline``), not by this wall-clock harness.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .common import OUT_DIR, Report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full message-size sweep (to 2MiB)")
+    ap.add_argument("--only", default=None,
+                    help="run a single suite: put_get|collective|lock|"
+                         "teamlist|alloc")
+    ap.add_argument("--repeats", type=int, default=20)
+    args = ap.parse_args()
+
+    from . import (alloc_bench, collective_bench, lock_bench, put_get,
+                   teamlist_bench)
+
+    suites = {
+        "put_get": lambda r: put_get.run(r, full=args.full,
+                                         repeats=args.repeats),
+        "collective": lambda r: collective_bench.run(
+            r, repeats=args.repeats),
+        "lock": lambda r: lock_bench.run(r, repeats=max(args.repeats, 50)),
+        "teamlist": lambda r: teamlist_bench.run(
+            r, repeats=max(args.repeats, 50)),
+        "alloc": lambda r: alloc_bench.run(r, repeats=max(args.repeats, 50)),
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    failures = 0
+    for name, fn in suites.items():
+        print(f"# === suite: {name} ===", flush=True)
+        report = Report()
+        try:
+            fn(report)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"# suite {name} FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+        path = report.save(f"{name}.csv")
+        print(f"# wrote {path}", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Teamlist allocator benchmarks (paper §IV.B.2 + §VI).
+
+The paper flags the linear teamlist scan as a scalability issue and
+proposes a linked-list alternative; we measure the faithful linear
+allocator against the O(1) free-list variant at growing live-team
+counts, for the three hot operations (create / lookup / destroy).
+"""
+
+from __future__ import annotations
+
+from repro.core import FreeListTeamList, TeamList
+
+from .common import Report, time_call
+
+
+def run(report: Report, *, repeats: int = 50):
+    for live in (16, 128, 1024):
+        for cls, tag in ((TeamList, "paper_linear"),
+                         (FreeListTeamList, "freelist")):
+            tl = cls(capacity=live + 8)
+            for t in range(live):
+                tl.alloc(t)
+            worst = live - 1           # the paper's worst case: last slot
+
+            t = time_call(lambda: tl.lookup(worst), repeats=repeats)
+            report.add(f"teamlist/lookup_live{live}/{tag}", t.mean_us)
+
+            def create_destroy():
+                tid = 10_000_000
+                tl.alloc(tid)
+                tl.free(tid)
+
+            t = time_call(create_destroy, repeats=repeats)
+            report.add(f"teamlist/create_destroy_live{live}/{tag}",
+                       t.mean_us)

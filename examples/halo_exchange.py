@@ -1,0 +1,88 @@
+"""Classic PGAS application: 1-D heat diffusion with one-sided halo
+exchange (the pattern DART/DASH was built for).
+
+Each of 8 units owns a block of the rod; every step it PUTs its edge
+cells into its neighbours' halo slots (one-sided — neighbours don't
+participate), then applies the stencil locally.  Result is checked
+against a single-device dense reference.
+
+    PYTHONPATH=src python examples/halo_exchange.py
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType, PartitionSpec as P
+
+from repro.core.onesided import shmem_halo_exchange
+from repro.core.globmem import from_bytes
+
+N_UNITS = 8
+LOCAL = 32                      # cells per unit
+ALPHA = 0.1
+STEPS = 50
+
+mesh = jax.make_mesh((N_UNITS,), ("unit",),
+                     axis_types=(AxisType.Auto,))
+
+# arena layout per unit: [left_halo (4B) | right_halo (4B)]
+LEFT_OFF, RIGHT_OFF = 0, 128
+POOL = 256
+
+
+def step_body(u, arena_row):
+    """One diffusion step for this unit's block (SPMD)."""
+    left_edge = u[:1]            # what the left neighbour needs
+    right_edge = u[-1:]
+    arena_row = shmem_halo_exchange(
+        arena_row, left_edge, right_edge, LEFT_OFF, RIGHT_OFF,
+        "unit", N_UNITS, wrap=False)
+    lh = from_bytes(jax.lax.dynamic_slice(arena_row, (0, LEFT_OFF),
+                                          (1, 4))[0], (1,), jnp.float32)
+    rh = from_bytes(jax.lax.dynamic_slice(arena_row, (0, RIGHT_OFF),
+                                          (1, 4))[0], (1,), jnp.float32)
+    # boundary units keep their edge value (insulated ends)
+    idx = jax.lax.axis_index("unit")
+    lh = jnp.where(idx == 0, u[:1], lh)
+    rh = jnp.where(idx == N_UNITS - 1, u[-1:], rh)
+    padded = jnp.concatenate([lh, u, rh])
+    new_u = u + ALPHA * (padded[:-2] - 2 * u + padded[2:])
+    return new_u, arena_row
+
+
+def run(u0):
+    def body(carry, _):
+        u, arena = carry
+        u, arena = step_body(u, arena)
+        return (u, arena), None
+
+    arena0 = jnp.zeros((1, POOL), jnp.uint8)
+    (u, _), _ = jax.lax.scan(body, (u0, arena0), None, length=STEPS)
+    return u
+
+
+spmd = jax.jit(jax.shard_map(run, mesh=mesh, in_specs=P("unit"),
+                             out_specs=P("unit"), check_vma=False))
+
+# initial condition: a hot spike in the middle
+x0 = np.zeros(N_UNITS * LOCAL, np.float32)
+x0[len(x0) // 2 - 4:len(x0) // 2 + 4] = 100.0
+result = np.asarray(spmd(jnp.asarray(x0)))
+
+# dense single-device reference
+ref = x0.copy()
+for _ in range(STEPS):
+    padded = np.concatenate([ref[:1], ref, ref[-1:]])
+    ref = ref + ALPHA * (padded[:-2] - 2 * ref + padded[2:])
+
+err = np.max(np.abs(result - ref))
+print(f"max |PGAS - dense| after {STEPS} steps: {err:.2e}")
+assert err < 1e-4, "halo exchange diverged from the dense reference"
+print("OK — one-sided halo exchange matches the dense stencil.")
+print("temperature profile (coarse):",
+      np.round(result.reshape(N_UNITS, LOCAL).mean(axis=1), 2))

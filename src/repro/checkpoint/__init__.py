@@ -1,0 +1,2 @@
+from .manager import (CheckpointConfig, CheckpointManager, load_checkpoint,
+                      save_checkpoint)

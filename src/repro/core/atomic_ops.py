@@ -1,0 +1,116 @@
+"""DART atomic memory operations on global memory (paper §IV.B.6).
+
+The paper builds its locks on MPI-3 ``MPI_Fetch_and_op`` /
+``MPI_Compare_and_swap`` against window memory.  This module exposes
+the same one-sided atomic API *on heap locations addressed by global
+pointers* (int32 cells), completing the DART communication surface:
+
+    dart_fetch_and_add(ctx, gptr, delta)        -> old value
+    dart_fetch_and_store(ctx, gptr, value)      -> old value
+    dart_compare_and_swap(ctx, gptr, exp, des)  -> old value
+
+Atomicity model: under the single-controller runtime every atomic is a
+read-modify-write issued from the one control thread, serialized by a
+per-context mutex (multiple host threads — e.g. serving workers — may
+share a context).  On a multi-controller deployment these map to the
+remote-DMA + semaphore protocol sketched in core/atomics.py; the
+*data-plane* layout (int32 cells in the symmetric heap, addressed by
+gptr) is identical, which is the point: lock state lives in ordinary
+DART global memory exactly as in the paper (Fig. 6).
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+from .gptr import GlobalPtr
+from .onesided import dart_get_blocking, dart_put_blocking
+
+_ctx_locks: dict = {}
+_ctx_locks_guard = threading.Lock()
+
+
+def _mutex_for(ctx):
+    with _ctx_locks_guard:
+        key = id(ctx)
+        if key not in _ctx_locks:
+            _ctx_locks[key] = threading.Lock()
+        return _ctx_locks[key]
+
+
+def _read_i32(ctx, gptr: GlobalPtr) -> int:
+    return int(np.asarray(dart_get_blocking(
+        ctx.state, ctx.heap, ctx.teams_by_slot, gptr, (1,), jnp.int32))[0])
+
+
+def _write_i32(ctx, gptr: GlobalPtr, value: int) -> None:
+    ctx.state = dart_put_blocking(
+        ctx.state, ctx.heap, ctx.teams_by_slot, gptr,
+        jnp.asarray([value], jnp.int32))
+
+
+def dart_fetch_and_add(ctx, gptr: GlobalPtr, delta: int) -> int:
+    with _mutex_for(ctx):
+        old = _read_i32(ctx, gptr)
+        _write_i32(ctx, gptr, old + delta)
+        return old
+
+
+def dart_fetch_and_store(ctx, gptr: GlobalPtr, value: int) -> int:
+    with _mutex_for(ctx):
+        old = _read_i32(ctx, gptr)
+        _write_i32(ctx, gptr, value)
+        return old
+
+
+def dart_compare_and_swap(ctx, gptr: GlobalPtr, expected: int,
+                          desired: int) -> int:
+    with _mutex_for(ctx):
+        old = _read_i32(ctx, gptr)
+        if old == expected:
+            _write_i32(ctx, gptr, desired)
+        return old
+
+
+class HeapAtomicsProvider:
+    """AtomicsProvider backed by heap cells — lets the MCS LockService
+    run with its lock state in DART global memory (paper Fig. 6
+    layout: tail on one unit, next-cells spread across members)."""
+
+    def __init__(self, ctx, notifier):
+        self.ctx = ctx
+        self._notifier = notifier             # reuse ThreadedAtomics' inbox
+        self._cells: dict = {}
+
+    def make_cell(self, name, home_unit, init) -> GlobalPtr:
+        from .runtime import dart_memalloc
+        g = dart_memalloc(self.ctx, 4, unit=home_unit)
+        _write_i32(self.ctx, g, init)
+        self._cells[name] = g
+        return g
+
+    def fetch_and_store(self, cell, value):
+        return dart_fetch_and_store(self.ctx, cell, value)
+
+    def fetch_and_add(self, cell, value):
+        return dart_fetch_and_add(self.ctx, cell, value)
+
+    def compare_and_swap(self, cell, expected, desired):
+        return dart_compare_and_swap(self.ctx, cell, expected, desired)
+
+    def load(self, cell):
+        with _mutex_for(self.ctx):
+            return _read_i32(self.ctx, cell)
+
+    def store(self, cell, value):
+        with _mutex_for(self.ctx):
+            _write_i32(self.ctx, cell, value)
+
+    def notify(self, unit, tag):
+        self._notifier.notify(unit, tag)
+
+    def wait_notify(self, unit, tag, timeout=None):
+        self._notifier.wait_notify(unit, tag, timeout=timeout)

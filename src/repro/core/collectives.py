@@ -1,0 +1,169 @@
+"""DART collective communication (paper §III, §IV.B.5).
+
+The paper implements DART collectives "straightforwardly by using the
+MPI-3 collective counterparts", after resolving the team → communicator
+translation.  We do the same against the JAX substrate:
+
+* **Device plane** (inside ``shard_map``): team → ``axis_index_groups``
+  (the JAX analogue of a sub-communicator).  ``psum`` lacks group
+  support on some backends, so the team all-reduce is decomposed into
+  reduce-scatter + all-gather — the canonical ring decomposition, and
+  incidentally the DART-style construction of a collective from
+  one-sided phases.
+
+* **Host plane**: collectives over heap segments (bcast/scatter/gather)
+  are expressed as row motions on the arena via jitted gather/scatter.
+
+``dart_barrier`` on the host plane is a device-queue fence; inside a
+step it is a zero-payload psum (token barrier).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .globmem import HeapState, SymmetricHeap, from_bytes, nbytes_of
+from .gptr import GlobalPtr
+from .onesided import Handle, deref
+
+# --------------------------------------------------------------------------
+# Device-plane team collectives (call inside shard_map)
+# --------------------------------------------------------------------------
+
+
+def team_all_gather(x, axis: str, groups=None, tiled: bool = False):
+    return jax.lax.all_gather(x, axis, axis_index_groups=groups, tiled=tiled)
+
+
+def team_reduce_scatter(x, axis: str, groups=None):
+    return jax.lax.psum_scatter(x, axis, axis_index_groups=groups,
+                                tiled=True)
+
+
+def team_psum(x, axis: str, groups=None):
+    """Team all-reduce.
+
+    With groups: reduce-scatter + all-gather (RS+AG) over a padded
+    leading axis — ``lax.psum`` does not accept ``axis_index_groups`` on
+    the CPU/interpret path.  Without groups: plain psum.
+    """
+    if groups is None:
+        return jax.lax.psum(x, axis)
+    g = len(groups[0])
+    flat = x.reshape(-1)
+    pad = (-flat.size) % g
+    flat = jnp.pad(flat, (0, pad))
+    scat = jax.lax.psum_scatter(flat, axis, axis_index_groups=groups,
+                                tiled=True)
+    full = jax.lax.all_gather(scat, axis, axis_index_groups=groups,
+                              tiled=True)
+    if pad:
+        full = full[:-pad]
+    return full.reshape(x.shape)
+
+
+def team_pmax(x, axis: str, groups=None):
+    return jax.lax.pmax(x, axis, axis_index_groups=groups)
+
+
+def team_all_to_all(x, axis: str, split_axis: int, concat_axis: int,
+                    groups=None):
+    return jax.lax.all_to_all(x, axis, split_axis, concat_axis,
+                              axis_index_groups=groups, tiled=True)
+
+
+def team_broadcast(x, axis: str, root_rel: int, groups=None):
+    """Broadcast from the team-relative root: all_gather + static pick."""
+    g = jax.lax.all_gather(x, axis, axis_index_groups=groups)
+    return jax.lax.index_in_dim(g, root_rel, axis=0, keepdims=False)
+
+
+def team_barrier(axis: str, groups=None):
+    """Token barrier: a zero-payload team reduction."""
+    return team_psum(jnp.zeros((), jnp.int32) + 1, axis, groups)
+
+
+# --------------------------------------------------------------------------
+# Host-plane collectives over heap segments
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, donate_argnums=0, static_argnums=(2,))
+def _rows_bcast(arena, root_row, n_rows):
+    row = jax.lax.dynamic_slice(arena, (root_row, jnp.uint32(0)),
+                                (1, arena.shape[1]))
+    return jnp.broadcast_to(row, (n_rows, arena.shape[1])).astype(arena.dtype)
+
+
+def dart_bcast(state: HeapState, heap: SymmetricHeap, teams_by_slot,
+               root_gptr: GlobalPtr, nbytes: int):
+    """Broadcast ``nbytes`` at the root's allocation to every row of the
+    segment (team members all see the root's bytes at the same offset)."""
+    poolid, row, off = deref(heap, teams_by_slot, root_gptr)
+    arena = state[poolid]
+    src = jax.lax.dynamic_slice(arena, (jnp.uint32(row), jnp.uint32(off)),
+                                (1, nbytes))
+    tiled = jnp.broadcast_to(src, (arena.shape[0], nbytes))
+    arena = jax.lax.dynamic_update_slice(arena, tiled,
+                                         (jnp.uint32(0), jnp.uint32(off)))
+    new_state = dict(state)
+    new_state[poolid] = arena
+    return new_state, Handle((arena,))
+
+
+def dart_gather(state: HeapState, heap: SymmetricHeap, teams_by_slot,
+                gptr: GlobalPtr, per_unit_nbytes: int):
+    """Gather each row's ``per_unit_nbytes`` at gptr.addr → host value of
+    shape (n_rows, per_unit_nbytes) uint8."""
+    poolid, _, off = deref(heap, teams_by_slot, gptr)
+    arena = state[poolid]
+    out = jax.lax.dynamic_slice(
+        arena, (jnp.uint32(0), jnp.uint32(off)),
+        (arena.shape[0], per_unit_nbytes))
+    return out, Handle((out,))
+
+
+def dart_scatter(state: HeapState, heap: SymmetricHeap, teams_by_slot,
+                 gptr: GlobalPtr, values: jax.Array):
+    """Scatter row i of ``values`` (uint8[n_rows, nbytes]) to unit i."""
+    poolid, _, off = deref(heap, teams_by_slot, gptr)
+    arena = state[poolid]
+    values = jnp.asarray(values, jnp.uint8)
+    arena = jax.lax.dynamic_update_slice(arena, values,
+                                         (jnp.uint32(0), jnp.uint32(off)))
+    new_state = dict(state)
+    new_state[poolid] = arena
+    return new_state, Handle((arena,))
+
+
+def dart_allreduce(state: HeapState, heap: SymmetricHeap, teams_by_slot,
+                   gptr: GlobalPtr, shape, dtype, op: str = "sum"):
+    """All-reduce the typed value at gptr.addr across rows; the result
+    replaces every row's copy.  Returns (new_state, reduced_value)."""
+    poolid, _, off = deref(heap, teams_by_slot, gptr)
+    n = nbytes_of(shape, dtype)
+    arena = state[poolid]
+    raw = jax.lax.dynamic_slice(arena, (jnp.uint32(0), jnp.uint32(off)),
+                                (arena.shape[0], n))
+    vals = jax.vmap(lambda r: from_bytes(r, shape, dtype))(raw)
+    red = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min,
+           "prod": jnp.prod}[op](vals, axis=0)
+    from .globmem import to_bytes
+    payload = jnp.broadcast_to(to_bytes(red)[None, :], (arena.shape[0], n))
+    arena = jax.lax.dynamic_update_slice(arena, payload,
+                                         (jnp.uint32(0), jnp.uint32(off)))
+    new_state = dict(state)
+    new_state[poolid] = arena
+    return new_state, red
+
+
+def dart_barrier(state: Optional[HeapState] = None) -> None:
+    """Host-plane barrier: fence the device queue (single-controller)."""
+    if state:
+        jax.block_until_ready(list(state.values()))
+    else:
+        jax.block_until_ready(jnp.zeros(()))

@@ -1,0 +1,253 @@
+"""DART global memory management (paper §III, §IV.B.3).
+
+The global address space is realized as a **symmetric heap**: one byte
+arena per *segment pool*, each a ``uint8[n_rows, pool_bytes]`` JAX array
+whose rows are the per-unit partitions.  On a device mesh the arenas are
+sharded ``P('unit', None)`` so row *i* physically lives in unit *i*'s
+HBM; on the CPU test plane they are ordinary arrays.  This is the
+analogue of the paper's MPI *windows*:
+
+* **Non-collective allocations** (``dart_memalloc``) are local ops.  MPI
+  windows are collective, so the paper pre-reserves one block of memory
+  on every unit and creates a single WORLD window over it at init time
+  (§IV.B.3, Fig. 4); every non-collective allocation then carves from
+  the calling unit's partition.  We mirror this exactly: pool id 0 is
+  reserved at ``dart_init`` with one row per unit in DART_TEAM_ALL and a
+  *per-unit* allocator; offsets in non-collective global pointers are
+  displacements into the owner's row, dereferenced **without unit
+  translation** (§IV.B.4).
+
+* **Collective allocations** (``dart_team_memalloc_aligned``) carve from
+  the owning team's pre-reserved pool (one row per *team member*,
+  addressed by relative id → unit translation required).  A single
+  shared allocator cursor guarantees the *aligned & symmetric* property:
+  every member sees the identical offset, so any member can locally
+  compute a pointer to any member's portion (§III).  Each allocation is
+  recorded in the team's **translation table** (§IV.B.3, Fig. 5).
+
+Deallocation: the paper does not specify an allocator; we provide a
+production-grade first-fit free-list allocator with coalescing (the MPI
+implementation underneath DART-MPI does the same inside window pools).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .gptr import (FLAG_COLLECTIVE, NON_COLLECTIVE_SEG, GlobalPtr)
+
+#: allocation granularity (bytes).  128 matches the TPU lane width so a
+#: row slice of any allocation is layout-friendly.
+ALIGNMENT = 128
+
+
+def align_up(n: int, a: int = ALIGNMENT) -> int:
+    return (n + a - 1) // a * a
+
+
+class OutOfGlobalMemory(RuntimeError):
+    pass
+
+
+class BlockAllocator:
+    """First-fit free-list allocator with coalescing over [0, size)."""
+
+    def __init__(self, size: int):
+        self.size = size
+        self._free: List[Tuple[int, int]] = [(0, size)]   # (offset, len)
+        self._live: Dict[int, int] = {}                   # offset -> len
+
+    def alloc(self, nbytes: int) -> int:
+        nbytes = align_up(max(nbytes, 1))
+        for i, (off, ln) in enumerate(self._free):
+            if ln >= nbytes:
+                if ln == nbytes:
+                    self._free.pop(i)
+                else:
+                    self._free[i] = (off + nbytes, ln - nbytes)
+                self._live[off] = nbytes
+                return off
+        raise OutOfGlobalMemory(
+            f"pool exhausted: need {nbytes}B, largest free block "
+            f"{max((l for _, l in self._free), default=0)}B")
+
+    def free(self, offset: int) -> None:
+        ln = self._live.pop(offset)
+        self._free.append((offset, ln))
+        self._free.sort()
+        merged: List[Tuple[int, int]] = []
+        for off, l in self._free:
+            if merged and merged[-1][0] + merged[-1][1] == off:
+                merged[-1] = (merged[-1][0], merged[-1][1] + l)
+            else:
+                merged.append((off, l))
+        self._free = merged
+
+    def bytes_live(self) -> int:
+        return sum(self._live.values())
+
+
+@dataclasses.dataclass
+class TranslationRecord:
+    """One row of a team's translation table (paper Fig. 5)."""
+    offset: int          # displacement in the team pool (== gptr.addr)
+    nbytes: int          # per-unit extent of the allocation
+    poolid: int          # which arena backs it ("window object")
+
+
+class TranslationTable:
+    """Per-team table mapping collective allocations → (pool, offset).
+
+    The paper stores (window object, offset) per collective allocation;
+    dereference walks the table to find the record *containing* a given
+    address (§IV.B.3/4).
+    """
+
+    def __init__(self):
+        self._records: List[TranslationRecord] = []
+
+    def add(self, rec: TranslationRecord) -> None:
+        self._records.append(rec)
+        self._records.sort(key=lambda r: r.offset)
+
+    def query(self, addr: int) -> TranslationRecord:
+        for r in self._records:
+            if r.offset <= addr < r.offset + r.nbytes:
+                return r
+        raise KeyError(f"address {addr} not inside any collective allocation")
+
+    def remove(self, offset: int) -> TranslationRecord:
+        for i, r in enumerate(self._records):
+            if r.offset == offset:
+                return self._records.pop(i)
+        raise KeyError(f"no allocation at offset {offset}")
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+
+@dataclasses.dataclass
+class PoolMeta:
+    """Host-side metadata for one arena pool."""
+    poolid: int
+    n_rows: int
+    pool_bytes: int
+    collective: bool
+    # collective pools: one shared cursor (aligned & symmetric);
+    # non-collective pool: one allocator per unit row.
+    shared_alloc: Optional[BlockAllocator] = None
+    per_unit_alloc: Optional[List[BlockAllocator]] = None
+    table: Optional[TranslationTable] = None
+
+
+# The device-resident heap state is a plain dict pytree:
+#   {poolid: uint8[n_rows, pool_bytes]}
+HeapState = Dict[int, jax.Array]
+
+
+class SymmetricHeap:
+    """Host-side layout manager + factory for device heap state."""
+
+    def __init__(self, n_units: int, mesh: Optional[jax.sharding.Mesh] = None,
+                 unit_axes: Optional[Tuple[str, ...]] = None):
+        self.n_units = n_units
+        self.mesh = mesh
+        self.unit_axes = unit_axes
+        self.pools: Dict[int, PoolMeta] = {}
+        self._next_poolid = 0
+
+    # -- pool management -------------------------------------------------
+    def reserve_pool(self, n_rows: int, pool_bytes: int,
+                     collective: bool) -> PoolMeta:
+        pool_bytes = align_up(pool_bytes)
+        pid = self._next_poolid
+        self._next_poolid += 1
+        meta = PoolMeta(
+            poolid=pid, n_rows=n_rows, pool_bytes=pool_bytes,
+            collective=collective,
+            shared_alloc=BlockAllocator(pool_bytes) if collective else None,
+            per_unit_alloc=(None if collective else
+                            [BlockAllocator(pool_bytes) for _ in range(n_rows)]),
+            table=TranslationTable() if collective else None,
+        )
+        self.pools[pid] = meta
+        return meta
+
+    def drop_pool(self, poolid: int) -> None:
+        del self.pools[poolid]
+
+    def _sharding_for(self):
+        if self.mesh is None:
+            return None
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return NamedSharding(self.mesh, P(self.unit_axes, None))
+
+    def init_pool_state(self, meta: PoolMeta) -> jax.Array:
+        """Zero-initialized device arena for one pool."""
+        shape = (meta.n_rows, meta.pool_bytes)
+        sh = self._sharding_for()
+        if sh is None:
+            return jnp.zeros(shape, dtype=jnp.uint8)
+        return jax.jit(lambda: jnp.zeros(shape, dtype=jnp.uint8),
+                       out_shardings=sh)()
+
+    def init_state(self) -> HeapState:
+        return {pid: self.init_pool_state(meta)
+                for pid, meta in self.pools.items()}
+
+    # -- allocation ------------------------------------------------------
+    def memalloc_local(self, meta: PoolMeta, unit_row: int,
+                       nbytes: int) -> int:
+        """Non-collective allocation on one unit's partition (§IV.B.3)."""
+        if meta.collective:
+            raise ValueError("local alloc on a collective pool")
+        return meta.per_unit_alloc[unit_row].alloc(nbytes)
+
+    def memalloc_aligned(self, meta: PoolMeta, nbytes: int) -> int:
+        """Collective aligned/symmetric allocation (§IV.B.3, Fig. 5)."""
+        if not meta.collective:
+            raise ValueError("aligned alloc on the non-collective pool")
+        off = meta.shared_alloc.alloc(nbytes)
+        meta.table.add(TranslationRecord(offset=off, nbytes=align_up(nbytes),
+                                         poolid=meta.poolid))
+        return off
+
+    def memfree_local(self, meta: PoolMeta, unit_row: int,
+                      offset: int) -> None:
+        meta.per_unit_alloc[unit_row].free(offset)
+
+    def memfree_aligned(self, meta: PoolMeta, offset: int) -> None:
+        meta.shared_alloc.free(offset)
+        meta.table.remove(offset)
+
+
+# -- byte <-> typed-value conversion (jit-safe) ---------------------------
+
+def to_bytes(value: jax.Array) -> jax.Array:
+    """Flatten a typed array into a 1-D uint8 byte string (bitcast)."""
+    value = jnp.asarray(value)
+    if value.dtype == jnp.uint8:
+        return value.reshape(-1)
+    flat = value.reshape(-1)
+    b = jax.lax.bitcast_convert_type(flat, jnp.uint8)  # (n, itemsize)
+    return b.reshape(-1)
+
+
+def from_bytes(raw: jax.Array, shape: Tuple[int, ...], dtype) -> jax.Array:
+    """Inverse of :func:`to_bytes`."""
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.uint8:
+        return raw.reshape(shape)
+    itemsize = dtype.itemsize
+    n = raw.size // itemsize
+    return jax.lax.bitcast_convert_type(
+        raw.reshape(n, itemsize), dtype).reshape(shape)
+
+
+def nbytes_of(shape: Tuple[int, ...], dtype) -> int:
+    return int(np.prod(shape, dtype=np.int64)) * jnp.dtype(dtype).itemsize

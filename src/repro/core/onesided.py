@@ -1,0 +1,284 @@
+"""DART one-sided communication (paper §III, §IV.B.5).
+
+Two planes, mirroring how DART-MPI sits above MPI-3 RMA:
+
+**Host plane** (single-controller, the analogue of the paper's
+process-level API): ``dart_put/get`` dereference the global pointer
+(flags → allocation kind, segid → team, absolute→relative unit
+translation for collective pointers — §IV.B.4), then issue the
+underlying substrate op.  The substrate here is XLA: a donated
+``dynamic_update_slice`` on the sharded arena, which on a TPU mesh
+compiles to a one-sided ICI DMA into the owning unit's HBM — the direct
+analogue of ``MPI_Rput`` in a passive-target epoch.
+
+Epochs: MPI requires RMA calls to sit inside an access epoch; DART opens
+a shared epoch on every window at init/alloc time so users never see it
+(§IV.B.5).  In XLA the "epoch" is the program region — conflict freedom
+is guaranteed by dataflow, exactly the RMA *unified* memory model the
+paper adopts.
+
+Completion semantics (paper §III):
+
+* blocking put/get return only after local *and* remote completion →
+  we block on the updated arena / fetched value.
+* non-blocking put/get return a :class:`Handle`; ``dart_wait``/
+  ``dart_test`` map onto JAX async-dispatch completion
+  (``block_until_ready`` / ``Array.is_ready``) — JAX's dispatch queue
+  plays the role of MPI request handles.
+
+**Device plane** (inside ``shard_map``; the analogue of what DASH's
+compiled kernels do): ``shmem_put/get`` move bytes between unit rows
+with ``lax.ppermute`` (static peers → point-to-point ICI DMA) or an
+``all_gather`` + dynamic row-select (dynamic peers).  The Pallas RDMA
+kernels in ``repro.kernels.rdma`` are the hand-tiled fast path for the
+same semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .globmem import (HeapState, SymmetricHeap, from_bytes, nbytes_of,
+                      to_bytes)
+from .gptr import GlobalPtr
+
+# --------------------------------------------------------------------------
+# Request handles (paper: MPI_Rput/Rget handles + dart_wait/test[all])
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Handle:
+    """A DART communication handle over one or more in-flight arrays.
+
+    If an array has been *donated* to a later op (e.g. a subsequent put
+    to the same pool), it is treated as complete: XLA executes ops on a
+    device in program order, so a successor consuming the buffer is
+    ordered after this op, and all reads flow through the successor's
+    heap state anyway (dataflow = the RMA unified model, DESIGN.md §2).
+    """
+
+    arrays: Tuple[jax.Array, ...]
+
+    def wait(self) -> None:
+        jax.block_until_ready([a for a in self.arrays
+                               if not a.is_deleted()])
+
+    def test(self) -> bool:
+        return all(a.is_deleted() or a.is_ready() for a in self.arrays)
+
+
+def dart_wait(handle: Handle) -> None:
+    handle.wait()
+
+
+def dart_test(handle: Handle) -> bool:
+    return handle.test()
+
+
+def dart_waitall(handles: Sequence[Handle]) -> None:
+    jax.block_until_ready([a for h in handles for a in h.arrays
+                           if not a.is_deleted()])
+
+
+def dart_testall(handles: Sequence[Handle]) -> bool:
+    return all(h.test() for h in handles)
+
+
+# --------------------------------------------------------------------------
+# Jitted substrate kernels (the "pure MPI" ops the runtime wraps).
+# Shapes are static per (nbytes,) so re-dispatches hit the jit cache.
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, donate_argnums=0, static_argnums=())
+def _arena_write(arena: jax.Array, row: jax.Array, off: jax.Array,
+                 payload: jax.Array) -> jax.Array:
+    return jax.lax.dynamic_update_slice(arena, payload[None, :], (row, off))
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _arena_read(arena: jax.Array, row: jax.Array, off: jax.Array,
+                nbytes: int) -> jax.Array:
+    return jax.lax.dynamic_slice(arena, (row, off), (1, nbytes))[0]
+
+
+# --------------------------------------------------------------------------
+# Global-pointer dereference (paper §IV.B.4)
+# --------------------------------------------------------------------------
+
+
+def deref(heap: SymmetricHeap, teams_by_slot, gptr: GlobalPtr
+          ) -> Tuple[int, int, int]:
+    """gptr → (poolid, row, offset).
+
+    Collective pointers: segid is the owning team's teamlist slot; the
+    absolute unitid is translated to the team-relative id, which indexes
+    the team pool's rows.  Non-collective pointers address the WORLD
+    pool directly by absolute unitid — "trivially dereferenced without
+    the unit translations" (paper §IV.B.4).
+    """
+    if gptr.is_collective:
+        team = teams_by_slot[gptr.segid]
+        rel = team.myid(gptr.unitid)
+        if rel < 0:
+            raise KeyError(
+                f"unit {gptr.unitid} is not a member of team {team.teamid}")
+        poolid = team_poolid(team)
+        return poolid, rel, gptr.addr
+    return WORLD_POOLID, gptr.unitid, gptr.addr
+
+
+#: poolid of the pre-reserved non-collective WORLD pool (reserved first
+#: at dart_init, so it is always 0).
+WORLD_POOLID = 0
+
+
+def team_poolid(team) -> int:
+    """Teamlist slot → poolid.  Slot s keys pool s+1 (pool 0 = WORLD)."""
+    return team.slot + 1
+
+
+# --------------------------------------------------------------------------
+# Host-plane one-sided ops
+# --------------------------------------------------------------------------
+
+
+def dart_put(state: HeapState, heap: SymmetricHeap, teams_by_slot,
+             gptr: GlobalPtr, value) -> Tuple[HeapState, Handle]:
+    """Non-blocking one-sided put (``dart_put``, paper §III).
+
+    Returns the updated heap state and a handle.  The write is issued
+    immediately (async dispatch); completion = handle.wait()/test().
+    """
+    poolid, row, off = deref(heap, teams_by_slot, gptr)
+    payload = to_bytes(jnp.asarray(value))
+    meta = heap.pools[poolid]
+    if off + payload.size > meta.pool_bytes:
+        raise ValueError("put overruns the target allocation's pool")
+    arena = _arena_write(state[poolid], jnp.uint32(row), jnp.uint32(off),
+                         payload)
+    new_state = dict(state)
+    new_state[poolid] = arena
+    return new_state, Handle((arena,))
+
+
+def dart_put_blocking(state: HeapState, heap: SymmetricHeap, teams_by_slot,
+                      gptr: GlobalPtr, value) -> HeapState:
+    """Blocking put: returns after local+remote completion (paper §III)."""
+    new_state, h = dart_put(state, heap, teams_by_slot, gptr, value)
+    h.wait()
+    return new_state
+
+
+def dart_get(state: HeapState, heap: SymmetricHeap, teams_by_slot,
+             gptr: GlobalPtr, shape: Tuple[int, ...], dtype
+             ) -> Tuple[jax.Array, Handle]:
+    """Non-blocking one-sided get: returns (value-future, handle)."""
+    poolid, row, off = deref(heap, teams_by_slot, gptr)
+    n = nbytes_of(shape, dtype)
+    meta = heap.pools[poolid]
+    if off + n > meta.pool_bytes:
+        raise ValueError("get overruns the target allocation's pool")
+    raw = _arena_read(state[poolid], jnp.uint32(row), jnp.uint32(off), n)
+    value = from_bytes(raw, shape, dtype)
+    return value, Handle((value,))
+
+
+def dart_get_blocking(state: HeapState, heap: SymmetricHeap, teams_by_slot,
+                      gptr: GlobalPtr, shape: Tuple[int, ...], dtype
+                      ) -> jax.Array:
+    value, h = dart_get(state, heap, teams_by_slot, gptr, shape, dtype)
+    h.wait()
+    return value
+
+
+# --------------------------------------------------------------------------
+# Device-plane (shard_map) one-sided ops — SPMD "shmem" style.
+#
+# These are called from inside ``shard_map`` bodies where ``arena_row``
+# is this unit's (1, pool_bytes) row of a symmetric-heap pool and
+# ``axis`` is the unit axis name.  Peers are specified *statically*
+# (trace-time ints) for the ppermute fast path — on TPU this lowers to
+# a point-to-point ICI DMA, i.e. a true one-sided put.
+# --------------------------------------------------------------------------
+
+
+def shmem_put(arena_row: jax.Array, value: jax.Array, offset,
+              perm: Sequence[Tuple[int, int]], axis: str) -> jax.Array:
+    """Every unit sends ``value`` along ``perm``; receivers store at
+    ``offset`` (same offset everywhere — the aligned/symmetric property).
+
+    Units not appearing as a destination in ``perm`` receive zeros and
+    must not be considered written (mask accordingly at the call site or
+    use a complete permutation).
+    """
+    payload = to_bytes(value)
+    moved = jax.lax.ppermute(payload, axis, perm)
+    return jax.lax.dynamic_update_slice(
+        arena_row, moved[None, :], (jnp.int32(0), jnp.asarray(offset, jnp.int32)))
+
+
+def shmem_get(arena_row: jax.Array, offset, nbytes: int,
+              perm: Sequence[Tuple[int, int]], axis: str,
+              shape: Tuple[int, ...], dtype) -> jax.Array:
+    """One-sided get with static peers: fetch ``nbytes`` at ``offset``
+    from the unit that maps to me under ``perm`` (src, dst) pairs."""
+    raw = jax.lax.dynamic_slice(
+        arena_row, (jnp.int32(0), jnp.asarray(offset, jnp.int32)),
+        (1, nbytes))[0]
+    fetched = jax.lax.ppermute(raw, axis, perm)
+    return from_bytes(fetched, shape, dtype)
+
+
+def shmem_get_dynamic(arena_row: jax.Array, offset, nbytes: int,
+                      src_unit: jax.Array, axis: str,
+                      shape: Tuple[int, ...], dtype,
+                      axis_index_groups=None) -> jax.Array:
+    """Dynamic-peer get: peer id is a traced scalar.
+
+    Lowers to all_gather + one-hot row select.  Semantically exact;
+    costs a team-wide gather of the addressed window, so the static
+    ``shmem_get`` / Pallas RDMA path is preferred where the pattern is
+    known at trace time (documented perf note, DESIGN.md §2).
+    """
+    raw = jax.lax.dynamic_slice(
+        arena_row, (jnp.int32(0), jnp.asarray(offset, jnp.int32)),
+        (1, nbytes))[0]
+    everyone = jax.lax.all_gather(raw, axis,
+                                  axis_index_groups=axis_index_groups)
+    n = everyone.shape[0]
+    onehot = (jnp.arange(n, dtype=jnp.int32) ==
+              jnp.asarray(src_unit, jnp.int32)).astype(jnp.uint8)
+    picked = jnp.einsum("n,nb->b", onehot, everyone)
+    return from_bytes(picked.astype(jnp.uint8), shape, dtype)
+
+
+def shmem_halo_exchange(arena_row: jax.Array, left_val: jax.Array,
+                        right_val: jax.Array, left_off, right_off,
+                        axis: str, n_units: int,
+                        wrap: bool = False) -> jax.Array:
+    """Classic PGAS halo exchange built from two one-sided puts.
+
+    Each unit puts ``right_val`` into its right neighbour at
+    ``left_off`` (it arrives as the neighbour's *left* halo) and
+    ``left_val`` into its left neighbour at ``right_off``.
+    """
+    def ring(delta):
+        pairs = []
+        for i in range(n_units):
+            j = i + delta
+            if wrap:
+                pairs.append((i, j % n_units))
+            elif 0 <= j < n_units:
+                pairs.append((i, j))
+        return pairs
+
+    arena_row = shmem_put(arena_row, right_val, left_off, ring(+1), axis)
+    arena_row = shmem_put(arena_row, left_val, right_off, ring(-1), axis)
+    return arena_row

@@ -1,0 +1,244 @@
+"""DART runtime context: init/exit, teams, global memory (paper §III/IV).
+
+Single-controller layout: one :class:`DartContext` owns
+
+* the unit space (``n_units``; on a device mesh, the flattened devices),
+* the teamlist + ``teams`` registry (slot-indexed, §IV.B.2),
+* the symmetric heap layout + device heap state (§IV.B.3),
+* the lock service (§IV.B.6).
+
+``dart_init`` reserves the non-collective WORLD pool and creates
+DART_TEAM_ALL with its collective pool — which "opens the shared access
+epoch" in paper terms (a no-op under XLA's unified-model dataflow,
+DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from .atomics import ThreadedAtomics
+from .globmem import HeapState, PoolMeta, SymmetricHeap, align_up
+from .gptr import (FLAG_COLLECTIVE, NON_COLLECTIVE_SEG, GlobalPtr)
+from .group import DartGroup
+from .lock import LockService
+from .team import (DART_TEAM_ALL, FreeListTeamList, Team, TeamList,
+                   TeamPartition)
+from . import onesided as _os
+from . import collectives as _coll
+
+
+@dataclasses.dataclass
+class DartConfig:
+    non_collective_pool_bytes: int = 1 << 20   # per-unit WORLD partition
+    team_pool_bytes: int = 1 << 20             # per-member team pool
+    teamlist_capacity: int = 256
+    teamlist_impl: str = "paper"               # 'paper' | 'freelist' (§VI)
+    lock_tail_placement: str = "unit0"         # 'unit0' | 'round_robin' (§VI)
+
+
+class DartContext:
+    """The live runtime (the paper's process-global DART state)."""
+
+    def __init__(self, n_units: int, config: DartConfig,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 unit_axes: Optional[Tuple[str, ...]] = None):
+        self.n_units = n_units
+        self.config = config
+        self.mesh = mesh
+        self.heap = SymmetricHeap(n_units, mesh=mesh, unit_axes=unit_axes)
+        tl_cls = TeamList if config.teamlist_impl == "paper" else FreeListTeamList
+        self.teamlist = tl_cls(config.teamlist_capacity)
+        self.teams: Dict[int, Team] = {}          # teamid -> Team
+        self.teams_by_slot: Dict[int, Team] = {}  # slot   -> Team
+        self._team_pool: Dict[int, PoolMeta] = {}  # teamid -> pool meta
+        self._next_teamid = 0
+        self.atomics = ThreadedAtomics(n_units)
+        self.locks = LockService(self.atomics,
+                                 tail_placement=config.lock_tail_placement)
+        self.state: HeapState = {}
+        self._initialized = False
+
+    # ------------------------------------------------------------------
+    def _create_team(self, group: DartGroup, parent: Optional[int]) -> Team:
+        teamid = self._next_teamid
+        self._next_teamid += 1                  # teamIDs never reused (§IV.B.2)
+        slot = self.teamlist.alloc(teamid)
+        team = Team(teamid=teamid, group=group, slot=slot, parent=parent)
+        self.teams[teamid] = team
+        self.teams_by_slot[slot] = team
+        # reserve the team's collective pool + empty translation table
+        meta = self.heap.reserve_pool(
+            n_rows=group.size(), pool_bytes=self.config.team_pool_bytes,
+            collective=True)
+        self._team_pool[teamid] = meta
+        self.state[meta.poolid] = self.heap.init_pool_state(meta)
+        return team
+
+    # ------------------------------------------------------------------
+
+
+def dart_init(n_units: Optional[int] = None,
+              mesh: Optional[jax.sharding.Mesh] = None,
+              unit_axes: Optional[Tuple[str, ...]] = None,
+              config: Optional[DartConfig] = None) -> DartContext:
+    """Initialize the runtime (paper: ``dart_init``)."""
+    config = config or DartConfig()
+    if n_units is None:
+        n_units = (int(np_prod(mesh.devices.shape)) if mesh is not None
+                   else jax.device_count())
+    ctx = DartContext(n_units, config, mesh=mesh, unit_axes=unit_axes)
+    # pre-reserved WORLD window for non-collective allocations (§IV.B.3)
+    world_meta = ctx.heap.reserve_pool(
+        n_rows=n_units, pool_bytes=config.non_collective_pool_bytes,
+        collective=False)
+    assert world_meta.poolid == _os.WORLD_POOLID
+    ctx.state[world_meta.poolid] = ctx.heap.init_pool_state(world_meta)
+    # DART_TEAM_ALL
+    all_group = DartGroup(tuple(range(n_units)))
+    team_all = ctx._create_team(all_group, parent=None)
+    assert team_all.teamid == DART_TEAM_ALL
+    ctx._initialized = True
+    return ctx
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def dart_exit(ctx: DartContext) -> None:
+    """Tear down (paper: ``dart_exit``)."""
+    ctx.state.clear()
+    ctx.teams.clear()
+    ctx.teams_by_slot.clear()
+    ctx._initialized = False
+
+
+# -- team management (paper §III) -------------------------------------------
+
+def dart_team_create(ctx: DartContext, parent_teamid: int,
+                     group: DartGroup) -> int:
+    """Collective team creation from a group (paper: subset of parent)."""
+    parent = ctx.teams[parent_teamid]
+    for u in group.members:
+        if not parent.contains(u):
+            raise ValueError(f"unit {u} not in parent team {parent_teamid}")
+    return ctx._create_team(group, parent=parent_teamid).teamid
+
+
+def dart_team_destroy(ctx: DartContext, teamid: int) -> None:
+    if teamid == DART_TEAM_ALL:
+        raise ValueError("cannot destroy DART_TEAM_ALL")
+    team = ctx.teams.pop(teamid)
+    ctx.teams_by_slot.pop(team.slot)
+    ctx.teamlist.free(teamid)            # slot becomes reusable (§IV.B.2)
+    meta = ctx._team_pool.pop(teamid)
+    ctx.state.pop(meta.poolid, None)
+    ctx.heap.drop_pool(meta.poolid)
+
+
+def dart_team_get_group(ctx: DartContext, teamid: int) -> DartGroup:
+    return ctx.teams[teamid].group
+
+
+def dart_team_myid(ctx: DartContext, teamid: int, absolute_unit: int) -> int:
+    return ctx.teams[teamid].myid(absolute_unit)
+
+
+def dart_team_size(ctx: DartContext, teamid: int) -> int:
+    return ctx.teams[teamid].size()
+
+
+def dart_team_split(ctx: DartContext, teamid: int, n: int) -> TeamPartition:
+    """Split a team into n equal sub-teams (device-plane collective use)."""
+    from .group import dart_group_split
+    subgroups = dart_group_split(ctx.teams[teamid].group, n)
+    teams = tuple(ctx.teams[dart_team_create(ctx, teamid, g)]
+                  for g in subgroups)
+    return TeamPartition(teams)
+
+
+# -- global memory (paper §III, §IV.B.3) -------------------------------------
+
+def dart_memalloc(ctx: DartContext, nbytes: int, unit: int) -> GlobalPtr:
+    """Non-collective allocation on ``unit``'s WORLD partition."""
+    meta = ctx.heap.pools[_os.WORLD_POOLID]
+    off = ctx.heap.memalloc_local(meta, unit, nbytes)
+    return GlobalPtr(unitid=unit, segid=NON_COLLECTIVE_SEG, flags=0,
+                     addr=off)
+
+
+def dart_memfree(ctx: DartContext, gptr: GlobalPtr) -> None:
+    if gptr.is_collective:
+        raise ValueError("use dart_team_memfree for collective pointers")
+    meta = ctx.heap.pools[_os.WORLD_POOLID]
+    ctx.heap.memfree_local(meta, gptr.unitid, gptr.addr)
+
+
+def dart_team_memalloc_aligned(ctx: DartContext, teamid: int,
+                               nbytes_per_unit: int) -> GlobalPtr:
+    """Collective aligned/symmetric allocation (paper Fig. 5).
+
+    Returns a collective global pointer to the beginning of the
+    allocation, owned by the team's first member; any member can
+    ``setunit`` it to address any other member's portion at the same
+    offset.
+    """
+    team = ctx.teams[teamid]
+    meta = ctx._team_pool[teamid]
+    off = ctx.heap.memalloc_aligned(meta, nbytes_per_unit)
+    return GlobalPtr(unitid=team.unit_at(0), segid=team.slot,
+                     flags=FLAG_COLLECTIVE, addr=off)
+
+
+def dart_team_memfree(ctx: DartContext, teamid: int,
+                      gptr: GlobalPtr) -> None:
+    meta = ctx._team_pool[teamid]
+    ctx.heap.memfree_aligned(meta, gptr.addr)
+
+
+# -- one-sided + collective conveniences bound to a context ------------------
+
+def dart_put(ctx: DartContext, gptr: GlobalPtr, value):
+    ctx.state, h = _os.dart_put(ctx.state, ctx.heap, ctx.teams_by_slot,
+                                gptr, value)
+    return h
+
+
+def dart_put_blocking(ctx: DartContext, gptr: GlobalPtr, value) -> None:
+    ctx.state = _os.dart_put_blocking(ctx.state, ctx.heap,
+                                      ctx.teams_by_slot, gptr, value)
+
+
+def dart_get(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
+    return _os.dart_get(ctx.state, ctx.heap, ctx.teams_by_slot, gptr,
+                        shape, dtype)
+
+
+def dart_get_blocking(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
+    return _os.dart_get_blocking(ctx.state, ctx.heap, ctx.teams_by_slot,
+                                 gptr, shape, dtype)
+
+
+def dart_bcast(ctx: DartContext, root_gptr: GlobalPtr, nbytes: int):
+    ctx.state, h = _coll.dart_bcast(ctx.state, ctx.heap, ctx.teams_by_slot,
+                                    root_gptr, nbytes)
+    return h
+
+
+def dart_allreduce(ctx: DartContext, gptr: GlobalPtr, shape, dtype,
+                   op: str = "sum"):
+    ctx.state, red = _coll.dart_allreduce(ctx.state, ctx.heap,
+                                          ctx.teams_by_slot, gptr, shape,
+                                          dtype, op)
+    return red
+
+
+def dart_barrier(ctx: DartContext) -> None:
+    _coll.dart_barrier(ctx.state)

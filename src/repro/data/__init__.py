@@ -1,0 +1,2 @@
+from .pipeline import (DataConfig, SyntheticLM, MemmapTokens,
+                       make_dataset, ShardedLoader)

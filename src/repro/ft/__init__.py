@@ -1,0 +1,2 @@
+from .elastic import (ClusterState, ElasticPlan, HeartbeatMonitor,
+                      StragglerTracker, plan_remesh)

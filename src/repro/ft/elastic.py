@@ -1,0 +1,168 @@
+"""Fault tolerance: heartbeats, elastic remesh planning, stragglers.
+
+The control-plane loop for 1000+-node runs:
+
+  1. :class:`HeartbeatMonitor` — hosts report liveness; a host missing
+     ``miss_threshold`` consecutive beats is declared dead.
+  2. :func:`plan_remesh` — given the surviving hosts, compute the
+     largest production-shaped mesh (keeping the model axis intact,
+     shrinking data/pod), the checkpoint step to restore, and the new
+     DART team layout.  Restore re-shards via the layout-independent
+     checkpoint format (checkpoint/manager.py).
+  3. :class:`StragglerTracker` — per-host step-time EWMAs; hosts slower
+     than ``ratio`` × median are flagged; the mitigation hook either
+     reassigns their data shards (micro-batch rebalancing) or proposes
+     eviction, which feeds back into (2).
+
+All decisions are host-side metadata, so this module is exact on CPU —
+the same code drives the real cluster, with heartbeats carried by the
+DART non-collective heap (each host puts its beat counter into its
+WORLD-window slot; the coordinator gets them one-sidedly — classic PGAS
+monitoring, zero participation from workers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class ClusterState:
+    n_hosts: int
+    devices_per_host: int
+    alive: Dict[int, bool] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        for h in range(self.n_hosts):
+            self.alive.setdefault(h, True)
+
+    @property
+    def alive_hosts(self) -> List[int]:
+        return [h for h, ok in sorted(self.alive.items()) if ok]
+
+
+class HeartbeatMonitor:
+    """Declares hosts dead after ``miss_threshold`` missed beats."""
+
+    def __init__(self, cluster: ClusterState, interval_s: float = 10.0,
+                 miss_threshold: int = 3, clock=time.monotonic):
+        self.cluster = cluster
+        self.interval_s = interval_s
+        self.miss_threshold = miss_threshold
+        self._clock = clock
+        now = clock()
+        self._last_beat: Dict[int, float] = {
+            h: now for h in range(cluster.n_hosts)}
+
+    def beat(self, host: int):
+        self._last_beat[host] = self._clock()
+
+    def sweep(self) -> List[int]:
+        """Returns hosts newly declared dead."""
+        now = self._clock()
+        newly_dead = []
+        for h, ok in self.cluster.alive.items():
+            if not ok:
+                continue
+            missed = (now - self._last_beat[h]) / self.interval_s
+            if missed >= self.miss_threshold:
+                self.cluster.alive[h] = False
+                newly_dead.append(h)
+        return newly_dead
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+    participating_hosts: Tuple[int, ...]
+    dropped_devices: int
+    restore_step: Optional[int]
+    note: str
+
+
+def plan_remesh(cluster: ClusterState, *, model_parallel: int = 16,
+                pods: int = 1, restore_step: Optional[int] = None
+                ) -> ElasticPlan:
+    """Largest (pod, data, model) mesh on the surviving hosts.
+
+    The model axis is load-bearing (weights are sharded over it), so it
+    is held fixed; the data axis shrinks to the largest multiple the
+    surviving device count supports.  TPU reality note: losing a host
+    inside a pod slice usually costs the slice's torus links — this
+    planner models the scheduler-level re-slice decision.
+    """
+    alive = cluster.alive_hosts
+    total = len(alive) * cluster.devices_per_host
+    per_pod = total // max(pods, 1)
+    data = per_pod // model_parallel
+    if data < 1:
+        raise RuntimeError(
+            f"not enough devices to keep model_parallel={model_parallel}: "
+            f"{total} left")
+    used = pods * data * model_parallel
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    if pods > 1:
+        shape, axes = (pods, data, model_parallel), ("pod", "data", "model")
+    else:
+        shape, axes = (data, model_parallel), ("data", "model")
+    hosts_needed = used // cluster.devices_per_host
+    return ElasticPlan(
+        mesh_shape=shape, mesh_axes=axes,
+        participating_hosts=tuple(alive[:hosts_needed]),
+        dropped_devices=total - used,
+        restore_step=restore_step,
+        note=(f"kept model={model_parallel}, data {data}; "
+              f"{total - used} devices idle"),
+    )
+
+
+class StragglerTracker:
+    """Per-host EWMA step times; flags and mitigates stragglers."""
+
+    def __init__(self, n_hosts: int, alpha: float = 0.2,
+                 ratio: float = 1.5):
+        self.alpha = alpha
+        self.ratio = ratio
+        self.ewma: Dict[int, Optional[float]] = {h: None
+                                                 for h in range(n_hosts)}
+
+    def record(self, host: int, step_time_s: float):
+        prev = self.ewma[host]
+        self.ewma[host] = (step_time_s if prev is None
+                           else self.alpha * step_time_s
+                           + (1 - self.alpha) * prev)
+
+    def median(self) -> Optional[float]:
+        vals = sorted(v for v in self.ewma.values() if v is not None)
+        if not vals:
+            return None
+        return vals[len(vals) // 2]
+
+    def stragglers(self) -> List[int]:
+        med = self.median()
+        if med is None:
+            return []
+        return [h for h, v in self.ewma.items()
+                if v is not None and v > self.ratio * med]
+
+    def rebalance_plan(self, local_batches: Dict[int, int]
+                       ) -> Dict[int, int]:
+        """Shift one micro-batch from each straggler to the fastest
+        hosts (keeps the global batch constant)."""
+        plan = dict(local_batches)
+        slow = self.stragglers()
+        if not slow:
+            return plan
+        fast = sorted((h for h, v in self.ewma.items()
+                       if v is not None and h not in slow),
+                      key=lambda h: self.ewma[h])
+        for i, s in enumerate(slow):
+            if plan.get(s, 0) > 1 and fast:
+                dst = fast[i % len(fast)]
+                plan[s] -= 1
+                plan[dst] = plan.get(dst, 0) + 1
+        return plan

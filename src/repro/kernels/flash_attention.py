@@ -1,0 +1,122 @@
+"""Flash attention (Pallas TPU kernel).
+
+The roofline table (EXPERIMENTS.md §Roofline) shows every full-attention
+cell memory-bound, dominated by materialized (S, S) score tensors; the
+pure-JAX blocked attention (models/layers.blocked_causal_gqa) is the
+XLA-level fix, and this kernel is the TPU-native one: scores never
+leave VMEM.
+
+Tiling: grid = (num_q_blocks, num_kv_blocks); each step loads a
+``(block_q, hd)`` query tile and ``(block_k, hd)`` K/V tiles into VMEM
+via BlockSpec, runs one ``(block_q, block_k)`` MXU matmul, and
+maintains the online-softmax running max / denominator / accumulator in
+VMEM scratch across the kv-block dimension of the grid.  Causal tiles
+above the diagonal are skipped with ``pl.when`` (half the FLOPs).
+
+Block sizes should be multiples of 128 on the lane dim and chosen so
+2·(block·hd) + block² tiles fit VMEM (≤ ~2 MiB per buffer at defaults).
+Batch and heads are vmapped outside (they prepend grid dimensions).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  num_kv_blocks: int):
+    qi = pl.program_id(0)
+    kj = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (kj * block_k <= qi * block_q + block_q - 1) if causal else True
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * scale     # (bq, bk)
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = kj * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(cols <= rows, s, -1e30)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        o_ref[...] = (acc_scr[...]
+                      / l_scr[...][:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_single(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, block_q: int = 128,
+                           block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """One (seq, head_dim) attention problem.  q: (S,hd), k/v: (T,hd)."""
+    s, hd = q.shape
+    t = k.shape[0]
+    bq, bk = min(block_q, s), min(block_k, t)
+    assert s % bq == 0 and t % bk == 0, (s, t, bq, bk)
+    nq, nk = s // bq, t // bk
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / np.sqrt(hd), causal=causal,
+        block_q=bq, block_k=bk, num_kv_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(nq, nk),
+        in_specs=[
+            pl.BlockSpec((bq, hd), lambda qi, kj: (qi, 0)),
+            pl.BlockSpec((bk, hd), lambda qi, kj: (kj, 0)),
+            pl.BlockSpec((bk, hd), lambda qi, kj: (kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, hd), lambda qi, kj: (qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max
+            pltpu.VMEM((bq,), jnp.float32),       # running denominator
+            pltpu.VMEM((bq, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """GQA flash attention.  q: (B,S,Hq,hd); k/v: (B,T,Hkv,hd)."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qr = q.transpose(0, 2, 1, 3).reshape(b * hkv, g, s, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * hkv, k.shape[1], hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * hkv, v.shape[1], hd)
+    fn = functools.partial(flash_attention_single, causal=causal,
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)
+    out = jax.vmap(lambda qg, kk, vv: jax.vmap(
+        lambda q1: fn(q1, kk, vv))(qg))(qr, kr, vr)     # (b*hkv, g, s, hd)
+    return out.reshape(b, hkv * g, s, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas comm kernels.
+
+Each function mirrors the SPMD signature of its kernel counterpart and
+is meant to be called inside the same ``shard_map``; implementations
+use only ``jax.lax`` collectives / ``jnp`` ops (no Pallas), so they
+serve as the correctness reference on any backend.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rdma_put_ref(x: jax.Array, *, axis_name: str, num_devices: int,
+                 offset: int = 1) -> jax.Array:
+    """Reference for rdma_put: result = tile received from my left
+    ``offset``-neighbour == ppermute by +offset."""
+    perm = [(i, (i + offset) % num_devices) for i in range(num_devices)]
+    return jax.lax.ppermute(x, axis_name, perm)
+
+
+def rdma_get_ref(x: jax.Array, *, axis_name: str, num_devices: int,
+                 offset: int = 1) -> jax.Array:
+    return rdma_put_ref(x, axis_name=axis_name, num_devices=num_devices,
+                        offset=-offset)
+
+
+def ring_all_gather_ref(x: jax.Array, *, axis_name: str,
+                        num_devices: int) -> jax.Array:
+    return jax.lax.all_gather(x, axis_name, tiled=True)
+
+
+def ring_reduce_scatter_ref(x: jax.Array, *, axis_name: str,
+                            num_devices: int) -> jax.Array:
+    return jax.lax.psum_scatter(x, axis_name, tiled=True)

@@ -1,0 +1,68 @@
+"""Ring reduce-scatter built from one-sided puts (Pallas TPU kernel).
+
+Same DART-style construction as the all-gather: N-1 steps; at each step
+every unit pushes its running partial to the right neighbour, receives
+the partial for the next slot from the left, and folds in its own local
+block.  After N-1 steps unit *i* holds the fully reduced chunk *i*.
+
+Slot schedule (derived in ops docstring): with ``acc`` initialized to
+local block ``(my+N-1) % N``, after step *s* the received partial is
+for slot ``(my+N-2-s) % N``; the final slot is ``my``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ring_reduce_scatter_kernel(x_ref, o_ref, acc_ref, rbuf_ref,
+                                send_sem, recv_sem, *,
+                                axis_name: str, num_devices: int):
+    my_id = jax.lax.axis_index(axis_name)
+    chunk = o_ref.shape[0]
+    right = jax.lax.rem(my_id + 1, num_devices)
+
+    first = jax.lax.rem(my_id + num_devices - 1, num_devices)
+    acc_ref[...] = x_ref[pl.ds(first * chunk, chunk)]
+
+    for step in range(num_devices - 1):
+        rdma = pltpu.make_async_remote_copy(
+            src_ref=acc_ref, dst_ref=rbuf_ref,
+            send_sem=send_sem, recv_sem=recv_sem,
+            device_id=right, device_id_type=pltpu.DeviceIdType.LOGICAL)
+        rdma.start()
+        rdma.wait()
+        slot = jax.lax.rem(my_id + num_devices - 2 - step + num_devices,
+                           num_devices)
+        acc_ref[...] = rbuf_ref[...] + x_ref[pl.ds(slot * chunk, chunk)]
+
+    o_ref[...] = acc_ref[...]
+
+
+def ring_reduce_scatter(x: jax.Array, *, axis_name: str, num_devices: int,
+                        interpret: bool = True) -> jax.Array:
+    """Reduce-scatter along the ring.  SPMD: call inside shard_map with
+    per-unit input of shape (num_devices*chunk, n); returns this unit's
+    reduced (chunk, n) block."""
+    total_m, n = x.shape
+    if total_m % num_devices:
+        raise ValueError("leading dim must divide num_devices")
+    chunk = total_m // num_devices
+    kernel = functools.partial(_ring_reduce_scatter_kernel,
+                               axis_name=axis_name,
+                               num_devices=num_devices)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((chunk, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((chunk, n), x.dtype),   # acc
+            pltpu.VMEM((chunk, n), x.dtype),   # receive buffer
+            pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(x)

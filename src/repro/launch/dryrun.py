@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape) cell, on the single-pod 16x16
+mesh AND the 2-pod 2x16x16 mesh:
+
+    lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(**specs)
+    compiled = lowered.compile()
+    memory_analysis / cost_analysis / collective parse  ->  JSON
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --all --out experiments/dryrun
+    python -m repro.launch.dryrun --all --multi-pod
+
+The two env lines above MUST stay the first statements: jax locks the
+device count at first init, and only the dry-run wants 512 host
+devices.
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, ShapeCell, all_cells, cell_applicable, get_config
+from repro.launch import specs as S
+from repro.launch.hlo_analysis import parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig
+from repro.sharding.rules import sharding_context
+from repro.train.step import (abstract_train_state, make_train_step)
+
+OUT_DEFAULT = pathlib.Path("experiments/dryrun")
+
+#: baseline execution config for dry-run cells (the paper-faithful /
+#: production-default starting point of §Perf): full per-layer remat for
+#: training, none for serving; layer scans unrolled so cost_analysis
+#: counts every layer (XLA counts while bodies once — see hlo_analysis).
+BASELINE_TRAIN = dict(remat="full")
+BASELINE_SERVE = dict(remat="none")
+
+
+def _overrides_for(cell: ShapeCell, unroll_layers: bool,
+                   overrides: Optional[Dict[str, Any]] = None):
+    base = dict(BASELINE_TRAIN if cell.kind == "train" else BASELINE_SERVE)
+    if unroll_layers:
+        base["scan_unroll"] = 1_000_000     # clamped to n_layers in api
+    if overrides:
+        base.update(overrides)
+    return base
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool,
+               unroll_layers: bool = True,
+               config_overrides: Optional[Dict[str, Any]] = None):
+    """Returns (cfg, mesh, jitted-step, abstract-args tuple)."""
+    cell = SHAPES[shape]
+    cfg = get_config(arch)
+    cfg = dataclasses.replace(
+        cfg, **_overrides_for(cell, unroll_layers, config_overrides))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    if cell.kind == "train":
+        rules = S.train_rules(mesh)
+        state_sh = S.train_state_shardings(cfg, mesh, rules)
+        batch, batch_pspecs = S.batch_specs(cfg, cell, mesh)
+        batch_sh = S.spec_to_shardings(batch_pspecs, mesh)
+        opt_cfg = AdamWConfig()
+        inner = make_train_step(cfg, opt_cfg)
+
+        def step(state, b):
+            with sharding_context(mesh, rules):
+                return inner(state, b)
+
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        args = (abstract_train_state(cfg), batch)
+
+    elif cell.kind == "prefill":
+        rules = S.serve_rules(mesh, sp=bool(cfg.sp_serve),
+                              dp_all=bool(cfg.dp_serve))
+        param_sh = S.param_shardings(cfg, mesh, rules)
+        batch, batch_pspecs = S.batch_specs(cfg, cell, mesh)
+        batch_sh = S.spec_to_shardings(batch_pspecs, mesh)
+        max_seq = cell.seq_len + (cfg.n_vision_patches
+                                  if cfg.family == "vlm" else 0)
+        cache_sh = S.cache_shardings(cfg, mesh, cell.global_batch, max_seq)
+
+        def step(params, b):
+            with sharding_context(mesh, rules):
+                return api.forward_prefill(cfg, params, b, max_seq)
+
+        jitted = jax.jit(step, in_shardings=(param_sh, batch_sh),
+                         out_shardings=(None, cache_sh))
+        args = (api.abstract_params(cfg), batch)
+
+    else:  # decode
+        rules = S.serve_rules(mesh, sp=bool(cfg.sp_serve),
+                              dp_all=bool(cfg.dp_serve))
+        param_sh = S.param_shardings(cfg, mesh, rules)
+        b = cell.global_batch
+        max_seq = cell.seq_len
+        cache = api.abstract_cache(cfg, b, max_seq)
+        cache_sh = S.cache_shardings(cfg, mesh, b, max_seq)
+        tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        tok_sh = S.spec_to_shardings(
+            {"t": S.batch_specs(cfg, cell, mesh)[1]["tokens"]}, mesh)["t"]
+
+        def step(params, t, c):
+            with sharding_context(mesh, rules):
+                return api.forward_decode(cfg, params, t, c)
+
+        jitted = jax.jit(step, in_shardings=(param_sh, tok_sh, cache_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(2,))
+        args = (api.abstract_params(cfg), tokens, cache)
+
+    return cfg, mesh, jitted, args
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
+             unroll_layers: bool = True,
+             config_overrides: Optional[Dict[str, Any]] = None,
+             tag: str = "") -> Dict[str, Any]:
+    cell = SHAPES[shape]
+    cfg0 = get_config(arch)
+    ok, why = cell_applicable(cfg0, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "kind": cell.kind, "applicable": ok, "tag": tag,
+    }
+    if not ok:
+        rec["skip_reason"] = why
+        _write(out_dir, rec, tag)
+        print(f"[skip] {arch} x {shape} ({mesh_name}): {why}")
+        return rec
+
+    t0 = time.time()
+    try:
+        cfg, mesh, jitted, args = build_cell(
+            arch, shape, multi_pod, unroll_layers, config_overrides)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        txt = compiled.as_text()
+        coll = parse_collectives(txt, n_dev)
+
+        rec.update({
+            "ok": True,
+            "n_devices": n_dev,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "flops_per_device": float(cost.get("flops", 0.0)),
+            "bytes_accessed_per_device": float(
+                cost.get("bytes accessed", 0.0)),
+            "collective_link_bytes_per_device":
+                coll.per_device_link_bytes,
+            "collective_op_counts": coll.op_counts,
+            "collective_op_bytes": coll.op_bytes,
+            "memory_analysis": {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes",
+                          "output_size_in_bytes",
+                          "temp_size_in_bytes",
+                          "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            },
+            "param_count": api.param_count(cfg),
+            "active_param_count": api.active_param_count(cfg),
+            "hlo_bytes": len(txt),
+        })
+        print(f"[ok] {arch} x {shape} ({mesh_name}{'/' + tag if tag else ''}) "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s "
+              f"flops/dev {rec['flops_per_device']:.3e} "
+              f"coll B/dev {coll.per_device_link_bytes:.3e}")
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+        print(f"[FAIL] {arch} x {shape} ({mesh_name}): {e}")
+    _write(out_dir, rec, tag)
+    return rec
+
+
+def _write(out_dir: pathlib.Path, rec: Dict[str, Any], tag: str = ""):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{suffix}.json"
+    (out_dir / name).write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DEFAULT))
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep layer scans rolled (faster compile, "
+                         "while-body costs counted once)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides k=v (e.g. remat=dots)")
+    ap.add_argument("--tag", default="", help="suffix for output files")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose JSON is already ok")
+    ap.add_argument("--max-unroll-layers", type=int, default=80,
+                    help="archs deeper than this compile rolled; their "
+                         "exact costs come from repro.launch.ldiff")
+    ap.add_argument("--rolled-archs", default="zamba2-1.2b",
+                    help="comma-separated archs that always compile "
+                         "rolled (nested-scan hybrids; costs via ldiff)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            pass
+        overrides[k] = v
+
+    out = pathlib.Path(args.out)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        todo = [(a, s) for a, s, _, _ in all_cells()]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    n_fail = 0
+    for mp in meshes:
+        for a, s in todo:
+            mesh_name = "2x16x16" if mp else "16x16"
+            suffix = f"__{args.tag}" if args.tag else ""
+            existing = out / f"{a}__{s}__{mesh_name}{suffix}.json"
+            if args.skip_existing and existing.exists():
+                old = json.loads(existing.read_text())
+                if old.get("ok") or not old.get("applicable", True):
+                    print(f"[cached] {a} x {s} ({mesh_name})")
+                    continue
+            unroll = (not args.no_unroll and
+                      a not in args.rolled_archs.split(",") and
+                      get_config(a).n_layers <= args.max_unroll_layers)
+            rec = run_cell(a, s, mp, out, unroll_layers=unroll,
+                           config_overrides=overrides or None,
+                           tag=args.tag)
+            if rec.get("applicable") and not rec.get("ok"):
+                n_fail += 1
+    print(f"dry-run complete; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

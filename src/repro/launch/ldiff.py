@@ -1,0 +1,80 @@
+"""Layer-differencing cost extraction for cells too deep to unroll.
+
+For very deep models (llama3-405b: 126 layers), unrolling the layer
+scan for exact cost accounting is compile-prohibitive.  Instead we
+lower the SAME cell (same shapes, same sharding) at two shallow depths
+L1 < L2 with the scan still unrolled, extract
+
+    per_layer = (cost(L2) − cost(L1)) / (L2 − L1)
+    base      = cost(L1) − L1 · per_layer
+
+and extrapolate ``cost(L) = base + L · per_layer``.  Valid because the
+per-layer HLO is depth-independent (stacked params only change the
+leading dim) and the non-layer work (embed, head, optimizer epilogue)
+is exactly the L-independent ``base``.  The full-depth cell is still
+compiled (rolled) to prove shardability and get memory analysis; only
+the three roofline scalars come from the extrapolation.
+
+    python -m repro.launch.ldiff --arch llama3-405b --shape train_4k
+"""
+
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import pathlib
+
+from repro.launch.dryrun import OUT_DEFAULT, run_cell
+
+
+def extrapolate(rec1, rec2, rec_full, l1: int, l2: int, l_full: int):
+    out = dict(rec_full)
+    for key in ("flops_per_device", "bytes_accessed_per_device",
+                "collective_link_bytes_per_device"):
+        per_layer = (rec2[key] - rec1[key]) / (l2 - l1)
+        base = rec1[key] - l1 * per_layer
+        out[key] = base + l_full * per_layer
+    out["cost_method"] = f"ldiff({l1},{l2})->L={l_full}"
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--l1", type=int, default=6)
+    ap.add_argument("--l2", type=int, default=12)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DEFAULT))
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out)
+    from repro.configs import get_config
+    l_full = get_config(args.arch).n_layers
+
+    r1 = run_cell(args.arch, args.shape, args.multi_pod, out,
+                  unroll_layers=True,
+                  config_overrides={"n_layers": args.l1},
+                  tag=f"ldiff{args.l1}")
+    r2 = run_cell(args.arch, args.shape, args.multi_pod, out,
+                  unroll_layers=True,
+                  config_overrides={"n_layers": args.l2},
+                  tag=f"ldiff{args.l2}")
+    rf = run_cell(args.arch, args.shape, args.multi_pod, out,
+                  unroll_layers=False, tag="rolledfull")
+    assert r1.get("ok") and r2.get("ok") and rf.get("ok"), "ldiff failed"
+    rec = extrapolate(r1, r2, rf, args.l1, args.l2, l_full)
+    rec["tag"] = ""
+    mesh_name = rec["mesh"]
+    (out / f"{args.arch}__{args.shape}__{mesh_name}.json").write_text(
+        json.dumps(rec, indent=1))
+    print(f"[ldiff] wrote extrapolated cell for {args.arch} x "
+          f"{args.shape}: flops/dev {rec['flops_per_device']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

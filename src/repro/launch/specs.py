@@ -1,0 +1,200 @@
+"""Input/state/cache ShapeDtypeStructs + shardings per (arch × shape).
+
+``input_specs`` follows the assignment: ShapeDtypeStruct stand-ins for
+every model input (weak-type-correct, shardable, no device
+allocation).  Modality frontends are stubs — whisper gets precomputed
+frame embeddings, qwen2-vl precomputed patch embeddings + M-RoPE ids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ShapeCell
+from ..models import api
+from ..models.config import ModelConfig
+from ..optim.adamw import abstract_opt_state, opt_logical_axes
+from ..sharding.rules import (AxisRules, DEFAULT_TRAIN_RULES, fsdp_rules,
+                              logical_to_spec_sized, sized_spec_tree)
+from .mesh import dp_axes
+
+# ---------------------------------------------------------------------------
+# rule tables per mode
+# ---------------------------------------------------------------------------
+
+
+def train_rules(mesh: Mesh, fsdp: bool = True) -> AxisRules:
+    rules = dict(DEFAULT_TRAIN_RULES)
+    rules["batch"] = dp_axes(mesh)
+    if fsdp:
+        rules = fsdp_rules(rules)
+    return rules
+
+
+def serve_rules(mesh: Mesh, sp: bool = False,
+                dp_all: bool = False) -> AxisRules:
+    """Inference: TP-only params (no FSDP all-gathers per step).
+
+    sp=True: sequence-parallel serving — activations seq-sharded over
+    'model', weights replicated.  The right regime when head counts
+    don't divide the model axis (e.g. qwen2-vl's 12 heads on model=16
+    force replicated-activation all-gathers under TP; §Perf).
+    dp_all=True: decode batch sharded over data AND model (pure-DP
+    decode; weights replicated)."""
+    rules = dict(DEFAULT_TRAIN_RULES)
+    rules["batch"] = dp_axes(mesh)
+    rules["embed"] = None
+    if sp:
+        for k in ("vocab", "q_heads", "kv_heads", "mlp", "experts",
+                  "act_heads"):
+            rules[k] = None
+        rules["seq"] = "model"
+    if dp_all:
+        for k in ("vocab", "q_heads", "kv_heads", "mlp", "experts",
+                  "act_heads"):
+            rules[k] = None
+        rules["batch"] = tuple(dp_axes(mesh)) + ("model",)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def _dp_if_divisible(mesh: Mesh, b: int):
+    axes = dp_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return axes if axes and b % size == 0 else None
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Returns (abstract batch tree, PartitionSpec tree)."""
+    b, s = cell.global_batch, cell.seq_len
+    dp = _dp_if_divisible(mesh, b)
+    if cell.kind == "decode":
+        inputs = {"tokens": _tok(b, 1)}
+        specs = {"tokens": P(dp, None)}
+        return inputs, specs
+
+    # sequence-parallel serving: shard prompt seq dims over 'model'
+    sp = bool(getattr(cfg, "sp_serve", 0)) and cell.kind == "prefill"
+    m = mesh.shape.get("model", 1)
+    seq_ax = "model" if sp and s % m == 0 else None
+
+    inputs: Dict[str, Any] = {"tokens": _tok(b, s)}
+    specs: Dict[str, Any] = {"tokens": P(dp, seq_ax)}
+    if cell.kind == "train":
+        inputs["labels"] = _tok(b, s)
+        specs["labels"] = P(dp, None)
+    if cfg.family == "encdec":
+        inputs["enc_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_audio_frames, cfg.d_model), cfg.cdtype)
+        specs["enc_frames"] = P(dp, None, None)
+    if cfg.family == "vlm":
+        pp = cfg.n_vision_patches
+        inputs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, pp, cfg.d_model), cfg.cdtype)
+        specs["vision_embeds"] = P(
+            dp, "model" if sp and pp % m == 0 else None, None)
+        inputs["position_ids"] = jax.ShapeDtypeStruct(
+            (3, b, pp + s), jnp.int32)
+        specs["position_ids"] = P(
+            None, dp, "model" if sp and (pp + s) % m == 0 else None)
+    return inputs, specs
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+# ---------------------------------------------------------------------------
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, b: int) -> Dict[str, Any]:
+    """PartitionSpec tree matching ``api.init_cache`` structure.
+
+    Sharding strategy: batch over the DP axes when divisible; the
+    head-like dim over 'model' when divisible, otherwise the sequence
+    dim of KV buffers over 'model' (whisper's 12 KV heads / 500k
+    single-batch cells)."""
+    dp = _dp_if_divisible(mesh, b)
+    m = mesh.shape.get("model", 1)
+
+    def kv_spec(kv_heads: int, seq: int):
+        if kv_heads % m == 0:
+            return P(None, dp, None, "model", None)
+        if seq % m == 0:
+            return P(None, dp, "model", None, None)
+        return P(None, dp, None, None, None)
+
+    c: Dict[str, Any] = {"pos": P()}
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        c["k"] = kv_spec(cfg.n_kv_heads, 1)      # seq filled by caller
+        c["v"] = c["k"]
+        if cfg.family == "encdec":
+            c["ck"] = kv_spec(cfg.n_kv_heads, cfg.n_audio_frames)
+            c["cv"] = c["ck"]
+    elif cfg.family == "hybrid":
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        c["h"] = P(None, dp, "model" if cfg.n_heads % m == 0 else None,
+                   None, None)
+        c["conv"] = P(None, dp, None,
+                      "model" if conv_dim % m == 0 else None)
+        c["shared_k"] = kv_spec(cfg.n_kv_heads, 1)
+        c["shared_v"] = c["shared_k"]
+    elif cfg.family == "ssm":
+        hsh = "model" if cfg.rwkv_n_heads % m == 0 else None
+        c["s"] = P(None, dp, hsh, None, None)
+        dsh = "model" if cfg.d_model % m == 0 else None
+        c["last_att"] = P(None, dp, dsh)
+        c["last_ffn"] = P(None, dp, dsh)
+    return c
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, b: int, max_seq: int):
+    pspecs = cache_pspecs(cfg, mesh, b)
+    # fix up kv seq-sharding choice now that max_seq is known
+    m = mesh.shape.get("model", 1)
+    if cfg.family in ("dense", "moe", "vlm", "encdec") \
+            and cfg.n_kv_heads % m != 0 and max_seq % m == 0:
+        dp = _dp_if_divisible(mesh, b)
+        pspecs["k"] = P(None, dp, "model", None, None)
+        pspecs["v"] = pspecs["k"]
+    if cfg.family == "hybrid" and cfg.n_kv_heads % m != 0 \
+            and max_seq % m == 0:
+        dp = _dp_if_divisible(mesh, b)
+        pspecs["shared_k"] = P(None, dp, "model", None, None)
+        pspecs["shared_v"] = pspecs["shared_k"]
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# state shardings
+# ---------------------------------------------------------------------------
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, rules: AxisRules):
+    return sized_spec_tree(api.logical_axes(cfg), api.abstract_params(cfg),
+                           rules, mesh)
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh, rules: AxisRules):
+    from ..train.step import abstract_train_state, train_state_logical
+    return sized_spec_tree(train_state_logical(cfg), abstract_train_state(cfg),
+                           rules, mesh)
+
+
+def spec_to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,632 @@
+"""Model API: schema → (init | abstract | logical) params + forward fns.
+
+Single entry points used by train/serve/launch:
+
+    schema(cfg)              -> pytree of PSpec
+    init_params(cfg, rng)    -> pytree of arrays
+    abstract_params(cfg)     -> pytree of ShapeDtypeStruct (dry-run)
+    logical_axes(cfg)        -> pytree of logical-name tuples
+    forward_train(cfg, params, batch)          -> (logits, aux)
+    forward_prefill(cfg, params, batch, cache) -> (logits, cache)
+    forward_decode(cfg, params, tokens, cache) -> (logits, cache)
+    init_cache(cfg, batch_size, max_seq)       -> cache pytree (zeros)
+    abstract_cache(cfg, batch_size, max_seq)   -> ShapeDtypeStruct tree
+
+Layers are stacked and iterated with ``lax.scan`` (compile time O(1) in
+depth — required for the 512-device dry-run of 126-layer models).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from . import layers as L
+from .layers import PSpec, is_pspec
+from .mamba2 import apply_mamba2, mamba2_schema
+from .moe import apply_moe, moe_schema
+from .rwkv6 import (apply_rwkv_att, apply_rwkv_ffn, rwkv_att_schema,
+                    rwkv_ffn_schema)
+
+# ===========================================================================
+# schemas
+# ===========================================================================
+
+
+def _attn_mlp_block_schema(cfg: ModelConfig, mlp: bool = True,
+                           cross: bool = False):
+    s = {"ln1": L.norm_schema(cfg), "attn": L.attn_schema(cfg)}
+    if cross:
+        s["ln_cross"] = L.norm_schema(cfg)
+        s["cross"] = L.attn_schema(cfg)
+    if mlp:
+        if not cfg.parallel_block:
+            s["ln2"] = L.norm_schema(cfg)
+        s["mlp"] = L.mlp_schema(cfg)
+    return s
+
+
+def _moe_block_schema(cfg: ModelConfig):
+    return {"ln1": L.norm_schema(cfg), "attn": L.attn_schema(cfg),
+            "ln2": L.norm_schema(cfg), "moe": moe_schema(cfg)}
+
+
+def _mamba_block_schema(cfg: ModelConfig):
+    return {"ln1": L.norm_schema(cfg), "mamba": mamba2_schema(cfg)}
+
+
+def _rwkv_block_schema(cfg: ModelConfig):
+    return {"ln1": L.norm_schema(cfg), "att": rwkv_att_schema(cfg),
+            "ln2": L.norm_schema(cfg), "ffn": rwkv_ffn_schema(cfg)}
+
+
+def _stack(schema_tree, n: int):
+    """Prepend a stacked 'layers' axis to every PSpec in the tree."""
+    return jax.tree.map(
+        lambda ps: PSpec((n,) + ps.shape, ("layers",) + ps.logical,
+                         init=ps.init, scale=ps.scale),
+        schema_tree, is_leaf=is_pspec)
+
+
+def schema(cfg: ModelConfig):
+    s: Dict[str, Any] = {"embed": L.embed_schema(cfg),
+                         "final_norm": L.norm_schema(cfg)}
+    if cfg.family in ("dense", "vlm"):
+        s["blocks"] = _stack(_attn_mlp_block_schema(cfg), cfg.n_layers)
+    elif cfg.family == "moe":
+        s["blocks"] = _stack(_moe_block_schema(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        s["blocks"] = _stack(_mamba_block_schema(cfg), cfg.n_layers)
+        s["shared"] = _attn_mlp_block_schema(cfg)      # one shared block
+    elif cfg.family == "ssm":
+        s["blocks"] = _stack(_rwkv_block_schema(cfg), cfg.n_layers)
+    elif cfg.family == "encdec":
+        s["enc_blocks"] = _stack(_attn_mlp_block_schema(cfg),
+                                 cfg.n_enc_layers)
+        s["enc_final_norm"] = L.norm_schema(cfg)
+        s["blocks"] = _stack(
+            _attn_mlp_block_schema(cfg, cross=True), cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    return s
+
+
+# ===========================================================================
+# schema -> params / abstract / logical
+# ===========================================================================
+
+
+def _init_leaf(ps: PSpec, key, dtype):
+    if ps.init == "zeros":
+        return jnp.zeros(ps.shape, dtype)
+    if ps.init == "ones":
+        return jnp.ones(ps.shape, dtype)
+    scale = ps.scale
+    if ps.init == "out_proj":        # scaled-down residual projections
+        scale = ps.scale / np.sqrt(2.0)
+    return (jax.random.normal(key, ps.shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array):
+    sch = schema(cfg)
+    leaves, treedef = jax.tree.flatten(sch, is_leaf=is_pspec)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(ps, k, cfg.pdtype) for ps, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.tree.map(
+        lambda ps: jax.ShapeDtypeStruct(ps.shape, cfg.pdtype),
+        schema(cfg), is_leaf=is_pspec)
+
+
+def logical_axes(cfg: ModelConfig):
+    return jax.tree.map(lambda ps: ps.logical, schema(cfg),
+                        is_leaf=is_pspec)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(ps.shape)) for ps in
+               jax.tree.leaves(schema(cfg), is_leaf=is_pspec))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """MoE: params touched per token (shared + top_k experts)."""
+    if cfg.family != "moe":
+        return param_count(cfg)
+    total = param_count(cfg)
+    expert_p = 3 * cfg.d_model * cfg.expert_d_ff
+    inactive = cfg.n_layers * (cfg.n_experts - cfg.top_k) * expert_p
+    return total - inactive
+
+
+# ===========================================================================
+# blocks: single-layer applications (params = one layer's slice)
+# ===========================================================================
+
+
+def _apply_attn_mlp_block(p, cfg: ModelConfig, x, *, mode, positions,
+                          cache=None, cache_pos=None, kv_x=None):
+    """dense / vlm / hybrid-shared / whisper-enc/dec block."""
+    h = L.apply_norm(p["ln1"], cfg, x)
+    attn_mode = mode
+    a, new_cache = L.attention(p["attn"], cfg, h, positions=positions,
+                               mode=attn_mode, cache=cache,
+                               cache_pos=cache_pos)
+    if cfg.parallel_block and "mlp" in p:
+        m = L.apply_mlp(p["mlp"], cfg, h)
+        return x + a + m, new_cache
+    x = x + a
+    if "cross" in p:
+        hc = L.apply_norm(p["ln_cross"], cfg, x)
+        c, cross_cache = L.attention(
+            p["cross"], cfg, hc, mode="cross", cache=cache, kv_x=kv_x)
+        x = x + c
+    if "mlp" in p:
+        h2 = L.apply_norm(p["ln2"], cfg, x)
+        x = x + L.apply_mlp(p["mlp"], cfg, h2)
+    return x, new_cache
+
+
+def _apply_moe_block(p, cfg: ModelConfig, x, *, mode, positions,
+                     cache=None, cache_pos=None):
+    h = L.apply_norm(p["ln1"], cfg, x)
+    a, new_cache = L.attention(p["attn"], cfg, h, positions=positions,
+                               mode=mode, cache=cache, cache_pos=cache_pos)
+    x = x + a
+    h2 = L.apply_norm(p["ln2"], cfg, x)
+    m, aux = apply_moe(p["moe"], cfg, h2)
+    return x + m, new_cache, aux
+
+
+def _apply_mamba_block(p, cfg: ModelConfig, x, *, mode, cache=None):
+    h = L.apply_norm(p["ln1"], cfg, x)
+    m, new_cache = apply_mamba2(p["mamba"], cfg, h, mode=mode, cache=cache)
+    return x + m, new_cache
+
+
+def _apply_rwkv_block(p, cfg: ModelConfig, x, *, mode, cache=None):
+    h = L.apply_norm(p["ln1"], cfg, x)
+    a, att_cache = apply_rwkv_att(p["att"], cfg, h, mode=mode,
+                                  cache=None if cache is None else
+                                  {"s": cache["s"], "last": cache["last_att"]})
+    x = x + a
+    h2 = L.apply_norm(p["ln2"], cfg, x)
+    f, ffn_cache = apply_rwkv_ffn(p["ffn"], cfg, h2, mode=mode,
+                                  cache=None if cache is None else
+                                  {"last": cache["last_ffn"]})
+    x = x + f
+    new_cache = None
+    if att_cache is not None:
+        new_cache = {"s": att_cache["s"], "last_att": att_cache["last"],
+                     "last_ffn": ffn_cache["last"]}
+    return x, new_cache
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ===========================================================================
+# forward passes
+# ===========================================================================
+
+
+def _positions(cfg, b, s, start=0):
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :] + start    # (1,S)
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.family == "vlm":
+        pos = jnp.broadcast_to(pos[None], (3, b, s))
+    return pos
+
+
+def _scan_blocks(cfg, blocks, x, body):
+    """lax.scan over stacked layer params; body(x, p_layer) -> x."""
+    if not cfg.scan_layers:
+        n = jax.tree.leaves(blocks)[0].shape[0]
+        aux_total = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            p_i = jax.tree.map(lambda a: a[i], blocks)
+            x, aux = body(x, p_i)
+            aux_total = aux_total + aux
+        return x, aux_total
+
+    def scan_body(carry, p_i):
+        x = carry
+        x, aux = body(x, p_i)
+        return x, aux
+
+    n = jax.tree.leaves(blocks)[0].shape[0]
+    x, auxs = jax.lax.scan(scan_body, x, blocks,
+                           unroll=min(max(cfg.scan_unroll, 1), n))
+    return x, jnp.sum(auxs)
+
+
+def forward_train(cfg: ModelConfig, params, batch
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits, aux_loss)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        vis = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+        positions = batch["position_ids"]           # (3,B,P+S) from specs
+    else:
+        positions = _positions(cfg, b, x.shape[1])
+
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(cfg, params, batch["enc_frames"])
+        x = x + jnp.asarray(
+            L.sinusoidal_positions(s, cfg.d_model), x.dtype)[None]
+
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "vlm"):
+        def body(x, p):
+            fn = _maybe_remat(
+                lambda xx: _apply_attn_mlp_block(
+                    p, cfg, xx, mode="causal", positions=positions)[0], cfg)
+            return fn(x), jnp.zeros((), jnp.float32)
+        x, _ = _scan_blocks(cfg, params["blocks"], x, body)
+
+    elif cfg.family == "moe":
+        def body(x, p):
+            fn = _maybe_remat(
+                lambda xx: _apply_moe_block(
+                    p, cfg, xx, mode="causal", positions=positions)[::2],
+                cfg)
+            out = fn(x)
+            return out[0], out[1]
+        x, aux = _scan_blocks(cfg, params["blocks"], x, body)
+
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(cfg, params, x, positions, mode="train")[0]
+
+    elif cfg.family == "ssm":
+        def body(x, p):
+            fn = _maybe_remat(
+                lambda xx: _apply_rwkv_block(p, cfg, xx, mode="train")[0],
+                cfg)
+            return fn(x), jnp.zeros((), jnp.float32)
+        x, _ = _scan_blocks(cfg, params["blocks"], x, body)
+
+    elif cfg.family == "encdec":
+        def body(x, p):
+            fn = _maybe_remat(
+                lambda xx: _apply_attn_mlp_block(
+                    p, cfg, xx, mode="causal", positions=positions,
+                    kv_x=enc_out)[0], cfg)
+            return fn(x), jnp.zeros((), jnp.float32)
+        x, _ = _scan_blocks(cfg, params["blocks"], x, body)
+
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        x = x[:, -s:, :]                            # logits on text tokens
+    logits = L.lm_logits(params["embed"], cfg, x)
+    return logits, aux * cfg.router_aux_coef
+
+
+def _encode(cfg: ModelConfig, params, frames):
+    """Whisper encoder over stubbed conv-frontend frames (B,F,D)."""
+    f = frames.shape[1]
+    x = frames.astype(cfg.cdtype) + jnp.asarray(
+        L.sinusoidal_positions(f, cfg.d_model), cfg.cdtype)[None]
+
+    def body(x, p):
+        fn = _maybe_remat(
+            lambda xx: _apply_attn_mlp_block(
+                p, cfg, xx, mode="bidir", positions=None)[0], cfg)
+        return fn(x), jnp.zeros((), jnp.float32)
+
+    x, _ = _scan_blocks(cfg, params["enc_blocks"], x, body)
+    return L.apply_norm(params["enc_final_norm"], cfg, x)
+
+
+def _hybrid_forward(cfg: ModelConfig, params, x, positions, *, mode,
+                    cache=None, cache_pos=None):
+    """zamba2: scan groups of `every` mamba layers + shared attn block,
+    then a tail of leftover mamba layers."""
+    every = cfg.shared_attn_every
+    n_full = cfg.n_layers // every
+    tail = cfg.n_layers % every
+    blocks = params["blocks"]
+
+    def take(tree, lo, hi, reshape=None):
+        out = jax.tree.map(lambda a: a[lo:hi], tree)
+        if reshape:
+            out = jax.tree.map(
+                lambda a: a.reshape(reshape + a.shape[1:]), out)
+        return out
+
+    grouped = take(blocks, 0, n_full * every, reshape=(n_full, every))
+    tail_blocks = take(blocks, n_full * every, cfg.n_layers)
+
+    mode_inner = mode if mode != "train" else "train"
+    new_mamba_caches = []
+    new_shared = None
+
+    if cache is None:
+        def group_body(x, p_group):
+            def layer_body(x, p):
+                fn = _maybe_remat(
+                    lambda xx: _apply_mamba_block(p, cfg, xx,
+                                                  mode=mode_inner)[0], cfg)
+                return fn(x), jnp.zeros((), jnp.float32)
+            x, _ = _scan_blocks(cfg, p_group, x, layer_body)
+            x, _ = _apply_attn_mlp_block(params["shared"], cfg, x,
+                                         mode="causal", positions=positions)
+            return x, jnp.zeros((), jnp.float32)
+
+        x, _ = _scan_blocks(cfg, grouped, x, group_body)
+        if tail:
+            def layer_body(x, p):
+                fn = _maybe_remat(
+                    lambda xx: _apply_mamba_block(p, cfg, xx,
+                                                  mode=mode_inner)[0], cfg)
+                return fn(x), jnp.zeros((), jnp.float32)
+            x, _ = _scan_blocks(cfg, tail_blocks, x, layer_body)
+        return x, None
+
+    # stateful path (prefill/decode): scan with cache as xs/ys
+    def group_body_cache(x, inp):
+        p_group, mcache, app_idx = inp
+        def layer_body(x, inp2):
+            p, c = inp2
+            x, nc = _apply_mamba_block(p, cfg, x, mode=mode, cache=c)
+            return x, nc
+        x, new_mc = _scan_with_cache(p_group, mcache, x, layer_body,
+                                     unroll=cfg.scan_unroll)
+        sc = {"k": cache["shared_k"][app_idx],
+              "v": cache["shared_v"][app_idx]}
+        x, new_sc = _apply_attn_mlp_block(
+            params["shared"], cfg, x,
+            mode="decode" if mode == "decode" else "causal",
+            positions=positions, cache=sc, cache_pos=cache_pos)
+        return x, (new_mc, new_sc)
+
+    mcaches = {"h": cache["h"][:n_full * every].reshape(
+                   (n_full, every) + cache["h"].shape[1:]),
+               "conv": cache["conv"][:n_full * every].reshape(
+                   (n_full, every) + cache["conv"].shape[1:])}
+
+    def outer_body(x, inp):
+        return group_body_cache(x, inp)
+
+    x, (new_mc, new_sc) = _scan_with_cache(
+        (grouped, mcaches, jnp.arange(n_full)), None, x, outer_body,
+        packed=True, unroll=cfg.scan_unroll)
+
+    new_h = new_mc["h"].reshape((n_full * every,) + cache["h"].shape[1:])
+    new_conv = new_mc["conv"].reshape(
+        (n_full * every,) + cache["conv"].shape[1:])
+
+    if tail:
+        tcache = {"h": cache["h"][n_full * every:],
+                  "conv": cache["conv"][n_full * every:]}
+        def layer_body(x, inp2):
+            p, c = inp2
+            x, nc = _apply_mamba_block(p, cfg, x, mode=mode, cache=c)
+            return x, nc
+        x, new_tc = _scan_with_cache(tail_blocks, tcache, x, layer_body,
+                                         unroll=cfg.scan_unroll)
+        new_h = jnp.concatenate([new_h, new_tc["h"]], axis=0)
+        new_conv = jnp.concatenate([new_conv, new_tc["conv"]], axis=0)
+
+    new_cache = {"h": new_h, "conv": new_conv,
+                 "shared_k": new_sc["k"], "shared_v": new_sc["v"]}
+    return x, new_cache
+
+
+def _scan_with_cache(blocks, cache, x, body, packed=False, unroll=1):
+    """scan over (params, cache) pairs, collecting new caches as ys."""
+    xs = blocks if packed else (blocks, cache)
+
+    def scan_body(x, inp):
+        x, nc = body(x, inp)
+        return x, nc
+
+    n = jax.tree.leaves(xs)[0].shape[0]
+    x, new_caches = jax.lax.scan(scan_body, x, xs,
+                                 unroll=min(max(unroll, 1), n))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------- decode ---
+
+
+def init_cache(cfg: ModelConfig, b: int, max_seq: int, abstract=False):
+    """Preallocated decode cache (zeros), or ShapeDtypeStructs."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    cdt = cfg.cdtype
+    mk = (lambda shape, dt=cdt: jax.ShapeDtypeStruct(shape, dt)) if abstract \
+        else (lambda shape, dt=cdt: jnp.zeros(shape, dt))
+    L_ = cfg.n_layers
+    c: Dict[str, Any] = {"pos": mk((), jnp.int32)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        c["k"] = mk((L_, b, max_seq, kv, hd))
+        c["v"] = mk((L_, b, max_seq, kv, hd))
+    elif cfg.family == "hybrid":
+        H, shd, ds = cfg.n_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        n_full = cfg.n_layers // cfg.shared_attn_every
+        c["h"] = mk((L_, b, H, shd, ds), jnp.float32)
+        c["conv"] = mk((L_, b, cfg.ssm_conv - 1, conv_dim))
+        c["shared_k"] = mk((n_full, b, max_seq, kv, hd))
+        c["shared_v"] = mk((n_full, b, max_seq, kv, hd))
+    elif cfg.family == "ssm":
+        H, hd_r = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+        c["s"] = mk((L_, b, H, hd_r, hd_r), jnp.float32)
+        c["last_att"] = mk((L_, b, cfg.d_model))
+        c["last_ffn"] = mk((L_, b, cfg.d_model))
+    elif cfg.family == "encdec":
+        c["k"] = mk((L_, b, max_seq, kv, hd))
+        c["v"] = mk((L_, b, max_seq, kv, hd))
+        c["ck"] = mk((L_, b, cfg.n_audio_frames, kv, hd))
+        c["cv"] = mk((L_, b, cfg.n_audio_frames, kv, hd))
+    return c
+
+
+def abstract_cache(cfg, b, max_seq):
+    return init_cache(cfg, b, max_seq, abstract=True)
+
+
+def forward_decode(cfg: ModelConfig, params, tokens, cache,
+                   batch: Optional[dict] = None):
+    """One decode step.  tokens: (B,1) -> (logits (B,1,V), new cache)."""
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    if cfg.family == "encdec":
+        x = x + L.sinusoidal_position_at(pos, cfg.d_model).astype(
+            x.dtype)[None]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, inp):
+            p, c = inp
+            if cfg.family == "moe":
+                x, nc, _ = _apply_moe_block(p, cfg, x, mode="decode",
+                                            positions=None, cache=c,
+                                            cache_pos=pos)
+            else:
+                x, nc = _apply_attn_mlp_block(p, cfg, x, mode="decode",
+                                              positions=None, cache=c,
+                                              cache_pos=pos)
+            return x, nc
+        x, new_kv = _scan_with_cache(
+            params["blocks"], {"k": cache["k"], "v": cache["v"]}, x, body,
+            unroll=cfg.scan_unroll)
+        new_cache = dict(cache, k=new_kv["k"], v=new_kv["v"],
+                         pos=pos + 1)
+
+    elif cfg.family == "hybrid":
+        x, nc = _hybrid_forward(cfg, params, x, None, mode="decode",
+                                cache=cache, cache_pos=pos)
+        new_cache = dict(cache, **nc, pos=pos + 1)
+
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            p, c = inp
+            return _apply_rwkv_block(p, cfg, x, mode="decode", cache=c)
+        x, nc = _scan_with_cache(
+            params["blocks"],
+            {"s": cache["s"], "last_att": cache["last_att"],
+             "last_ffn": cache["last_ffn"]}, x, body,
+            unroll=cfg.scan_unroll)
+        new_cache = dict(cache, **nc, pos=pos + 1)
+
+    elif cfg.family == "encdec":
+        def body(x, inp):
+            p, c = inp
+            x, nc = _apply_attn_mlp_block(p, cfg, x, mode="decode",
+                                          positions=None, cache=c,
+                                          cache_pos=pos)
+            return x, dict(nc, ck=c["ck"], cv=c["cv"])
+        x, nc = _scan_with_cache(
+            params["blocks"],
+            {"k": cache["k"], "v": cache["v"], "ck": cache["ck"],
+             "cv": cache["cv"]}, x, body,
+            unroll=cfg.scan_unroll)
+        new_cache = dict(cache, k=nc["k"], v=nc["v"], pos=pos + 1)
+
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    logits = L.lm_logits(params["embed"], cfg, x)
+    return logits, new_cache
+
+
+def forward_prefill(cfg: ModelConfig, params, batch, max_seq: int):
+    """Prefill: run the full prompt, build the decode cache.
+
+    Returns (last-position logits (B,1,V), cache at pos=S).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_seq)
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        vis = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+        positions = batch["position_ids"]
+        s = x.shape[1]                       # cache covers vision + text
+    else:
+        positions = _positions(cfg, b, s)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(cfg, params, batch["enc_frames"])
+        x = x + jnp.asarray(
+            L.sinusoidal_positions(s, cfg.d_model), x.dtype)[None]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, inp):
+            p, c = inp
+            if cfg.family == "moe":
+                x, nc, _ = _apply_moe_block(p, cfg, x, mode="causal",
+                                            positions=positions, cache=c)
+            else:
+                x, nc = _apply_attn_mlp_block(p, cfg, x, mode="causal",
+                                              positions=positions, cache=c)
+            return x, nc
+        x, new_kv = _scan_with_cache(
+            params["blocks"], {"k": cache["k"], "v": cache["v"]}, x, body,
+            unroll=cfg.scan_unroll)
+        cache = dict(cache, k=new_kv["k"], v=new_kv["v"])
+
+    elif cfg.family == "hybrid":
+        x, nc = _hybrid_forward(cfg, params, x, positions, mode="prefill",
+                                cache=cache, cache_pos=jnp.int32(0))
+        cache = dict(cache, **nc)
+
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            p, c = inp
+            return _apply_rwkv_block(p, cfg, x, mode="prefill", cache=c)
+        x, nc = _scan_with_cache(
+            params["blocks"],
+            {"s": cache["s"], "last_att": cache["last_att"],
+             "last_ffn": cache["last_ffn"]}, x, body,
+            unroll=cfg.scan_unroll)
+        cache = dict(cache, **nc)
+
+    elif cfg.family == "encdec":
+        hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+        def body(x, inp):
+            p, c = inp
+            # precompute this layer's cross k/v from enc_out
+            ck = L._split_heads(L._proj(enc_out, p["cross"]["wk"],
+                                        p["cross"].get("bk")), hkv, hd)
+            cv = L._split_heads(L._proj(enc_out, p["cross"]["wv"],
+                                        p["cross"].get("bv")), hkv, hd)
+            c = dict(c, ck=ck.astype(c["ck"].dtype),
+                     cv=cv.astype(c["cv"].dtype))
+            x, nc = _apply_attn_mlp_block(p, cfg, x, mode="causal",
+                                          positions=positions, cache=c,
+                                          kv_x=enc_out)
+            return x, dict(nc, ck=c["ck"], cv=c["cv"])
+        x, nc = _scan_with_cache(
+            params["blocks"],
+            {"k": cache["k"], "v": cache["v"], "ck": cache["ck"],
+             "cv": cache["cv"]}, x, body,
+            unroll=cfg.scan_unroll)
+        cache = dict(cache, **nc)
+
+    cache["pos"] = jnp.int32(s)
+    x = L.apply_norm(params["final_norm"], cfg, x[:, -1:, :])
+    logits = L.lm_logits(params["embed"], cfg, x)
+    return logits, cache

@@ -1,0 +1,409 @@
+"""Shared neural layers: norms, RoPE/M-RoPE, GQA attention, MLP.
+
+Pure-function style: params are nested dicts of arrays; every function
+takes (params, config, inputs).  Parameter *schemas* (shape + logical
+axes + init) are declared once via :class:`PSpec`; init /
+ShapeDtypeStruct / logical trees all derive from the same schema
+(models/api.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding import shard
+from .config import ModelConfig
+
+
+# ----------------------------------------------------------------- schema --
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"        # 'normal'|'zeros'|'ones'|'out_proj'
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape,
+                                                      self.logical)
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+# ------------------------------------------------------------------ norms --
+
+def rmsnorm(x, gamma, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, eps):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_schema(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm_type == "rmsnorm":
+        return {"gamma": PSpec((d,), ("embed",), init="ones")}
+    return {"gamma": PSpec((d,), ("embed",), init="ones"),
+            "beta": PSpec((d,), ("embed",), init="zeros")}
+
+
+def _rmsnorm_lowp(x, gamma, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gamma.astype(x.dtype)
+
+
+def _layernorm_lowp(x, gamma, beta, eps):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * gamma.astype(x.dtype)
+            + beta.astype(x.dtype))
+
+
+def apply_norm(p, cfg: ModelConfig, x):
+    if not cfg.norm_f32:
+        if cfg.norm_type == "rmsnorm":
+            return _rmsnorm_lowp(x, p["gamma"], cfg.norm_eps)
+        return _layernorm_lowp(x, p["gamma"], p["beta"], cfg.norm_eps)
+    if cfg.norm_type == "rmsnorm":
+        return rmsnorm(x, p["gamma"], cfg.norm_eps)
+    return layernorm(x, p["gamma"], p["beta"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------------- rope --
+
+def _rope_angles(positions, dim_half: int, theta: float):
+    """positions (..., S) -> angles (..., S, dim_half)."""
+    freqs = 1.0 / (theta ** (jnp.arange(dim_half, dtype=jnp.float32)
+                             / dim_half))
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(q, k, positions, theta: float,
+               mrope_sections: Optional[Tuple[int, ...]] = None,
+               lowp: bool = False):
+    """Rotary embedding.  q/k: (B, S, H, hd).
+
+    positions: (B, S) — standard RoPE; or (3, B, S) — M-RoPE with
+    ``mrope_sections`` splitting hd/2 into (t, h, w) frequency bands
+    (qwen2-vl).  Text-only tokens pass identical ids in all 3 streams,
+    which reduces exactly to standard RoPE.
+    """
+    hd = q.shape[-1]
+    half = hd // 2
+    if mrope_sections is None:
+        ang = _rope_angles(positions, half, theta)        # (B,S,half)
+    else:
+        assert sum(mrope_sections) == half, (mrope_sections, half)
+        parts = []
+        for i, sec in enumerate(mrope_sections):
+            start = sum(mrope_sections[:i])
+            freqs = 1.0 / (theta ** (jnp.arange(start, start + sec,
+                                                dtype=jnp.float32) / half))
+            parts.append(positions[i].astype(jnp.float32)[..., None]
+                         * freqs)                          # (B,S,sec)
+        ang = jnp.concatenate(parts, axis=-1)              # (B,S,half)
+    cos = jnp.cos(ang)[..., None, :]                       # (B,S,1,half)
+    sin = jnp.sin(ang)[..., None, :]
+    if lowp:       # keep the rotation in the activation dtype (§Perf A7)
+        cos, sin = cos.astype(q.dtype), sin.astype(q.dtype)
+
+    def rot(x):
+        x1, x2 = x[..., :half], x[..., half:]
+        out = jnp.concatenate([x1 * cos - x2 * sin,
+                               x2 * cos + x1 * sin], axis=-1)
+        return out.astype(x.dtype)
+
+    return rot(q), rot(k)
+
+
+def sinusoidal_positions(n_pos: int, d: int) -> jax.Array:
+    """Whisper-style sinusoidal table, computed in-graph (no giant
+    HLO constants)."""
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    return _sinusoid(pos, d)
+
+
+def sinusoidal_position_at(pos, d: int) -> jax.Array:
+    """Single-position sinusoid; pos scalar -> (1, d)."""
+    p = jnp.asarray(pos, jnp.float32).reshape(1, 1)
+    return _sinusoid(p, d)
+
+
+def _sinusoid(pos, d: int) -> jax.Array:
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-jnp.log(10000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -------------------------------------------------------------- attention --
+
+def attn_schema(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": PSpec((d, hq * hd), ("embed", "q_heads")),
+        "wk": PSpec((d, hkv * hd), ("embed", "kv_heads")),
+        "wv": PSpec((d, hkv * hd), ("embed", "kv_heads")),
+        "wo": PSpec((hq * hd, d), ("q_heads", "embed"), init="out_proj"),
+    }
+    if cfg.use_bias:
+        s.update({
+            "bq": PSpec((hq * hd,), ("q_heads",), init="zeros"),
+            "bk": PSpec((hkv * hd,), ("kv_heads",), init="zeros"),
+            "bv": PSpec((hkv * hd,), ("kv_heads",), init="zeros"),
+            "bo": PSpec((d,), ("embed",), init="zeros"),
+        })
+    return s
+
+
+def _proj(x, w, b=None):
+    y = jnp.einsum("bsd,df->bsf", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def gqa_scores_and_mix(q, k, v, mask, softcap: float = 0.0):
+    """Grouped-query attention core.
+
+    q: (B,S,Hq,hd); k/v: (B,T,Hkv,hd); mask broadcastable (B,1,1,S,T)
+    or None.  Returns (B,S,Hq,hd).  Hq split into Hkv groups to avoid
+    materializing repeated KV.
+    """
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) / np.sqrt(hd)
+    scores = scores.astype(jnp.float32)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(b, s, hq, hd)
+
+
+def blocked_causal_gqa(q, k, v, block: int, softcap: float = 0.0):
+    """Flash-style blocked causal GQA (pure JAX, §Perf lever).
+
+    Streams over (q-block, k-block) tiles with an online softmax
+    (running max + denominator), so no (S, S) score tensor is ever
+    materialized — the classic memory-roofline fix for long-context
+    attention.  Tiles are emitted as straight-line HLO (static Python
+    loop) so dry-run cost accounting stays exact and XLA fuses each
+    tile.  q: (B,S,Hq,hd); k/v: (B,S,Hkv,hd).
+    """
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    bq = bk = min(block, s)
+    assert s % bq == 0, (s, bq)
+    nq = s // bq
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, s, hkv, g, hd)
+
+    out_blocks = []
+    for qi in range(nq):
+        qblk = qg[:, qi * bq:(qi + 1) * bq].astype(jnp.float32)
+        m = jnp.full((b, hkv, g, bq), -1e30, jnp.float32)
+        l = jnp.zeros((b, hkv, g, bq), jnp.float32)
+        acc = jnp.zeros((b, hkv, g, bq, hd), jnp.float32)
+        for kj in range(qi + 1):
+            kblk = k[:, kj * bk:(kj + 1) * bk].astype(jnp.float32)
+            vblk = v[:, kj * bk:(kj + 1) * bk].astype(jnp.float32)
+            sc = jnp.einsum("bskgh,btkh->bkgst", qblk, kblk) * scale
+            if softcap:
+                sc = jnp.tanh(sc / softcap) * softcap
+            if kj == qi:                       # diagonal tile: causal mask
+                rows = jnp.arange(bq)[:, None]
+                cols = jnp.arange(bk)[None, :]
+                sc = jnp.where(cols <= rows, sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgst,btkh->bkgsh", p, vblk)
+            m = m_new
+        out = acc / l[..., None]
+        out_blocks.append(
+            out.transpose(0, 3, 1, 2, 4).reshape(b, bq, hq, hd))
+    return jnp.concatenate(out_blocks, axis=1).astype(q.dtype)
+
+
+def causal_mask(s: int, t: int, offset) -> jax.Array:
+    """mask[..., i, j] = j <= i + offset (offset = cache position)."""
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(t)[None, :]
+    return (cols <= rows + offset)[None, None, None]
+
+
+def attention(p, cfg: ModelConfig, x, *, positions=None,
+              mode: str = "causal", cache=None, cache_pos=None,
+              kv_x=None):
+    """GQA attention for all modes.
+
+    mode:
+      'causal'  — self-attention over x (train / prefill)
+      'bidir'   — encoder self-attention
+      'cross'   — decoder cross-attention over kv_x (no rope, no mask)
+      'decode'  — single-step with KV cache: x is (B,1,D); cache is
+                  {'k': (B,T,Hkv,hd), 'v': ...}; cache_pos scalar.
+    Returns (out, new_cache) — new_cache is None unless mode='decode'
+    or cache-building prefill (pass cache with preallocated buffers).
+    """
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(_proj(x, p["wq"], p.get("bq")), hq, hd)
+    src = kv_x if mode == "cross" else x
+    if mode == "cross" and cache is not None and "ck" in cache:
+        k, v = cache["ck"], cache["cv"]     # precomputed at prefill
+    else:
+        k = _split_heads(_proj(src, p["wk"], p.get("bk")), hkv, hd)
+        v = _split_heads(_proj(src, p["wv"], p.get("bv")), hkv, hd)
+
+    q = shard(q, "batch", "seq", "act_heads", None)
+    k = shard(k, "batch", "seq", "act_heads", None)
+    v = shard(v, "batch", "seq", "act_heads", None)
+
+    sections = cfg.mrope_sections if cfg.family == "vlm" else None
+    new_cache = None
+    if mode in ("causal", "bidir") and positions is not None \
+            and cfg.family != "encdec":
+        q, k = apply_rope(q, k, positions, cfg.rope_theta,
+                          mrope_sections=sections,
+                          lowp=not cfg.norm_f32)
+    if mode == "decode":
+        if cfg.family != "encdec":
+            pos = jnp.asarray(cache_pos)[None, None]      # (1,1)
+            if sections is not None:
+                pos = jnp.broadcast_to(pos[None], (3,) + pos.shape)
+            q, k = apply_rope(q, k, pos, cfg.rope_theta,
+                              mrope_sections=sections,
+                              lowp=not cfg.norm_f32)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype),
+            (0, jnp.asarray(cache_pos, jnp.int32), 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype),
+            (0, jnp.asarray(cache_pos, jnp.int32), 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        t = ck.shape[1]
+        mask = (jnp.arange(t) <= cache_pos)[None, None, None, None, :]
+        out = gqa_scores_and_mix(q, ck.astype(q.dtype),
+                                 cv.astype(q.dtype), mask,
+                                 cfg.logits_softcap)
+    else:
+        s, t = q.shape[1], k.shape[1]
+        if cfg.attn_repeat_kv and hq != hkv:
+            # repeat KV to Hq so scores carry a model-shardable head dim
+            # (Hkv < model axis would force replicated scores); the
+            # repeated K/V are tiny next to the (S,S) scores they shard.
+            k = shard(jnp.repeat(k, hq // hkv, axis=2),
+                      "batch", "seq", "act_heads", None)
+            v = shard(jnp.repeat(v, hq // hkv, axis=2),
+                      "batch", "seq", "act_heads", None)
+        if (mode == "causal" and cfg.attn_block and s == t
+                and s % min(cfg.attn_block, s) == 0):
+            out = blocked_causal_gqa(q, k, v, cfg.attn_block,
+                                     cfg.logits_softcap)
+        else:
+            mask = causal_mask(s, t, 0) if mode == "causal" else None
+            out = gqa_scores_and_mix(q, k, v, mask, cfg.logits_softcap)
+        if cache is not None and mode == "causal":
+            # prefill: write k/v into the preallocated cache buffers
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+            new_cache = {"k": ck, "v": cv}
+
+    out = out.reshape(x.shape[0], x.shape[1], hq * hd)
+    out = _proj(out, p["wo"], p.get("bo"))
+    return shard(out, "batch", "seq", "act_embed"), new_cache
+
+
+# ------------------------------------------------------------------- mlp ---
+
+def mlp_schema(cfg: ModelConfig, d_ff: Optional[int] = None,
+               d: Optional[int] = None):
+    d = d or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        s = {
+            "wg": PSpec((d, d_ff), ("embed", "mlp")),
+            "wu": PSpec((d, d_ff), ("embed", "mlp")),
+            "wd": PSpec((d_ff, d), ("mlp", "embed"), init="out_proj"),
+        }
+    else:
+        s = {
+            "wu": PSpec((d, d_ff), ("embed", "mlp")),
+            "wd": PSpec((d_ff, d), ("mlp", "embed"), init="out_proj"),
+        }
+    if cfg.use_bias:
+        s["bu"] = PSpec((d_ff,), ("mlp",), init="zeros")
+        s["bd"] = PSpec((d,), ("embed",), init="zeros")
+    return s
+
+
+def apply_mlp(p, cfg: ModelConfig, x):
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype)))
+        h = h * jnp.einsum("bsd,df->bsf", x, p["wu"].astype(x.dtype))
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(x.dtype))
+        if "bu" in p:
+            h = h + p["bu"].astype(x.dtype)
+        h = jax.nn.gelu(h)
+    h = shard(h, "batch", "seq", "mlp")
+    out = jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(x.dtype))
+    if "bd" in p:
+        out = out + p["bd"].astype(x.dtype)
+    return out
+
+
+# ------------------------------------------------------------- embedding ---
+
+def embed_schema(cfg: ModelConfig):
+    s = {"tok": PSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                      scale=1.0 / np.sqrt(cfg.d_model))}
+    if not cfg.tie_embeddings:
+        s["head"] = PSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"))
+    return s
+
+
+def embed_tokens(p, cfg: ModelConfig, tokens):
+    emb = jnp.take(p["tok"], tokens, axis=0).astype(cfg.cdtype)
+    return shard(emb, "batch", "seq", "act_embed")
+
+
+def lm_logits(p, cfg: ModelConfig, x):
+    w = p.get("head", p["tok"])
+    logits = jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype))
+    if cfg.logits_softcap:
+        logits = jnp.tanh(logits / cfg.logits_softcap) * cfg.logits_softcap
+    return logits

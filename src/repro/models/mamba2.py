@@ -1,0 +1,200 @@
+"""Mamba2 block (SSD — state-space dual) for the zamba2 hybrid.
+
+Chunked SSD formulation (Dao & Gu 2024): the sequence is split into
+chunks of length C; within a chunk the output is a masked matmul
+(MXU-friendly), and only the O(T/C) inter-chunk state recurrence is
+sequential (lax.scan).  Per head h the state is (head_dim, d_state).
+
+    h_t = a_t * h_{t-1} + dt_t * x_t ⊗ B_t          a_t = exp(A * dt_t)
+    y_t = (h_t @ C_t) + D * x_t
+
+Decode is the O(1) single-step recurrence on the carried state.
+
+Conv frontend: depthwise causal conv (k=ssm_conv) over the x/B/C
+projections, with a rolling buffer in the decode cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import PSpec, rmsnorm
+
+
+def mamba2_schema(cfg: ModelConfig):
+    d, di, ds, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_heads
+    conv_dim = di + 2 * ds
+    return {
+        # in_proj -> [z (di), x (di), B (ds), C (ds), dt (h)]
+        "in_proj": PSpec((d, 2 * di + 2 * ds + h), ("embed", "mlp")),
+        "conv_w": PSpec((cfg.ssm_conv, conv_dim), (None, "mlp")),
+        "conv_b": PSpec((conv_dim,), ("mlp",), init="zeros"),
+        "A_log": PSpec((h,), (None,), init="ones"),
+        "D": PSpec((h,), (None,), init="ones"),
+        "dt_bias": PSpec((h,), (None,), init="zeros"),
+        "norm": PSpec((di,), ("mlp",), init="ones"),
+        "out_proj": PSpec((di, d), ("mlp", "embed"), init="out_proj"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, ds, h = cfg.d_inner, cfg.ssm_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * ds]
+    dt = zxbcdt[..., di + di + 2 * ds:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over (B,S,Cdim); w: (k, Cdim)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssd_forward(A_log, xh, Bm, Cm, dt, chunk: int,
+                h0: Optional[jax.Array] = None):
+    """Chunked SSD.  Shapes:
+      A_log: (H,);  xh: (B,S,H,hd);  Bm/Cm: (B,S,ds);  dt: (B,S,H) (>0)
+    Returns y: (B,S,H,hd), h_last: (B,H,hd,ds).
+    """
+    b, s_orig, H, hd = xh.shape
+    ds = Bm.shape[-1]
+    C = min(chunk, s_orig)
+    pad = (-s_orig) % C
+    if pad:
+        # zero-pad: dt=0 makes padded steps identity on the state
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) *
+                               (a.ndim - 2))
+        xh, Bm, Cm, dt = zp(xh), zp(Bm), zp(Cm), zp(dt)
+    s = s_orig + pad
+    nc = s // C
+    A = -jnp.exp(A_log.astype(jnp.float32))                 # (H,) negative
+
+    # reshape into chunks
+    xc = xh.reshape(b, nc, C, H, hd).astype(jnp.float32)
+    Bc = Bm.reshape(b, nc, C, ds).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, C, ds).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, C, H).astype(jnp.float32)
+
+    # per-step log decay and in-chunk cumulative sums
+    la = dtc * A[None, None, None, :]                       # (b,nc,C,H) <= 0
+    cum = jnp.cumsum(la, axis=2)                            # g_t
+    total = cum[:, :, -1:, :]                               # g_C per chunk
+
+    # intra-chunk: y_intra[t] = sum_{u<=t} exp(g_t-g_u) dt_u (C_t.B_u) x_u
+    gt = cum[..., None, :]                                  # (b,nc,C,1,H)
+    gu = cum[..., None, :, :]                               # (b,nc,1,C,H)
+    decay = jnp.exp(jnp.clip(gt - gu, -60.0, 0.0))          # (b,nc,C,C,H)
+    tri = jnp.tril(jnp.ones((C, C), jnp.float32))[None, None, :, :, None]
+    cb = jnp.einsum("bnts,bnus->bntu", Cc, Bc)              # (b,nc,C,C)
+    w = cb[..., None] * decay * tri                         # (b,nc,C,C,H)
+    w = w * dtc[:, :, None, :, :]                           # dt_u factor
+    y_intra = jnp.einsum("bntuh,bnuhd->bnthd", w, xc)
+
+    # inter-chunk recurrence over chunk states
+    # state contribution of chunk n: sum_u exp(g_C - g_u) dt_u x_u B_u
+    sdecay = jnp.exp(jnp.clip(total - cum, -60.0, 0.0))     # (b,nc,C,H)
+    contrib = jnp.einsum("bnuh,bnuhd,bnus->bnhds",
+                         dtc * sdecay, xc, Bc)              # (b,nc,H,hd,ds)
+    chunk_decay = jnp.exp(jnp.clip(total[:, :, 0, :], -60.0, 0.0))  # (b,nc,H)
+
+    def step(h, inp):
+        contrib_n, decay_n = inp
+        h_new = h * decay_n[..., None, None] + contrib_n
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, hd, ds), jnp.float32)
+    # scan over chunks: need leading axis nc
+    contrib_t = jnp.moveaxis(contrib, 1, 0)                 # (nc,b,H,hd,ds)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)               # (nc,b,H)
+    h_last, h_starts = jax.lax.scan(step, h0, (contrib_t, decay_t))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)                 # (b,nc,H,hd,ds)
+
+    # cross-chunk output: y_cross[t] = exp(g_t) * C_t . h_start
+    tdecay = jnp.exp(jnp.clip(cum, -60.0, 0.0))             # (b,nc,C,H)
+    y_cross = jnp.einsum("bnts,bnhds,bnth->bnthd",
+                         Cc, h_starts, tdecay)
+    y = (y_intra + y_cross).reshape(b, s, H, hd)
+    if pad:
+        y = y[:, :s_orig]
+    return y, h_last
+
+
+def ssd_decode_step(A_log, xh, Bm, Cm, dt, h):
+    """Single-token recurrence.  xh: (B,1,H,hd); h: (B,H,hd,ds)."""
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    a = jnp.exp(dt[:, 0].astype(jnp.float32) * A[None, :])  # (B,H)
+    upd = jnp.einsum("bh,bhd,bs->bhds", dt[:, 0].astype(jnp.float32),
+                     xh[:, 0].astype(jnp.float32),
+                     Bm[:, 0].astype(jnp.float32))
+    h_new = h * a[..., None, None] + upd
+    y = jnp.einsum("bhds,bs->bhd", h_new, Cm[:, 0].astype(jnp.float32))
+    return y[:, None], h_new                                 # (B,1,H,hd)
+
+
+def apply_mamba2(p, cfg: ModelConfig, x, *, mode: str = "train",
+                 cache: Optional[dict] = None):
+    """Mamba2 block.  x: (B,S,D).
+
+    mode 'train'/'prefill': full-sequence chunked SSD; returns
+    (y, new_cache or None) — prefill returns final state + conv tail.
+    mode 'decode': S==1 single step against cache {'h','conv'}.
+    """
+    b, s, d = x.shape
+    di, ds, H = cfg.d_inner, cfg.ssm_state, cfg.n_heads
+    hd = cfg.ssm_head_dim
+    k = cfg.ssm_conv
+
+    zxbcdt = jnp.einsum("bsd,df->bsf", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    new_cache = None
+    if mode == "decode":
+        # rolling conv buffer: (B, k-1, conv_dim)
+        conv_buf = cache["conv"]
+        window = jnp.concatenate([conv_buf, xbc], axis=1)    # (B,k,cd)
+        conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                              p["conv_w"].astype(jnp.float32))
+        xbc_c = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+        xbc_c = xbc_c[:, None, :].astype(x.dtype)
+        new_conv = window[:, 1:, :]
+    else:
+        xbc_c = _causal_conv(xbc, p["conv_w"].astype(jnp.float32),
+                             p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+        new_conv = xbc[:, -(k - 1):, :] if s >= k - 1 else jnp.pad(
+            xbc, ((0, 0), (k - 1 - s, 0), (0, 0)))
+
+    xs = xbc_c[..., :di].reshape(b, xbc_c.shape[1], H, hd)
+    Bm = xbc_c[..., di:di + ds]
+    Cm = xbc_c[..., di + ds:di + 2 * ds]
+
+    if mode == "decode":
+        y, h_new = ssd_decode_step(p["A_log"], xs, Bm, Cm, dt, cache["h"])
+        new_cache = {"h": h_new, "conv": new_conv}
+    else:
+        h0 = cache["h"] if cache is not None else None
+        y, h_last = ssd_forward(p["A_log"], xs, Bm, Cm, dt,
+                                cfg.ssm_chunk, h0=h0)
+        if mode == "prefill":
+            new_cache = {"h": h_last, "conv": new_conv}
+
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None,
+                                                                :, None]
+    y = y.reshape(b, -1, di).astype(x.dtype)
+    # gated RMSNorm (mamba2's norm before out_proj)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm"], 1e-5)
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"].astype(x.dtype))
+    return shard(out, "batch", "seq", "act_embed"), new_cache

@@ -1,0 +1,86 @@
+"""Mixture-of-Experts FFN (olmoe / qwen2-moe style).
+
+Top-k softmax router + dense one-hot dispatch (einsum over the expert
+axis).  Dense dispatch is the TPU-native choice: the dispatch/combine
+einsums are MXU matmuls and shard cleanly with experts on the 'model'
+mesh axis (expert parallelism); when experts are sharded, XLA lowers
+the dispatch to the all-to-all the paper's one-sided puts would carry
+(DESIGN.md §4: MoE dispatch = one-sided puts into remote expert
+segments).
+
+Shared experts (qwen2-moe): a standard always-on MLP with
+``n_shared_experts * expert_d_ff`` hidden width added to the routed
+output.
+
+Aux losses: load-balancing (Switch-style fraction·probability product)
+returned alongside so train_step can weight it.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import PSpec, apply_mlp, mlp_schema
+
+
+def moe_schema(cfg: ModelConfig):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.expert_d_ff
+    s = {
+        "router": PSpec((d, e), ("embed", None)),
+        "wg": PSpec((e, d, f), ("experts", "embed", "mlp")),
+        "wu": PSpec((e, d, f), ("experts", "embed", "mlp")),
+        "wd": PSpec((e, f, d), ("experts", "mlp", "embed"),
+                    init="out_proj"),
+    }
+    if cfg.n_shared_experts:
+        s["shared"] = mlp_schema(cfg,
+                                 d_ff=cfg.n_shared_experts * cfg.expert_d_ff)
+    return s
+
+
+def apply_moe(p, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (B,S,k)
+    gate_vals = gate_vals / jnp.clip(
+        gate_vals.sum(-1, keepdims=True), 1e-9)              # renormalize
+
+    # dense one-hot combine weights: (B,S,E)
+    combine = jnp.zeros((b, s, e), jnp.float32)
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (B,S,k,E)
+    combine = (onehot * gate_vals[..., None]).sum(axis=2)
+
+    # expert FFN on all tokens, weighted combine (dense dispatch).
+    xc = x.astype(cfg.cdtype)
+    h = jnp.einsum("bsd,edf->bsef", xc, p["wg"].astype(xc.dtype))
+    h = jax.nn.silu(h) * jnp.einsum("bsd,edf->bsef", xc,
+                                    p["wu"].astype(xc.dtype))
+    h = shard(h, "batch", "seq", "experts", "mlp")
+    if cfg.moe_fused_combine:
+        # scale by the gate BEFORE the down-projection so E and F are
+        # contracted together: the partial-sum all-reduce (wd sharded on
+        # F) then carries only (B,S,D) instead of (B,S,E,D) — 1/E the
+        # bytes, and in bf16 (§Perf C1).
+        hw = h * combine.astype(h.dtype)[..., None]
+        out = jnp.einsum("bsef,efd->bsd", hw, p["wd"].astype(xc.dtype))
+    else:
+        y = jnp.einsum("bsef,efd->bsed", h, p["wd"].astype(xc.dtype))
+        out = jnp.einsum("bsed,bse->bsd", y, combine.astype(y.dtype))
+
+    if cfg.n_shared_experts:
+        out = out + apply_mlp(p["shared"], cfg, x)
+
+    # Switch load-balance loss: E * sum_e f_e * P_e
+    f_e = onehot.sum(axis=2).mean(axis=(0, 1))               # fraction routed
+    p_e = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(f_e * p_e)
+    return shard(out, "batch", "seq", "act_embed"), aux

@@ -1,0 +1,252 @@
+"""RWKV6 "Finch" block (attention-free, data-dependent decay).
+
+Time-mix with per-channel data-dependent decay via a LoRA on the decay
+(the Finch innovation: w_t = exp(-exp(w0 + tanh(x_w @ w1) @ w2))), and
+the WKV linear-attention recurrence per 64-dim head:
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Train/prefill run the recurrence with lax.scan over time (state is
+O(1) in sequence length — this is why rwkv6 runs the long_500k cell);
+decode is a single-step update against the cached state.
+
+Simplification vs the full release (DESIGN.md §7): static token-shift
+interpolation factors for r/k/v/g (the release uses a second
+data-dependent LoRA there); the decay LoRA — the architecturally
+defining part — is implemented in full.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import PSpec
+
+
+def rwkv_att_schema(cfg: ModelConfig):
+    d, l = cfg.d_model, cfg.rwkv_lora_dim
+    H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    return {
+        "mu_r": PSpec((d,), ("embed",), init="zeros"),
+        "mu_k": PSpec((d,), ("embed",), init="zeros"),
+        "mu_v": PSpec((d,), ("embed",), init="zeros"),
+        "mu_g": PSpec((d,), ("embed",), init="zeros"),
+        "mu_w": PSpec((d,), ("embed",), init="zeros"),
+        "w0": PSpec((d,), ("embed",), init="zeros"),
+        "w1": PSpec((d, l), ("embed", None)),
+        "w2": PSpec((l, d), (None, "embed")),
+        "u": PSpec((H, hd), ("q_heads", None)),
+        "wr": PSpec((d, d), ("embed", "q_heads")),
+        "wk": PSpec((d, d), ("embed", "q_heads")),
+        "wv": PSpec((d, d), ("embed", "q_heads")),
+        "wg": PSpec((d, d), ("embed", "q_heads")),
+        "ln_x": PSpec((d,), ("embed",), init="ones"),
+        "wo": PSpec((d, d), ("q_heads", "embed"), init="out_proj"),
+    }
+
+
+def rwkv_ffn_schema(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": PSpec((d,), ("embed",), init="zeros"),
+        "mu_r": PSpec((d,), ("embed",), init="zeros"),
+        "wk": PSpec((d, f), ("embed", "mlp")),
+        "wv": PSpec((f, d), ("mlp", "embed"), init="out_proj"),
+        "wr": PSpec((d, d), ("embed", "q_heads")),
+    }
+
+
+def _token_shift(x, last: Optional[jax.Array]):
+    """x: (B,S,D); last: (B,D) previous token (decode) or None (zeros)."""
+    if x.shape[1] == 1 and last is not None:
+        return last[:, None, :]
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    if last is not None:
+        prev = prev.at[:, 0, :].set(last)
+    return prev
+
+
+def _lerp(x, prev, mu):
+    return x + (prev - x) * mu.astype(x.dtype)[None, None, :]
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """WKV recurrence.  r/k/v: (B,S,H,hd); w: (B,S,H,hd) in (0,1);
+    u: (H,hd); s0: (B,H,hd,hd).  Returns y (B,S,H,hd), s_last."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                       # (B,H,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., None] * s + kv
+        return s_new, y
+
+    rs = jnp.moveaxis(r, 1, 0).astype(jnp.float32)
+    ks = jnp.moveaxis(k, 1, 0).astype(jnp.float32)
+    vs = jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+    ws = jnp.moveaxis(w, 1, 0).astype(jnp.float32)
+    s_last, ys = jax.lax.scan(step, s0, (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), s_last          # (B,S,H,hd)
+
+
+#: per-step log-decay floor.  Chunked WKV factorizes the decay ratio
+#: exp(cprev_t − cum_s) into exp(cprev_t)·exp(−cum_s); bounding
+#: |log w| ≤ LOG_DECAY_FLOOR per step keeps exp(−cum_s) ≤ e^80 < f32
+#: max within a 16-token chunk.  Decays below e^-5 per step zero the
+#: state within two tokens anyway, so the floor is numerically
+#: inconsequential — applied identically in both implementations
+#: (DESIGN.md §7).
+LOG_DECAY_FLOOR = -5.0
+
+
+def _wkv_chunked(r, k, v, lw, u, s0, chunk: int):
+    """Chunked WKV (the TPU-native formulation, cf. GLA/SSD).
+
+    Intra-chunk work is two batched matmuls (MXU-friendly, outside any
+    scan so XLA cost analysis counts it exactly); only the O(S/chunk)
+    inter-chunk state recurrence is sequential.
+
+    r/k/v: (B,S,H,hd); lw: (B,S,H,hd) log-decay in [LOG_DECAY_FLOOR,0];
+    u: (H,hd); s0: (B,H,hd,hd) [k-dim, v-dim].
+    """
+    b, s_orig, H, hd = r.shape
+    C = min(chunk, s_orig)
+    pad = (-s_orig) % C
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        lw = zp(lw)                      # lw=0 => w=1: identity on state
+    s = s_orig + pad
+    nc = s // C
+
+    f32 = lambda a: a.reshape(b, nc, C, H, hd).astype(jnp.float32)
+    rc, kc, vc, lwc = f32(r), f32(k), f32(v), f32(lw)
+
+    cum = jnp.cumsum(lwc, axis=2)                   # Σ_{s<=t} log w
+    cprev = cum - lwc                               # Σ_{s<t}
+    total = cum[:, :, -1:, :, :]                    # per-chunk Σ
+
+    q_dec = rc * jnp.exp(cprev)                     # ≤ |r|
+    k_grow = kc * jnp.exp(-cum)                     # ≤ |k|·e^80 (safe)
+    A = jnp.einsum("bnthd,bnshd->bnhts", q_dec, k_grow)
+    tri = jnp.tril(jnp.ones((C, C), jnp.float32), -1)[None, None, None]
+    A = A * tri                                     # strict lower
+    y_intra = jnp.einsum("bnhts,bnshd->bnthd", A, vc)
+    # bonus (diagonal) term: (r ∘ u ∘ k)·1 applied to v_t
+    coef = jnp.einsum("bnthd,hd->bnth", rc * kc,
+                      u.astype(jnp.float32))
+    y_intra = y_intra + coef[..., None] * vc
+
+    # inter-chunk state recurrence
+    contrib = jnp.einsum("bnshk,bnshv->bnhkv",
+                         kc * jnp.exp(total - cum), vc)
+    decay = jnp.exp(total[:, :, 0])                 # (b,nc,H,hd)
+
+    def step(S, inp):
+        c_n, d_n = inp
+        S_new = d_n[..., None] * S + c_n
+        return S_new, S
+
+    c_t = jnp.moveaxis(contrib, 1, 0)
+    d_t = jnp.moveaxis(decay, 1, 0)
+    s_last, s_starts = jax.lax.scan(step, s0, (c_t, d_t))
+    s_starts = jnp.moveaxis(s_starts, 0, 1)         # (b,nc,H,hd,hd)
+
+    y_cross = jnp.einsum("bnthk,bnhkv->bnthv", q_dec, s_starts)
+    y = (y_intra + y_cross).reshape(b, s, H, hd)
+    if pad:
+        y = y[:, :s_orig]
+    return y, s_last
+
+
+def apply_rwkv_att(p, cfg: ModelConfig, x, *, mode: str = "train",
+                   cache: Optional[dict] = None):
+    """Time-mix block.  cache: {'s': (B,H,hd,hd), 'last': (B,D)}."""
+    b, s, d = x.shape
+    H, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    last = cache["last"] if cache is not None else None
+    prev = _token_shift(x, last)
+
+    xr = _lerp(x, prev, p["mu_r"])
+    xk = _lerp(x, prev, p["mu_k"])
+    xv = _lerp(x, prev, p["mu_v"])
+    xg = _lerp(x, prev, p["mu_g"])
+    xw = _lerp(x, prev, p["mu_w"])
+
+    r = jnp.einsum("bsd,df->bsf", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,df->bsf", xv, p["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,df->bsf", xg, p["wg"].astype(x.dtype))
+
+    # Finch data-dependent decay (LoRA), log-space with shared floor
+    lora = jnp.einsum("bsl,ld->bsd",
+                      jnp.tanh(jnp.einsum("bsd,dl->bsl", xw.astype(
+                          jnp.float32), p["w1"].astype(jnp.float32))),
+                      p["w2"].astype(jnp.float32))
+    lw = -jnp.exp(jnp.clip(
+        p["w0"].astype(jnp.float32)[None, None, :] + lora, -20.0, 10.0))
+    lw = jnp.maximum(lw, LOG_DECAY_FLOOR)
+
+    rh = r.reshape(b, s, H, hd)
+    kh = k.reshape(b, s, H, hd)
+    vh = v.reshape(b, s, H, hd)
+    lwh = lw.reshape(b, s, H, hd)
+
+    s0 = (cache["s"] if cache is not None
+          else jnp.zeros((b, H, hd, hd), jnp.float32))
+    if mode == "decode":
+        kv = jnp.einsum("bhk,bhv->bhkv", kh[:, 0].astype(jnp.float32),
+                        vh[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhk,bhkv->bhv", rh[:, 0].astype(jnp.float32),
+                       s0 + p["u"].astype(jnp.float32)[None, :, :, None]
+                       * kv)
+        wh0 = jnp.exp(lwh[:, 0].astype(jnp.float32))
+        s_last = wh0[..., None] * s0 + kv
+        y = y[:, None]                                   # (B,1,H,hd)
+    elif cfg.rwkv_impl == "chunked":
+        y, s_last = _wkv_chunked(rh, kh, vh, lwh,
+                                 p["u"].astype(jnp.float32), s0,
+                                 cfg.rwkv_chunk)
+    else:
+        y, s_last = _wkv_scan(rh, kh, vh, jnp.exp(lwh),
+                              p["u"].astype(jnp.float32), s0)
+
+    y = y.reshape(b, -1, d)
+    # per-head group norm (ln_x)
+    yh = y.reshape(b, -1, H, hd)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(b, -1, d) * p["ln_x"].astype(jnp.float32)[None, None, :]
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", y, p["wo"].astype(x.dtype))
+
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"s": s_last, "last": x[:, -1, :]}
+    return shard(out, "batch", "seq", "act_embed"), new_cache
+
+
+def apply_rwkv_ffn(p, cfg: ModelConfig, x, *, mode: str = "train",
+                   cache: Optional[dict] = None):
+    """Channel-mix block.  cache: {'last': (B,D)}."""
+    last = cache["last"] if cache is not None else None
+    prev = _token_shift(x, last)
+    xk = _lerp(x, prev, p["mu_k"])
+    xr = _lerp(x, prev, p["mu_r"])
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    k = shard(k, "batch", "seq", "mlp")
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,df->bsf", xr,
+                                  p["wr"].astype(x.dtype)))
+    out = r * kv
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"last": x[:, -1, :]}
+    return shard(out, "batch", "seq", "act_embed"), new_cache

@@ -1,0 +1,4 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update,
+                    opt_logical_axes, abstract_opt_state)
+from .compression import (compress_int8, decompress_int8,
+                          compressed_allreduce_ref, ErrorFeedback)

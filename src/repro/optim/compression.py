@@ -1,0 +1,76 @@
+"""Gradient compression for the DCN (pod) axis with error feedback.
+
+At 1000+ nodes the inter-pod all-reduce rides DCN, which is an order of
+magnitude slower than ICI; int8 quantization cuts those bytes 4x vs
+fp32 (2x vs bf16).  Error feedback (Karimireddy et al. 2019) keeps the
+quantization bias from accumulating: the residual of each compression
+is added back before the next one.
+
+``compressed_allreduce_ref`` is the reference composition used by
+train_step when ``compress_dcn=True``: quantize → psum over 'pod' →
+dequantize, with the error-feedback state threaded functionally.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization: returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+class ErrorFeedback:
+    """Functional error-feedback helpers (state = residual tree)."""
+
+    @staticmethod
+    def init(tree):
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+
+    @staticmethod
+    def apply(grads, residual):
+        return jax.tree.map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+
+    @staticmethod
+    def update(corrected, compressed_roundtrip):
+        return jax.tree.map(lambda c, d: c - d, corrected,
+                            compressed_roundtrip)
+
+
+def compressed_allreduce_ref(g: jax.Array, axis: Optional[str],
+                             residual: Optional[jax.Array] = None
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Quantized all-reduce over ``axis`` with error feedback.
+
+    Inside shard_map/jit: int8-quantize the (error-corrected) gradient,
+    sum the int32-widened payload over the axis, dequantize with the
+    max-scale.  Returns (reduced, new_residual).
+    """
+    g32 = g.astype(jnp.float32)
+    if residual is not None:
+        g32 = g32 + residual
+    if axis is None:
+        q, scale = compress_int8(g32)
+        roundtrip = decompress_int8(q, scale)
+        return roundtrip, g32 - roundtrip
+    # agree on one scale (cheap scalar pmax) so the int8 sum dequantizes
+    # exactly: sum_i q_i * s == (sum_i q_i) * s
+    amax = jax.lax.pmax(jnp.max(jnp.abs(g32)), axis)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    new_residual = g32 - q.astype(jnp.float32) * scale
+    summed = jax.lax.psum(q.astype(jnp.int32), axis)
+    return summed.astype(jnp.float32) * scale, new_residual

@@ -1,0 +1,2 @@
+from .step import make_decode_step, make_prefill_step
+from .engine import ServeEngine, Request

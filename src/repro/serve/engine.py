@@ -1,0 +1,161 @@
+"""Batched serving engine over the DART PGAS runtime.
+
+A production-shaped single-controller engine:
+
+* requests arrive on a thread-safe queue (``submit``),
+* the scheduler packs up to ``max_batch`` requests per wave,
+* prefill builds the KV/state cache for the wave, decode steps run
+  until every sequence hits its ``max_new_tokens`` or EOS,
+* the KV cache is registered as a DART collective segment — a
+  team-wide aligned allocation whose per-unit rows are the cache shards
+  (the PGAS picture of disaggregated KV; DESIGN.md §4) — so other
+  components (e.g. a prefix-cache service or a migration job) can
+  address it with global pointers without engine participation.
+
+The engine is deliberately synchronous per wave (no continuous
+batching) — the PGAS integration, not the scheduler, is the paper's
+story; continuous batching would slot into ``_run_wave``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (DART_TEAM_ALL, DartConfig, DartContext, dart_init,
+                    dart_team_memalloc_aligned)
+from ..models import api
+from ..models.config import ModelConfig
+from .step import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (prompt_len,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_seq: int = 256, pad_id: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.pad_id = pad_id
+        self._q: "queue.Queue[Request]" = queue.Queue()
+        self._prefill = jax.jit(make_prefill_step(cfg, max_seq))
+        self._decode = jax.jit(make_decode_step(cfg))
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._next_rid = 0
+        # PGAS bookkeeping: the cache segment for a full wave
+        self.dart: DartContext = dart_init(
+            n_units=max_batch,
+            config=DartConfig(team_pool_bytes=1 << 20,
+                              non_collective_pool_bytes=1 << 16))
+        self.cache_gptr = dart_team_memalloc_aligned(
+            self.dart, DART_TEAM_ALL, 1 << 18)
+
+    # -- client API ------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(rid=self._next_rid, prompt=np.asarray(prompt,
+                                                            np.int32),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+        self._next_rid += 1
+        self._q.put(req)
+        return req
+
+    def run_forever(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=5)
+
+    def drain(self) -> int:
+        """Process queued requests on the caller thread until empty.
+        Returns the number of completed requests."""
+        done = 0
+        while not self._q.empty():
+            wave = self._take_wave()
+            if not wave:
+                break
+            self._run_wave(wave)
+            done += len(wave)
+        return done
+
+    # -- engine internals --------------------------------------------------
+    def _loop(self):
+        while not self._stop.is_set():
+            wave = self._take_wave(block=True)
+            if wave:
+                self._run_wave(wave)
+
+    def _take_wave(self, block: bool = False) -> List[Request]:
+        wave: List[Request] = []
+        try:
+            first = self._q.get(timeout=0.1 if block else 0.0)
+            wave.append(first)
+        except queue.Empty:
+            return wave
+        while len(wave) < self.max_batch:
+            try:
+                wave.append(self._q.get_nowait())
+            except queue.Empty:
+                break
+        return wave
+
+    def _run_wave(self, wave: List[Request]):
+        cfg = self.cfg
+        b = len(wave)
+        plen = max(len(r.prompt) for r in wave)
+        toks = np.full((b, plen), self.pad_id, np.int32)
+        for i, r in enumerate(wave):
+            toks[i, -len(r.prompt):] = r.prompt      # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.family == "encdec":
+            batch["enc_frames"] = jnp.zeros(
+                (b, cfg.n_audio_frames, cfg.d_model), cfg.cdtype)
+        if cfg.family == "vlm":
+            pp = cfg.n_vision_patches
+            batch["vision_embeds"] = jnp.zeros((b, pp, cfg.d_model),
+                                               cfg.cdtype)
+            pos = jnp.broadcast_to(jnp.arange(pp + plen)[None],
+                                   (b, pp + plen))
+            batch["position_ids"] = jnp.broadcast_to(pos[None],
+                                                     (3, b, pp + plen))
+
+        logits, cache = self._prefill(self.params, batch)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+
+        max_new = max(r.max_new_tokens for r in wave)
+        outs = [nxt]
+        for _ in range(max_new - 1):
+            nxt, _, cache = self._decode(self.params, nxt, cache)
+            outs.append(nxt)
+        gen = np.asarray(jnp.concatenate(outs, axis=1))   # (b, max_new)
+
+        for i, r in enumerate(wave):
+            o = gen[i, :r.max_new_tokens]
+            if r.eos_id is not None:
+                hits = np.nonzero(o == r.eos_id)[0]
+                if hits.size:
+                    o = o[:hits[0] + 1]
+            r.output = o
+            r.done.set()

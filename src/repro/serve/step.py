@@ -1,0 +1,33 @@
+"""Serving steps: prefill builds the KV/state cache; decode advances it
+one token.  The decode cache lives in the DART symmetric-heap picture:
+a per-unit partition of a team-wide aligned allocation (DESIGN.md §4) —
+operationally it is a donated pytree sharded by the cache rules.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import api
+from ..models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int):
+    def prefill_step(params, batch) -> Tuple[jax.Array, Dict]:
+        return api.forward_prefill(cfg, params, batch, max_seq)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, sample: str = "greedy",
+                     temperature: float = 1.0):
+    def decode_step(params, tokens, cache):
+        logits, cache = api.forward_decode(cfg, params, tokens, cache)
+        if sample == "greedy":
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        else:
+            raise ValueError(sample)
+        return nxt[:, None], logits, cache
+    return decode_step

@@ -1,0 +1,2 @@
+from .rules import (AxisRules, DEFAULT_TRAIN_RULES, current_rules,
+                    logical_to_spec, shard, sharding_context, spec_tree)

@@ -1,0 +1,162 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates parameters/activations with *logical* axis names;
+a rule table maps logical → mesh axes per run mode.  Inside a
+``sharding_context(mesh, rules)`` every ``shard(x, names)`` becomes a
+``with_sharding_constraint``; outside, it is the identity, so the same
+model code runs on 1 CPU device and on the 512-chip production mesh.
+
+Mesh axes of the production mesh: ('pod', 'data', 'model')
+(launch/mesh.py).  FSDP = mapping the params' long logical axes to
+'data' as well; EP = 'experts' → 'model'; SP = 'seq' → 'data'.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+AxisRules = Dict[str, MeshAxes]
+
+#: baseline TP+DP(+FSDP) rule table used by train_step on the
+#: production mesh.  'data' shards batch; 'model' shards heads /
+#: mlp / vocab / experts; FSDP additionally shards the embed axis of
+#: params over 'data' (see fsdp_rules).
+DEFAULT_TRAIN_RULES: AxisRules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "vocab": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "state": None,
+    "layers": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "conv": None,
+}
+
+
+def fsdp_rules(base: AxisRules) -> AxisRules:
+    """ZeRO-3: additionally shard parameter 'embed' over the data axis."""
+    r = dict(base)
+    r["embed"] = "data"
+    return r
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[AxisRules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Optional[Mesh], rules: Optional[AxisRules]):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_rules() -> Tuple[Optional[Mesh], Optional[AxisRules]]:
+    return _CTX.mesh, _CTX.rules
+
+
+def logical_to_spec(names: Sequence[Optional[str]],
+                    rules: AxisRules) -> P:
+    """Map logical axis names to a PartitionSpec under ``rules``.
+
+    Guarantees no mesh axis is used twice (later duplicates drop to
+    None — replicated — which is always legal)."""
+    used = set()
+    out = []
+    for nm in names:
+        ax = rules.get(nm) if nm is not None else None
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes if a not in used)
+        used.update(axes)
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(axes)
+    return P(*out)
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Annotate activation sharding; identity outside a context.
+
+    Size-aware: a mesh axis is only claimed when the dim divides it —
+    constraining an 8-way KV-head dim onto a 16-way 'model' axis would
+    force XLA into involuntary full rematerializations."""
+    mesh, rules = current_rules()
+    if mesh is None or rules is None:
+        return x
+    spec = logical_to_spec_sized(names, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def logical_to_spec_sized(names: Sequence[Optional[str]],
+                          shape: Sequence[int], rules: AxisRules,
+                          mesh: Mesh) -> P:
+    """Size-aware mapping: a mesh axis is only assigned to a dim when
+    the dim size is divisible by the axis size (XLA would pad
+    otherwise); dropped axes become available to later dims.
+
+    E.g. qwen2-moe's 60 experts don't divide model=16, so 'experts'
+    drops its claim and the 'mlp' dim picks 'model' up instead.
+    """
+    used = set()
+    out = []
+    for nm, dim in zip(names, shape):
+        ax = rules.get(nm) if nm is not None else None
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes if a not in used
+                     and a in mesh.axis_names)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if not axes or size <= 0 or dim % size != 0:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes[0] if len(axes) == 1 else axes)
+    return P(*out)
+
+
+def sized_spec_tree(logical_tree, shape_tree, rules: AxisRules,
+                    mesh: Mesh):
+    """NamedShardings for a params-like tree, size-aware."""
+    return jax.tree.map(
+        lambda names, sds: NamedSharding(
+            mesh, logical_to_spec_sized(names, sds.shape, rules, mesh)),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def spec_tree(logical_tree, rules: AxisRules, mesh: Mesh):
+    """Map a pytree of logical-name tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda names: NamedSharding(mesh, logical_to_spec(names, rules)),
+        logical_tree, is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,2 @@
+from .step import (TrainState, loss_fn, make_train_step, train_step,
+                   abstract_train_state, train_state_logical)

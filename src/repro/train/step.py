@@ -1,0 +1,81 @@
+"""Training step: loss, grads, AdamW, metrics.
+
+``make_train_step(cfg, opt_cfg)`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+donated state.  Sharding is injected from outside via in/out_shardings
+and the activation constraints the model emits inside a
+``sharding_context``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import api
+from ..models.config import ModelConfig
+from ..optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                           abstract_opt_state, opt_logical_axes)
+
+TrainState = Dict[str, Any]     # {'params':…, 'opt':…}
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    if cfg.bf16_params_compute:
+        # mixed precision: master weights stay f32 in the optimizer; the
+        # forward consumes a bf16 cast, so FSDP weight all-gathers move
+        # half the bytes (the cast happens before the gather — XLA sinks
+        # the convert to the sharded side).
+        params = jax.tree.map(
+            lambda p: p.astype(cfg.cdtype)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+    logits, aux = api.forward_train(cfg, params, batch)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = nll.size
+    loss = nll.sum() / denom
+    # z-loss keeps the softmax normalizer bounded (stability at scale)
+    zloss = 1e-4 * jnp.mean(jnp.square(
+        jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)))
+    return loss + aux + zloss, {"loss": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    def train_step(state: TrainState, batch
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        (total, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(state["params"])
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, state["opt"], state["params"])
+        metrics = {"total_loss": total, **parts, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, state, batch):
+    return make_train_step(cfg, opt_cfg)(state, batch)
+
+
+def init_train_state(cfg: ModelConfig, rng) -> TrainState:
+    params = api.init_params(cfg, rng)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def abstract_train_state(cfg: ModelConfig) -> TrainState:
+    ap = api.abstract_params(cfg)
+    return {"params": ap, "opt": abstract_opt_state(ap)}
+
+
+def train_state_logical(cfg: ModelConfig):
+    pl = api.logical_axes(cfg)
+    return {"params": pl, "opt": opt_logical_axes(pl)}

@@ -1,0 +1,118 @@
+"""Per-arch smoke tests: reduced config, one forward + one train step on
+CPU, asserting output shapes and no NaNs (full configs are exercised
+only via the dry-run)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import api
+from repro.models.config import reduced_for_smoke
+
+B, S = 2, 16
+
+
+def make_batch(cfg, rng):
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens,
+             "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.family == "encdec":
+        batch["enc_frames"] = jax.random.normal(
+            rng, (B, cfg.n_audio_frames, cfg.d_model))
+    if cfg.family == "vlm":
+        P = cfg.n_vision_patches
+        batch["vision_embeds"] = jax.random.normal(rng, (B, P, cfg.d_model))
+        pos = jnp.broadcast_to(jnp.arange(P + S)[None], (B, P + S))
+        batch["position_ids"] = jnp.broadcast_to(pos[None], (3, B, P + S))
+    return batch
+
+
+def loss_fn(cfg, params, batch):
+    logits, aux = api.forward_train(cfg, params, batch)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][..., None],
+                               axis=-1).mean()
+    return nll + aux
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch_id):
+    cfg = reduced_for_smoke(get_config(arch_id))
+    rng = jax.random.PRNGKey(0)
+    params = api.init_params(cfg, rng)
+    batch = make_batch(cfg, rng)
+
+    logits, aux = jax.jit(
+        lambda p, b: api.forward_train(cfg, p, b))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all(), "NaN/inf in logits"
+
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p, b: loss_fn(cfg, p, b)))(params, batch)
+    assert np.isfinite(float(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+    # one SGD step keeps outputs finite
+    params2 = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype),
+                           params, grads)
+    loss2 = jax.jit(lambda p, b: loss_fn(cfg, p, b))(params2, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke_prefill_decode_consistency(arch_id):
+    """decode(prefill(prompt)) logits == train-forward logits."""
+    cfg = reduced_for_smoke(get_config(arch_id))
+    rng = jax.random.PRNGKey(1)
+    params = api.init_params(cfg, rng)
+    batch = make_batch(cfg, rng)
+    max_seq = S + 4 + (cfg.n_vision_patches if cfg.family == "vlm" else 0)
+
+    logits, _ = jax.jit(
+        lambda p, b: api.forward_train(cfg, p, b))(params, batch)
+    pre, cache = jax.jit(
+        lambda p, b: api.forward_prefill(cfg, p, b, max_seq))(params, batch)
+    np.testing.assert_allclose(np.asarray(pre[:, 0]),
+                               np.asarray(logits[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+    nxt = jnp.argmax(pre[:, 0], -1).astype(jnp.int32)[:, None]
+    dec, _ = jax.jit(
+        lambda p, t, c: api.forward_decode(cfg, p, t, c))(params, nxt, cache)
+    ext = dict(batch, tokens=jnp.concatenate([batch["tokens"], nxt], 1))
+    ext["labels"] = ext["tokens"]
+    if cfg.family == "vlm":
+        P = cfg.n_vision_patches
+        pos = jnp.broadcast_to(jnp.arange(P + S + 1)[None], (B, P + S + 1))
+        ext["position_ids"] = jnp.broadcast_to(pos[None], (3, B, P + S + 1))
+    ext_logits, _ = jax.jit(
+        lambda p, b: api.forward_train(cfg, p, b))(params, ext)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(ext_logits[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_param_counts_full_configs():
+    """Full-config parameter counts are in the expected ballpark."""
+    expect = {
+        "llama3-8b": (7.0e9, 9.5e9),
+        "llama3-405b": (390e9, 430e9),
+        "command-r-35b": (32e9, 40e9),
+        "command-r-plus-104b": (95e9, 115e9),
+        "olmoe-1b-7b": (6.0e9, 8.0e9),
+        "qwen2-moe-a2.7b": (12e9, 16e9),
+        "zamba2-1.2b": (0.9e9, 1.6e9),
+        "whisper-small": (0.18e9, 0.35e9),
+        "rwkv6-1.6b": (1.4e9, 2.2e9),
+        "qwen2-vl-2b": (1.2e9, 2.3e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = api.param_count(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}," \
+                              f" {hi/1e9}]B"
+    # MoE active < total
+    moe = get_config("olmoe-1b-7b")
+    assert api.active_param_count(moe) < api.param_count(moe)

@@ -1,0 +1,122 @@
+"""Tests for the symmetric heap + allocators (paper §IV.B.3)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ALIGNMENT, BlockAllocator, OutOfGlobalMemory,
+                        SymmetricHeap, align_up, from_bytes, nbytes_of,
+                        to_bytes)
+
+
+# ------------------------------------------------------- block allocator ----
+
+def test_block_allocator_first_fit_and_free():
+    a = BlockAllocator(1024)
+    o1 = a.alloc(100)            # -> 0, rounded to 128
+    o2 = a.alloc(100)            # -> 128
+    assert (o1, o2) == (0, 128)
+    a.free(o1)
+    assert a.alloc(50) == 0      # first fit reuses the hole
+    with pytest.raises(OutOfGlobalMemory):
+        a.alloc(2048)
+
+
+def test_block_allocator_coalescing():
+    a = BlockAllocator(512)
+    offs = [a.alloc(128) for _ in range(4)]   # exhausts the pool
+    with pytest.raises(OutOfGlobalMemory):
+        a.alloc(1)
+    for o in offs:
+        a.free(o)
+    assert a.alloc(512) == 0     # holes coalesced back into one block
+
+
+@given(st.lists(st.integers(1, 300), min_size=1, max_size=30))
+@settings(max_examples=50)
+def test_block_allocator_no_overlap_property(sizes):
+    """Live allocations never overlap and stay in-bounds."""
+    a = BlockAllocator(1 << 16)
+    live = []
+    for i, s in enumerate(sizes):
+        try:
+            off = a.alloc(s)
+        except OutOfGlobalMemory:
+            continue
+        live.append((off, align_up(s)))
+        if i % 4 == 3 and live:
+            o, _ = live.pop(0)
+            a.free(o)
+    live.sort()
+    for (o1, l1), (o2, _) in zip(live, live[1:]):
+        assert o1 + l1 <= o2
+    for o, l in live:
+        assert 0 <= o and o + l <= (1 << 16)
+        assert o % ALIGNMENT == 0
+
+
+# ------------------------------------------------------- heap + pools -------
+
+def test_symmetric_heap_pools():
+    h = SymmetricHeap(n_units=4)
+    world = h.reserve_pool(n_rows=4, pool_bytes=1024, collective=False)
+    team = h.reserve_pool(n_rows=4, pool_bytes=1024, collective=True)
+    # non-collective: per-unit independent cursors (paper Fig. 4)
+    o_u0 = h.memalloc_local(world, 0, 100)
+    o_u1 = h.memalloc_local(world, 1, 300)
+    o_u0b = h.memalloc_local(world, 0, 100)
+    assert o_u0 == 0 and o_u1 == 0       # each unit starts at its own base
+    assert o_u0b == 128
+    # collective: one shared cursor -> aligned & symmetric (paper Fig. 5)
+    c1 = h.memalloc_aligned(team, 256)
+    c2 = h.memalloc_aligned(team, 256)
+    assert (c1, c2) == (0, 256)
+    assert len(team.table) == 2
+    rec = team.table.query(c2 + 10)      # address inside second alloc
+    assert rec.offset == c2
+    h.memfree_aligned(team, c1)
+    assert len(team.table) == 1
+    assert h.memalloc_aligned(team, 128) == 0   # slot recycled
+
+
+def test_translation_table_query_miss():
+    h = SymmetricHeap(n_units=2)
+    team = h.reserve_pool(n_rows=2, pool_bytes=512, collective=True)
+    h.memalloc_aligned(team, 128)
+    with pytest.raises(KeyError):
+        team.table.query(500)
+
+
+def test_heap_state_shapes():
+    h = SymmetricHeap(n_units=3)
+    h.reserve_pool(n_rows=3, pool_bytes=100, collective=False)  # rounds up
+    state = h.init_state()
+    assert state[0].shape == (3, 128)
+    assert state[0].dtype == jnp.uint8
+
+
+# ------------------------------------------------- byte conversion ----------
+
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.int32, jnp.uint8, jnp.float16,
+          jnp.int8]
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("shape", [(7,), (3, 5), (2, 3, 4), ()])
+def test_bytes_roundtrip(dtype, shape):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(*shape) * 3, dtype=dtype)
+    b = to_bytes(x)
+    assert b.dtype == jnp.uint8
+    assert b.size == nbytes_of(shape, dtype)
+    y = from_bytes(b, shape, dtype)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@given(st.integers(1, 64), st.sampled_from(["float32", "int32", "bfloat16"]))
+@settings(max_examples=30)
+def test_bytes_roundtrip_property(n, dtype):
+    x = jnp.arange(n).astype(dtype)
+    assert np.array_equal(np.asarray(from_bytes(to_bytes(x), (n,), dtype)),
+                          np.asarray(x))

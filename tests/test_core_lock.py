@@ -1,0 +1,118 @@
+"""MCS queuing-lock tests (paper §IV.B.6, Fig. 6)."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (FREE, DartLock, LockService, Team, ThreadedAtomics,
+                        group_from_units)
+
+
+def make_service(n=8, placement="unit0"):
+    atomics = ThreadedAtomics(n)
+    service = LockService(atomics, tail_placement=placement)
+    team = Team(teamid=0, group=group_from_units(range(n)), slot=0)
+    return atomics, service, team
+
+
+def test_uncontended_acquire_release():
+    _, svc, team = make_service(4)
+    lock = svc.create_lock(team)
+    svc.acquire(lock, 2)
+    assert not svc.try_acquire(lock, 3)      # held -> try fails
+    svc.release(lock, 2)
+    assert svc.try_acquire(lock, 3)          # free -> try succeeds
+    svc.release(lock, 3)
+    assert lock.is_free_hint(svc.atomics)
+
+
+def test_mutual_exclusion_under_contention():
+    n = 8
+    _, svc, team = make_service(n)
+    lock = svc.create_lock(team)
+    counter = {"v": 0, "in_cs": 0, "max_in_cs": 0}
+    iters = 50
+
+    def worker(u):
+        for _ in range(iters):
+            svc.acquire(lock, u)
+            counter["in_cs"] += 1
+            counter["max_in_cs"] = max(counter["max_in_cs"],
+                                       counter["in_cs"])
+            v = counter["v"]
+            counter["v"] = v + 1             # non-atomic unless excluded
+            counter["in_cs"] -= 1
+            svc.release(lock, u)
+
+    threads = [threading.Thread(target=worker, args=(u,)) for u in range(n)]
+    for t in threads: t.start()
+    for t in threads: t.join()
+    assert counter["v"] == n * iters         # no lost updates
+    assert counter["max_in_cs"] == 1         # never two units in the CS
+
+
+def test_fifo_ordering():
+    """MCS guarantees FIFO ordering of lock acquisition (paper §IV.B.6)."""
+    n = 6
+    _, svc, team = make_service(n)
+    lock = svc.create_lock(team)
+    order = []
+    svc.acquire(lock, 0)                     # hold so others queue up
+    started = []
+
+    def worker(u):
+        started.append(u)
+        svc.acquire(lock, u)
+        order.append(u)
+        time.sleep(0.001)
+        svc.release(lock, u)
+
+    threads = []
+    for u in range(1, n):                    # start in deterministic order
+        t = threading.Thread(target=worker, args=(u,))
+        t.start()
+        while u not in started:
+            time.sleep(0.0005)
+        time.sleep(0.005)                    # let u reach fetch_and_store
+        threads.append(t)
+    svc.release(lock, 0)
+    for t in threads: t.join()
+    assert order == list(range(1, n))        # strict FIFO
+
+
+def test_multiple_locks_per_team():
+    _, svc, team = make_service(4)
+    l1, l2 = svc.create_lock(team), svc.create_lock(team)
+    svc.acquire(l1, 0)
+    svc.acquire(l2, 1)                        # independent locks don't block
+    svc.release(l1, 0)
+    svc.release(l2, 1)
+
+
+def test_tail_placement_unit0_vs_round_robin():
+    """Beyond-paper §VI: balanced tails spread atomic traffic."""
+    at0, svc0, team = make_service(4, placement="unit0")
+    locks0 = [svc0.create_lock(team) for _ in range(8)]
+    assert all(l.tail.home_unit == 0 for l in locks0)   # paper behaviour
+
+    at1, svc1, team1 = make_service(4, placement="round_robin")
+    locks1 = [svc1.create_lock(team1) for _ in range(8)]
+    homes = [l.tail.home_unit for l in locks1]
+    assert sorted(set(homes)) == [0, 1, 2, 3]           # spread out
+    # traffic accounting: bang on all locks, unit0 placement concentrates
+    for svc, locks, at in ((svc0, locks0, at0), (svc1, locks1, at1)):
+        for i, l in enumerate(locks):
+            svc.acquire(l, i % 4)
+            svc.release(l, i % 4)
+    tail_traffic0 = at0.home_traffic[0]
+    tail_traffic1 = max(at1.home_traffic.values())
+    assert tail_traffic0 > tail_traffic1     # congestion reduced
+
+
+def test_non_member_acquire_raises():
+    _, svc, _ = make_service(4)
+    team = Team(teamid=1, group=group_from_units([0, 1]), slot=1)
+    lock = svc.create_lock(team)
+    with pytest.raises(KeyError):
+        svc.acquire(lock, 3)

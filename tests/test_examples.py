@@ -1,0 +1,46 @@
+"""Examples must run end-to-end (deliverable b)."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).parent.parent
+
+
+def run_example(name, timeout=540, args=()):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / name), *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, (
+        f"{name} failed\n--- stdout ---\n{proc.stdout[-3000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-3000:]}")
+    return proc.stdout
+
+
+def test_quickstart():
+    out = run_example("quickstart.py")
+    assert "lock-protected counter: 800" in out
+    assert "done." in out
+
+
+def test_halo_exchange():
+    out = run_example("halo_exchange.py")
+    assert "OK — one-sided halo exchange matches" in out
+
+
+def test_serve_batch():
+    out = run_example("serve_batch.py")
+    assert "completed 10 requests" in out
+    assert out.strip().endswith("OK")
+
+
+def test_train_lm_with_restart():
+    out = run_example("train_lm.py")
+    assert "resumed from step" in out
+    assert "OK — training resumed from checkpoint" in out

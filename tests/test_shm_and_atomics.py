@@ -1,0 +1,106 @@
+"""Paper §VI shared-memory windows + §IV.B.6 heap atomics."""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DART_TEAM_ALL, DartConfig, HeapAtomicsProvider,
+                        LockService, dart_compare_and_swap, dart_exit,
+                        dart_fetch_and_add, dart_fetch_and_store,
+                        dart_init, dart_put_blocking, dart_shm_view,
+                        dart_team_memalloc_aligned,
+                        dart_team_memalloc_shared, shm_supported)
+from repro.core.atomics import ThreadedAtomics
+
+
+@pytest.fixture()
+def ctx():
+    c = dart_init(n_units=4, config=DartConfig(
+        non_collective_pool_bytes=4096, team_pool_bytes=4096))
+    yield c
+    dart_exit(c)
+
+
+# ------------------------------------------------------------- shm ---------
+
+def test_shm_view_zero_copy_roundtrip(ctx):
+    if not shm_supported(ctx):
+        pytest.skip("backend arenas not host-visible")
+    g = dart_team_memalloc_shared(ctx, DART_TEAM_ALL, 256)
+    val = jnp.arange(16, dtype=jnp.float32)
+    dart_put_blocking(ctx, g.setunit(2), val)
+    view = dart_shm_view(ctx, g.setunit(2), (16,), jnp.float32)
+    np.testing.assert_array_equal(view, np.asarray(val))
+    assert not view.flags.writeable            # read-only snapshot
+
+
+def test_shm_view_is_epoch_snapshot(ctx):
+    """Views bind the current heap state; a later put starts a new
+    epoch (functional update) and needs a fresh view."""
+    if not shm_supported(ctx):
+        pytest.skip("backend arenas not host-visible")
+    g = dart_team_memalloc_shared(ctx, DART_TEAM_ALL, 64)
+    dart_put_blocking(ctx, g, jnp.full((4,), 1.0, jnp.float32))
+    v1 = dart_shm_view(ctx, g, (4,), jnp.float32)
+    dart_put_blocking(ctx, g, jnp.full((4,), 2.0, jnp.float32))
+    v2 = dart_shm_view(ctx, g, (4,), jnp.float32)
+    assert np.all(v1 == 1.0) and np.all(v2 == 2.0)
+
+
+def test_shm_requires_flag(ctx):
+    g = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 64)
+    with pytest.raises(ValueError, match="FLAG_SHM"):
+        dart_shm_view(ctx, g, (4,), jnp.float32)
+
+
+# --------------------------------------------------------- heap atomics ----
+
+def test_heap_atomics_semantics(ctx):
+    from repro.core.runtime import dart_memalloc
+    g = dart_memalloc(ctx, 4, unit=1)
+    dart_put_blocking(ctx, g, jnp.asarray([5], jnp.int32))
+    assert dart_fetch_and_add(ctx, g, 3) == 5
+    assert dart_fetch_and_store(ctx, g, 100) == 8
+    assert dart_compare_and_swap(ctx, g, 100, 7) == 100
+    assert dart_compare_and_swap(ctx, g, 999, 0) == 7   # no swap
+    assert dart_fetch_and_add(ctx, g, 0) == 7
+
+
+def test_heap_atomics_thread_safety(ctx):
+    from repro.core.runtime import dart_memalloc
+    g = dart_memalloc(ctx, 4, unit=0)
+    dart_put_blocking(ctx, g, jnp.asarray([0], jnp.int32))
+
+    def worker():
+        for _ in range(25):
+            dart_fetch_and_add(ctx, g, 1)
+
+    ts = [threading.Thread(target=worker) for _ in range(4)]
+    for t in ts: t.start()
+    for t in ts: t.join()
+    assert dart_fetch_and_add(ctx, g, 0) == 100
+
+
+def test_mcs_lock_with_heap_state(ctx):
+    """The MCS LockService running with its lock state in DART global
+    memory (the paper Fig. 6 layout), via HeapAtomicsProvider."""
+    notifier = ThreadedAtomics(4)
+    provider = HeapAtomicsProvider(ctx, notifier)
+    svc = LockService(provider)
+    lock = svc.create_lock(ctx.teams[DART_TEAM_ALL])
+
+    counter = {"v": 0}
+    def worker(u):
+        for _ in range(20):
+            svc.acquire(lock, u)
+            counter["v"] += 1
+            svc.release(lock, u)
+
+    ts = [threading.Thread(target=worker, args=(u,)) for u in range(4)]
+    for t in ts: t.start()
+    for t in ts: t.join()
+    assert counter["v"] == 80
+    # tail cell lives in the WORLD pool on unit 0 (paper: unit 0)
+    assert lock.tail.unitid == 0
