@@ -34,6 +34,9 @@ from repro.core.onesided import _arena_read, _arena_write
 
 from .common import Report, fit_constant_overhead, time_call
 
+#: ops per coalesced-flush epoch in the `coalesced` series
+COALESCE_N = 16
+
 N_UNITS = 16
 PLACEMENTS = {
     "intra_unit": (0, 0),        # self-access
@@ -48,8 +51,9 @@ def _mk_ctx(pool_bytes: int):
         team_pool_bytes=pool_bytes))
 
 
-def run(report: Report, *, full: bool = False, repeats: int = 20):
-    max_pow = 21 if full else 18
+def run(report: Report, *, full: bool = False, repeats: int = 20,
+        quick: bool = False):
+    max_pow = 21 if full else (12 if quick else 18)
     sizes = [2 ** p for p in range(0, max_pow + 1, 3)]
     pool = 1 << 22
     ctx = _mk_ctx(pool)
@@ -57,8 +61,10 @@ def run(report: Report, *, full: bool = False, repeats: int = 20):
     team = ctx.teams[DART_TEAM_ALL]
     poolid = team.slot + 1
 
+    placements = (dict(list(PLACEMENTS.items())[:1]) if quick
+                  else PLACEMENTS)
     fits = {}
-    for place, (src, dst) in PLACEMENTS.items():
+    for place, (src, dst) in placements.items():
         ptr = gp.setunit(dst)
         t_dart_put, t_raw_put = [], []
         t_dart_get, t_raw_get = [], []
@@ -107,14 +113,19 @@ def run(report: Report, *, full: bool = False, repeats: int = 20):
                 rt.dart_put(ctx, ptr, val)
 
             def dart_get_init():
-                rt.dart_get(ctx, ptr, (n,), jnp.float32)
+                # initiation only: enqueue without dispatch (the eager
+                # rt.dart_get flushes the pool, which would time a full
+                # jitted dispatch instead)
+                rt.dart_get_nb(ctx, ptr, (n,), jnp.float32)
 
             ti = time_call(dart_put_init, repeats=repeats)
             t_dart_puti.append(ti.mean_us)
             report.add(f"dtit_put/{place}/{nbytes}B/dart", ti.mean_us)
+            rt.dart_flush(ctx)          # drain the timed initiations
             ti = time_call(dart_get_init, repeats=repeats)
             t_dart_geti.append(ti.mean_us)
             report.add(f"dtit_get/{place}/{nbytes}B/dart", ti.mean_us)
+            rt.dart_flush(ctx)
 
         for kind, td, tr in (("put", t_dart_put, t_raw_put),
                              ("get", t_dart_get, t_raw_get)):
@@ -124,7 +135,7 @@ def run(report: Report, *, full: bool = False, repeats: int = 20):
                        f"stderr={se:.3f}us (model t_DART-t_raw=c)")
 
     # --- bandwidth (figs 12-15): overlapping non-blocking then waitall --
-    for place, (src, dst) in PLACEMENTS.items():
+    for place, (src, dst) in placements.items():
         ptr = gp.setunit(dst)
         for nbytes in [2 ** p for p in range(10, max_pow + 1, 4)]:
             n = nbytes // 4
@@ -152,12 +163,56 @@ def run(report: Report, *, full: bool = False, repeats: int = 20):
             report.add(f"bw_get_nb/{place}/{nbytes}B", t.mean_us,
                        f"{bw:.3f}GB/s")
 
+    # --- coalesced engine: N queued puts + one flush vs N blocking puts.
+    # The derived column records jitted-dispatch counts from the engine's
+    # counter — the paper's request-aggregation win made measurable.
+    for nbytes in ([64, 4096] if quick else [64, 4096, 65536]):
+        n = max(nbytes // 4, 1)
+        val = jnp.arange(n, dtype=jnp.float32)
+        stride = ((nbytes + 127) // 128) * 128
+
+        def blocking_n_puts():
+            for i in range(COALESCE_N):
+                rt.dart_put_blocking(ctx, gp + i * stride, val)
+
+        def coalesced_n_puts():
+            hs = [rt.dart_put(ctx, gp + i * stride, val)
+                  for i in range(COALESCE_N)]
+            rt.dart_flush(ctx)
+            dart_waitall(hs)
+
+        d0 = ctx.engine.dispatch_count
+        blocking_n_puts()
+        d_block = ctx.engine.dispatch_count - d0
+        d0 = ctx.engine.dispatch_count
+        coalesced_n_puts()
+        d_coal = ctx.engine.dispatch_count - d0
+        assert d_coal < d_block, "coalesced flush must dispatch less"
+
+        tb = time_call(blocking_n_puts, repeats=repeats)
+        tc = time_call(coalesced_n_puts, repeats=repeats)
+        report.add(f"coalesced/put_flush/{nbytes}B/{COALESCE_N}ops",
+                   tc.mean_us,
+                   f"blocking={tb.mean_us:.3f}us dispatches={d_coal}"
+                   f"vs{d_block} speedup={tb.mean_us / tc.mean_us:.2f}x")
+
+        def coalesced_n_gets():
+            hs = [rt.dart_get_nb(ctx, gp + i * stride, (n,), jnp.float32)
+                  for i in range(COALESCE_N)]
+            rt.dart_flush(ctx)
+            dart_waitall(hs)
+
+        tg = time_call(coalesced_n_gets, repeats=repeats)
+        report.add(f"coalesced/get_flush/{nbytes}B/{COALESCE_N}ops",
+                   tg.mean_us)
+
     # --- §VI shared-memory window: zero-copy view vs one-sided get -----
-    from repro.core import (dart_shm_view, dart_team_memalloc_shared,
-                            shm_supported)
+    from repro.core import (Locality, classify_locality, dart_shm_view,
+                            dart_team_memalloc_shared, shm_supported)
     if shm_supported(ctx):
         gs = dart_team_memalloc_shared(ctx, DART_TEAM_ALL, 1 << 18)
-        for nbytes in (64, 4096, 262144):
+        shm_sizes = (64, 4096) if quick else (64, 4096, 262144)
+        for nbytes in shm_sizes:
             n = nbytes // 4
             rt.dart_put_blocking(ctx, gs.setunit(1),
                                  jnp.arange(n, dtype=jnp.float32))
@@ -166,13 +221,26 @@ def run(report: Report, *, full: bool = False, repeats: int = 20):
                 dart_shm_view(ctx, gs.setunit(1), (n,), jnp.float32)
 
             def get_read():
+                # force the jitted path (what a remote target would pay)
+                from repro.core import onesided as _os
+                _os.dart_get_blocking(ctx.state, ctx.heap,
+                                      ctx.teams_by_slot, gs.setunit(1),
+                                      (n,), jnp.float32)
+
+            def routed_read():
+                # runtime path: locality classifier picks the shm view
                 rt.dart_get_blocking(ctx, gs.setunit(1), (n,), jnp.float32)
 
+            assert classify_locality(ctx, gs) is Locality.SHM_LOCAL
             ts = time_call(shm_read, repeats=repeats)
             tg = time_call(get_read, repeats=repeats)
+            tr = time_call(routed_read, repeats=repeats)
             report.add(f"shm_view/{nbytes}B", ts.mean_us,
                        f"get={tg.mean_us:.3f}us "
                        f"speedup={tg.mean_us / ts.mean_us:.1f}x")
+            report.add(f"shm_fastpath/{nbytes}B", tr.mean_us,
+                       f"jitted_get={tg.mean_us:.3f}us "
+                       f"speedup={tg.mean_us / tr.mean_us:.1f}x")
 
     dart_exit(ctx)
     return fits

@@ -29,24 +29,31 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full message-size sweep (to 2MiB)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: tiny sweeps, 2 repeats — checks every "
+                         "suite still runs, numbers are not meaningful")
     ap.add_argument("--only", default=None,
                     help="run a single suite: put_get|collective|lock|"
                          "teamlist|alloc")
     ap.add_argument("--repeats", type=int, default=20)
     args = ap.parse_args()
+    if args.quick:
+        args.repeats = 2
+        args.full = False
 
     from . import (alloc_bench, collective_bench, lock_bench, put_get,
                    teamlist_bench)
 
+    slow_repeats = args.repeats if args.quick else max(args.repeats, 50)
     suites = {
         "put_get": lambda r: put_get.run(r, full=args.full,
-                                         repeats=args.repeats),
+                                         repeats=args.repeats,
+                                         quick=args.quick),
         "collective": lambda r: collective_bench.run(
             r, repeats=args.repeats),
-        "lock": lambda r: lock_bench.run(r, repeats=max(args.repeats, 50)),
-        "teamlist": lambda r: teamlist_bench.run(
-            r, repeats=max(args.repeats, 50)),
-        "alloc": lambda r: alloc_bench.run(r, repeats=max(args.repeats, 50)),
+        "lock": lambda r: lock_bench.run(r, repeats=slow_repeats),
+        "teamlist": lambda r: teamlist_bench.run(r, repeats=slow_repeats),
+        "alloc": lambda r: alloc_bench.run(r, repeats=slow_repeats),
     }
     if args.only:
         suites = {args.only: suites[args.only]}

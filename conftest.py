@@ -4,6 +4,6 @@ import sys
 # repo root on sys.path so `benchmarks` (top-level package) is importable
 # from tests; `repro` itself comes from PYTHONPATH=src per the README.
 ROOT = pathlib.Path(__file__).parent
-for p in (str(ROOT), str(ROOT / "src")):
+for p in (str(ROOT), str(ROOT / "src"), str(ROOT / "tests")):
     if p not in sys.path:
         sys.path.insert(0, p)

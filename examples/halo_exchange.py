@@ -17,8 +17,9 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_mesh, shard_map
 from repro.core.onesided import shmem_halo_exchange
 from repro.core.globmem import from_bytes
 
@@ -27,8 +28,7 @@ LOCAL = 32                      # cells per unit
 ALPHA = 0.1
 STEPS = 50
 
-mesh = jax.make_mesh((N_UNITS,), ("unit",),
-                     axis_types=(AxisType.Auto,))
+mesh = make_mesh((N_UNITS,), ("unit",))
 
 # arena layout per unit: [left_halo (4B) | right_halo (4B)]
 LEFT_OFF, RIGHT_OFF = 0, 128
@@ -66,7 +66,7 @@ def run(u0):
     return u
 
 
-spmd = jax.jit(jax.shard_map(run, mesh=mesh, in_specs=P("unit"),
+spmd = jax.jit(shard_map(run, mesh=mesh, in_specs=P("unit"),
                              out_specs=P("unit"), check_vma=False))
 
 # initial condition: a hot spike in the middle

@@ -12,11 +12,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (DART_TEAM_ALL, DartConfig, dart_allreduce,
-                        dart_barrier, dart_exit, dart_get_blocking,
-                        dart_init, dart_memalloc, dart_put,
-                        dart_put_blocking, dart_team_create,
-                        dart_team_memalloc_aligned, dart_team_myid,
-                        dart_waitall, group_from_units)
+                        dart_barrier, dart_exit, dart_flush,
+                        dart_get_blocking, dart_get_nb, dart_init,
+                        dart_memalloc, dart_put, dart_put_blocking,
+                        dart_team_create, dart_team_memalloc_aligned,
+                        dart_team_myid, dart_waitall, group_from_units)
 
 # 1. initialize a runtime with 8 units -----------------------------------
 ctx = dart_init(n_units=8, config=DartConfig())
@@ -39,11 +39,22 @@ dart_put_blocking(ctx, gptr.setunit(6), jnp.arange(8, dtype=jnp.float32))
 out = dart_get_blocking(ctx, gptr.setunit(6), (8,), jnp.float32)
 print("roundtrip:", np.asarray(out))
 
-# non-blocking puts + waitall
+# non-blocking puts + waitall: the puts queue on the engine and the
+# waitall flushes them as ONE coalesced jitted dispatch
+d0 = ctx.engine.dispatch_count
 handles = [dart_put(ctx, gptr.setunit(u) + 64,
                     jnp.full((4,), float(u), jnp.float32))
            for u in evens.members]
 dart_waitall(handles)
+print(f"coalesced {len(handles)} puts into "
+      f"{ctx.engine.dispatch_count - d0} dispatch(es)")
+
+# non-blocking gets: enqueue, flush once, then read the values
+gets = [dart_get_nb(ctx, gptr.setunit(u) + 64, (4,), jnp.float32)
+        for u in evens.members]
+dart_flush(ctx)
+assert all(float(np.asarray(h.value())[0]) == float(u)
+           for h, u in zip(gets, evens.members))
 
 # collective: allreduce the 4 floats each member just wrote
 red = dart_allreduce(ctx, gptr + 64, (4,), jnp.float32, op="sum")

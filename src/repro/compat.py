@@ -1,0 +1,56 @@
+"""Version-compatibility shims for the installed JAX.
+
+The repo targets recent JAX APIs but must degrade gracefully on older
+installs (the container pins whatever it pins).  Two shims live here:
+
+* ``AxisType`` — ``jax.sharding.AxisType`` only exists on newer JAX.
+  Older versions have no axis-type concept; every mesh axis behaves
+  like the ``Auto`` type, so the correct fallback is simply to omit
+  the argument.
+* ``make_mesh`` — wraps ``jax.make_mesh`` and passes
+  ``axis_types=(AxisType.Auto, ...)`` only when the installed JAX
+  understands it.  On very old versions without ``jax.make_mesh`` at
+  all, falls back to constructing ``jax.sharding.Mesh`` directly.
+
+Use these instead of ``from jax.sharding import AxisType`` anywhere in
+src/, examples/, or tests/.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+try:  # jax >= 0.5-ish
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    HAS_AXIS_TYPE = True
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+    HAS_AXIS_TYPE = False
+
+if hasattr(jax, "shard_map"):          # jax >= 0.6 top-level alias
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        # the replication check was named check_rep before the vma rework
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...], *,
+              devices: Optional[Sequence] = None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with the Auto axis type where supported."""
+    if hasattr(jax, "make_mesh"):
+        if HAS_AXIS_TYPE:
+            return jax.make_mesh(shape, axes, devices=devices,
+                                 axis_types=(AxisType.Auto,) * len(axes))
+        return jax.make_mesh(shape, axes, devices=devices)
+    devs = np.asarray(devices if devices is not None
+                      else jax.devices()[: int(np.prod(shape))])
+    return jax.sharding.Mesh(devs.reshape(shape), axes)

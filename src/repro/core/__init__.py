@@ -15,23 +15,26 @@ from .team import (DART_TEAM_ALL, EMPTY_SLOT, FreeListTeamList, Team,
                    TeamList, TeamListFullError, TeamPartition)
 from .globmem import (ALIGNMENT, BlockAllocator, HeapState,
                       OutOfGlobalMemory, SymmetricHeap, TranslationRecord,
-                      TranslationTable, align_up, from_bytes, nbytes_of,
-                      to_bytes)
-from .onesided import (Handle, dart_test, dart_testall, dart_wait,
-                       dart_waitall, deref, shmem_get, shmem_get_dynamic,
-                       shmem_halo_exchange, shmem_put)
+                      TranslationTable, align_up, copy_state, from_bytes,
+                      nbytes_of, to_bytes)
+from .onesided import (CommEngine, GetHandle, Handle, dart_test,
+                       dart_testall, dart_wait, dart_waitall, deref,
+                       shmem_get, shmem_get_dynamic, shmem_halo_exchange,
+                       shmem_put)
 from .collectives import (team_all_gather, team_all_to_all, team_barrier,
                           team_broadcast, team_pmax, team_psum,
                           team_reduce_scatter)
 from .atomics import AtomicsProvider, Cell, ThreadedAtomics
 from .lock import FREE, DartLock, LockService
-from .shm import (dart_shm_view, dart_team_memalloc_shared, shm_supported)
+from .shm import (Locality, classify_locality, dart_shm_view,
+                  dart_team_memalloc_shared, shm_supported)
 from .atomic_ops import (HeapAtomicsProvider, dart_compare_and_swap,
                          dart_fetch_and_add, dart_fetch_and_store)
 from .runtime import (DartConfig, DartContext, dart_allreduce, dart_barrier,
-                      dart_bcast, dart_exit, dart_get, dart_get_blocking,
-                      dart_init, dart_memalloc, dart_memfree, dart_put,
-                      dart_put_blocking, dart_team_create,
+                      dart_bcast, dart_exit, dart_flush, dart_gather,
+                      dart_get, dart_get_blocking, dart_get_nb, dart_init,
+                      dart_memalloc, dart_memfree, dart_put,
+                      dart_put_blocking, dart_scatter, dart_team_create,
                       dart_team_destroy, dart_team_get_group,
                       dart_team_memalloc_aligned, dart_team_memfree,
                       dart_team_myid, dart_team_size, dart_team_split)

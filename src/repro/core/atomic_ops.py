@@ -41,12 +41,22 @@ def _mutex_for(ctx):
         return _ctx_locks[key]
 
 
+def _flush_pending(ctx) -> None:
+    # atomics are read-modify-write on heap cells: any queued (not yet
+    # dispatched) engine ops must land first or the read is stale
+    engine = getattr(ctx, "engine", None)
+    if engine is not None and engine.pending_ops():
+        engine.flush()
+
+
 def _read_i32(ctx, gptr: GlobalPtr) -> int:
+    _flush_pending(ctx)
     return int(np.asarray(dart_get_blocking(
         ctx.state, ctx.heap, ctx.teams_by_slot, gptr, (1,), jnp.int32))[0])
 
 
 def _write_i32(ctx, gptr: GlobalPtr, value: int) -> None:
+    _flush_pending(ctx)
     ctx.state = dart_put_blocking(
         ctx.state, ctx.heap, ctx.teams_by_slot, gptr,
         jnp.asarray([value], jnp.int32))

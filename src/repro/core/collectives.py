@@ -89,65 +89,87 @@ def team_barrier(axis: str, groups=None):
 
 # --------------------------------------------------------------------------
 # Host-plane collectives over heap segments
+#
+# These share the engine's batched dispatch discipline: each collective
+# is ONE jitted kernel over the addressed segment (not an eager op per
+# lax call), and when a CommEngine is passed, the target pool's pending
+# one-sided ops are flushed first (queued puts are ordered *before* the
+# collective, matching the paper's epoch semantics) and the kernel
+# launch is counted in engine.dispatch_count.
 # --------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, donate_argnums=0, static_argnums=(2,))
-def _rows_bcast(arena, root_row, n_rows):
-    row = jax.lax.dynamic_slice(arena, (root_row, jnp.uint32(0)),
-                                (1, arena.shape[1]))
-    return jnp.broadcast_to(row, (n_rows, arena.shape[1])).astype(arena.dtype)
+@functools.partial(jax.jit, donate_argnums=0, static_argnums=(3,))
+def _seg_bcast(arena, root_row, off, nbytes):
+    src = jax.lax.dynamic_slice(arena, (root_row, off), (1, nbytes))
+    tiled = jnp.broadcast_to(src, (arena.shape[0], nbytes))
+    return jax.lax.dynamic_update_slice(arena, tiled, (jnp.int32(0), off))
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _seg_gather(arena, off, nbytes):
+    return jax.lax.dynamic_slice(arena, (jnp.int32(0), off),
+                                 (arena.shape[0], nbytes))
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _seg_scatter(arena, off, values):
+    return jax.lax.dynamic_update_slice(arena, values, (jnp.int32(0), off))
+
+
+def _pre_collective(state, poolid, engine):
+    """Flush queued one-sided ops on the pool, count our dispatch."""
+    if engine is not None:
+        state = engine.flush(poolid)
+        engine.dispatch_count += 1
+    return state
 
 
 def dart_bcast(state: HeapState, heap: SymmetricHeap, teams_by_slot,
-               root_gptr: GlobalPtr, nbytes: int):
+               root_gptr: GlobalPtr, nbytes: int, engine=None):
     """Broadcast ``nbytes`` at the root's allocation to every row of the
     segment (team members all see the root's bytes at the same offset)."""
     poolid, row, off = deref(heap, teams_by_slot, root_gptr)
-    arena = state[poolid]
-    src = jax.lax.dynamic_slice(arena, (jnp.uint32(row), jnp.uint32(off)),
-                                (1, nbytes))
-    tiled = jnp.broadcast_to(src, (arena.shape[0], nbytes))
-    arena = jax.lax.dynamic_update_slice(arena, tiled,
-                                         (jnp.uint32(0), jnp.uint32(off)))
+    state = _pre_collective(state, poolid, engine)
+    arena = _seg_bcast(state[poolid], jnp.int32(row), jnp.int32(off),
+                       nbytes)
     new_state = dict(state)
     new_state[poolid] = arena
     return new_state, Handle((arena,))
 
 
 def dart_gather(state: HeapState, heap: SymmetricHeap, teams_by_slot,
-                gptr: GlobalPtr, per_unit_nbytes: int):
+                gptr: GlobalPtr, per_unit_nbytes: int, engine=None):
     """Gather each row's ``per_unit_nbytes`` at gptr.addr → host value of
     shape (n_rows, per_unit_nbytes) uint8."""
     poolid, _, off = deref(heap, teams_by_slot, gptr)
-    arena = state[poolid]
-    out = jax.lax.dynamic_slice(
-        arena, (jnp.uint32(0), jnp.uint32(off)),
-        (arena.shape[0], per_unit_nbytes))
+    state = _pre_collective(state, poolid, engine)
+    out = _seg_gather(state[poolid], jnp.int32(off), per_unit_nbytes)
     return out, Handle((out,))
 
 
 def dart_scatter(state: HeapState, heap: SymmetricHeap, teams_by_slot,
-                 gptr: GlobalPtr, values: jax.Array):
+                 gptr: GlobalPtr, values: jax.Array, engine=None):
     """Scatter row i of ``values`` (uint8[n_rows, nbytes]) to unit i."""
     poolid, _, off = deref(heap, teams_by_slot, gptr)
-    arena = state[poolid]
+    state = _pre_collective(state, poolid, engine)
     values = jnp.asarray(values, jnp.uint8)
-    arena = jax.lax.dynamic_update_slice(arena, values,
-                                         (jnp.uint32(0), jnp.uint32(off)))
+    arena = _seg_scatter(state[poolid], jnp.int32(off), values)
     new_state = dict(state)
     new_state[poolid] = arena
     return new_state, Handle((arena,))
 
 
 def dart_allreduce(state: HeapState, heap: SymmetricHeap, teams_by_slot,
-                   gptr: GlobalPtr, shape, dtype, op: str = "sum"):
+                   gptr: GlobalPtr, shape, dtype, op: str = "sum",
+                   engine=None):
     """All-reduce the typed value at gptr.addr across rows; the result
     replaces every row's copy.  Returns (new_state, reduced_value)."""
     poolid, _, off = deref(heap, teams_by_slot, gptr)
+    state = _pre_collective(state, poolid, engine)
     n = nbytes_of(shape, dtype)
     arena = state[poolid]
-    raw = jax.lax.dynamic_slice(arena, (jnp.uint32(0), jnp.uint32(off)),
+    raw = jax.lax.dynamic_slice(arena, (jnp.int32(0), jnp.int32(off)),
                                 (arena.shape[0], n))
     vals = jax.vmap(lambda r: from_bytes(r, shape, dtype))(raw)
     red = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min,
@@ -155,7 +177,7 @@ def dart_allreduce(state: HeapState, heap: SymmetricHeap, teams_by_slot,
     from .globmem import to_bytes
     payload = jnp.broadcast_to(to_bytes(red)[None, :], (arena.shape[0], n))
     arena = jax.lax.dynamic_update_slice(arena, payload,
-                                         (jnp.uint32(0), jnp.uint32(off)))
+                                         (jnp.int32(0), jnp.int32(off)))
     new_state = dict(state)
     new_state[poolid] = arena
     return new_state, red

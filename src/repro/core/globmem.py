@@ -147,7 +147,15 @@ class PoolMeta:
 
 # The device-resident heap state is a plain dict pytree:
 #   {poolid: uint8[n_rows, pool_bytes]}
+# Pending (queued, not-yet-dispatched) one-sided ops against it live in
+# the epoch-scoped CommEngine queue (onesided.py); every functional
+# update goes through copy_state so old epochs stay valid snapshots.
 HeapState = Dict[int, jax.Array]
+
+
+def copy_state(state: HeapState) -> HeapState:
+    """Shallow epoch snapshot: new dict, same (immutable) arenas."""
+    return dict(state)
 
 
 class SymmetricHeap:

@@ -105,6 +105,12 @@ class GlobalPtr:
         return bool(self.flags & FLAG_COLLECTIVE)
 
     @property
+    def is_shm(self) -> bool:
+        """Minted by the shared-memory window path (§VI): eligible for
+        the zero-copy locality fast path when the arena is host-visible."""
+        return bool(self.flags & FLAG_SHM)
+
+    @property
     def is_null(self) -> bool:
         return self == DART_GPTR_NULL
 

@@ -1,4 +1,5 @@
-"""DART one-sided communication (paper §III, §IV.B.5).
+"""DART one-sided communication (paper §III, §IV.B.5) + the
+locality-aware non-blocking engine (§VI future work).
 
 Two planes, mirroring how DART-MPI sits above MPI-3 RMA:
 
@@ -11,20 +12,46 @@ underlying substrate op.  The substrate here is XLA: a donated
 compiles to a one-sided ICI DMA into the owning unit's HBM — the direct
 analogue of ``MPI_Rput`` in a passive-target epoch.
 
+**Epoch / flush / completion model** (the non-blocking engine):
+
+The paper's non-blocking ops return request handles completed by
+``dart_wait``/``dart_test``; underneath, MPI aggregates requests and a
+``MPI_Win_flush`` completes them at the window.  We reproduce that
+structure with :class:`CommEngine`, an **epoch-scoped pending-op
+queue** over the symmetric heap:
+
+* ``CommEngine.put/get`` *enqueue* — the pointer is dereferenced and
+  bounds-checked at initiation (translation happens once, like the
+  paper's dart_put), but no device work is dispatched.  The returned
+  :class:`Handle` starts in the ``queued`` state.
+* ``CommEngine.flush`` closes the epoch: maximal runs of consecutive
+  same-pool, same-size ops are **coalesced** into one batched jitted
+  scatter (:func:`_arena_scatter`) or gather (:func:`_arena_gather`) —
+  N queued puts become a single XLA dispatch instead of N.  Program
+  order is preserved run-by-run, so overlapping writes resolve exactly
+  as the equivalent sequence of blocking ops (last writer wins).
+* Handle lifecycle: ``queued`` → (flush) → ``issued`` → (XLA async
+  dispatch drains) → ``complete`` — the paper's §III
+  issued/locally-complete/remotely-complete ladder.  ``dart_wait`` on
+  a queued handle triggers the flush itself; ``dart_test`` reports
+  False until the op has been dispatched.
+
+The engine also carries ``dispatch_count``, a counter of jitted kernel
+launches, so tests and benchmarks can *assert* that a coalesced flush
+issues fewer dispatches than the equivalent blocking sequence.
+
+**Locality classifier**: on deref, ``FLAG_SHM``-eligible pointers
+whose arena is host-visible are routed through the zero-copy view in
+:mod:`repro.core.shm` instead of a jitted dynamic-slice dispatch (the
+paper's §VI shared-memory-window plan) — see
+:func:`repro.core.shm.classify_locality` and the runtime-level
+``dart_get_blocking``.
+
 Epochs: MPI requires RMA calls to sit inside an access epoch; DART opens
 a shared epoch on every window at init/alloc time so users never see it
-(§IV.B.5).  In XLA the "epoch" is the program region — conflict freedom
-is guaranteed by dataflow, exactly the RMA *unified* memory model the
-paper adopts.
-
-Completion semantics (paper §III):
-
-* blocking put/get return only after local *and* remote completion →
-  we block on the updated arena / fetched value.
-* non-blocking put/get return a :class:`Handle`; ``dart_wait``/
-  ``dart_test`` map onto JAX async-dispatch completion
-  (``block_until_ready`` / ``Array.is_ready``) — JAX's dispatch queue
-  plays the role of MPI request handles.
+(§IV.B.5).  In XLA the "epoch" is the program region between two
+flushes — conflict freedom inside it is guaranteed by dataflow, exactly
+the RMA *unified* memory model the paper adopts.
 
 **Device plane** (inside ``shard_map``; the analogue of what DASH's
 compiled kernels do): ``shmem_put/get`` move bytes between unit rows
@@ -43,8 +70,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from .globmem import (HeapState, SymmetricHeap, from_bytes, nbytes_of,
-                      to_bytes)
+from .globmem import (HeapState, SymmetricHeap, copy_state, from_bytes,
+                      nbytes_of, to_bytes)
 from .gptr import GlobalPtr
 
 # --------------------------------------------------------------------------
@@ -52,9 +79,14 @@ from .gptr import GlobalPtr
 # --------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
 class Handle:
-    """A DART communication handle over one or more in-flight arrays.
+    """A DART communication handle.
+
+    Lifecycle (paper §III): ``queued`` (enqueued on a
+    :class:`CommEngine`, not yet dispatched) → ``issued`` (dispatched
+    to XLA, asynchronously in flight) → ``complete`` (buffers ready).
+    Handles constructed directly from arrays — the immediate path used
+    by collectives — are born ``issued``.
 
     If an array has been *donated* to a later op (e.g. a subsequent put
     to the same pool), it is treated as complete: XLA executes ops on a
@@ -63,14 +95,59 @@ class Handle:
     heap state anyway (dataflow = the RMA unified model, DESIGN.md §2).
     """
 
-    arrays: Tuple[jax.Array, ...]
+    def __init__(self, arrays: Tuple[jax.Array, ...] = (),
+                 engine: "Optional[CommEngine]" = None):
+        self.arrays = tuple(arrays)
+        self._engine = engine
+        self._issued = engine is None
+
+    @property
+    def state(self) -> str:
+        if not self._issued:
+            return "queued"
+        if all(a.is_deleted() or a.is_ready() for a in self.arrays):
+            return "complete"
+        return "issued"
+
+    def _resolve(self, arrays: Tuple[jax.Array, ...]) -> None:
+        self.arrays = tuple(arrays)
+        self._issued = True
 
     def wait(self) -> None:
+        if not self._issued and self._engine is not None:
+            # close only this handle's pool epoch; other pools keep
+            # accumulating ops for their own coalesced flush
+            self._engine.flush(getattr(self, "poolid", None))
         jax.block_until_ready([a for a in self.arrays
                                if not a.is_deleted()])
 
     def test(self) -> bool:
+        if not self._issued:
+            return False
         return all(a.is_deleted() or a.is_ready() for a in self.arrays)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Handle(state={self.state}, n_arrays={len(self.arrays)})"
+
+
+class GetHandle(Handle):
+    """Handle of a queued get; ``value()`` flushes and returns the
+    typed result (identical bytes to the blocking path)."""
+
+    def __init__(self, shape: Tuple[int, ...], dtype,
+                 engine: "CommEngine"):
+        super().__init__((), engine)
+        self.shape = tuple(shape)
+        self.dtype = dtype
+        self._value: Optional[jax.Array] = None
+
+    def _resolve_value(self, value: jax.Array) -> None:
+        self._value = value
+        self._resolve((value,))
+
+    def value(self) -> jax.Array:
+        self.wait()
+        return self._value
 
 
 def dart_wait(handle: Handle) -> None:
@@ -82,6 +159,11 @@ def dart_test(handle: Handle) -> bool:
 
 
 def dart_waitall(handles: Sequence[Handle]) -> None:
+    # flushing one queued handle's pool resolves every queued handle on
+    # the same (engine, pool); other pools are left accumulating
+    for h in handles:
+        if not h._issued and h._engine is not None:
+            h._engine.flush(getattr(h, "poolid", None))
     jax.block_until_ready([a for h in handles for a in h.arrays
                            if not a.is_deleted()])
 
@@ -106,6 +188,26 @@ def _arena_write(arena: jax.Array, row: jax.Array, off: jax.Array,
 def _arena_read(arena: jax.Array, row: jax.Array, off: jax.Array,
                 nbytes: int) -> jax.Array:
     return jax.lax.dynamic_slice(arena, (row, off), (1, nbytes))[0]
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _arena_scatter(arena: jax.Array, rows: jax.Array, offs: jax.Array,
+                   payloads: jax.Array) -> jax.Array:
+    """Batched put: apply k same-size updates in queue order — ONE
+    dispatch for the whole run (the MPI request-aggregation analogue)."""
+    def body(i, a):
+        return jax.lax.dynamic_update_slice(
+            a, payloads[i][None, :], (rows[i], offs[i]))
+    return jax.lax.fori_loop(0, rows.shape[0], body, arena)
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _arena_gather(arena: jax.Array, rows: jax.Array, offs: jax.Array,
+                  nbytes: int) -> jax.Array:
+    """Batched get: fetch k same-size slices in one dispatch."""
+    def one(r, o):
+        return jax.lax.dynamic_slice(arena, (r, o), (1, nbytes))[0]
+    return jax.vmap(one)(rows, offs)
 
 
 # --------------------------------------------------------------------------
@@ -145,7 +247,174 @@ def team_poolid(team) -> int:
 
 
 # --------------------------------------------------------------------------
-# Host-plane one-sided ops
+# The non-blocking engine: epoch-scoped pending-op queue + coalesced flush
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(eq=False)
+class _PendingPut:
+    poolid: int
+    row: int
+    off: int
+    payload: jax.Array          # 1-D uint8, already byte-converted
+    handle: Handle
+
+
+@dataclasses.dataclass(eq=False)
+class _PendingGet:
+    poolid: int
+    row: int
+    off: int
+    nbytes: int
+    handle: GetHandle
+
+
+class CommEngine:
+    """Epoch-scoped pending-op queue over a heap-state holder.
+
+    ``holder`` is any object with a mutable ``state: HeapState``
+    attribute (normally the :class:`repro.core.runtime.DartContext`).
+    Ops enqueue with pointer translation + bounds checks done eagerly
+    (initiation, paper DTIT); ``flush`` closes the epoch by dispatching
+    coalesced runs and bumping ``epoch``.
+
+    Instrumentation:
+
+    * ``dispatch_count`` — jitted kernel launches issued by this engine
+      (the quantity the coalescing is meant to minimize).
+    * ``ops_enqueued`` / ``ops_coalesced`` — totals; ``ops_coalesced``
+      counts ops that shared a dispatch with at least one neighbour.
+    """
+
+    def __init__(self, holder=None):
+        self._holder = holder
+        self._pending: List = []        # program order across pools
+        self.epoch = 0
+        self.dispatch_count = 0
+        self.ops_enqueued = 0
+        self.ops_coalesced = 0
+
+    def bind(self, holder) -> None:
+        self._holder = holder
+
+    # -- enqueue (initiation) -------------------------------------------
+    def put(self, heap: SymmetricHeap, teams_by_slot, gptr: GlobalPtr,
+            value) -> Handle:
+        poolid, row, off = deref(heap, teams_by_slot, gptr)
+        payload = to_bytes(jnp.asarray(value))
+        if off + payload.size > heap.pools[poolid].pool_bytes:
+            raise ValueError("put overruns the target allocation's pool")
+        h = Handle((), engine=self)
+        h.poolid = poolid
+        self._pending.append(_PendingPut(poolid, row, off, payload, h))
+        self.ops_enqueued += 1
+        return h
+
+    def get(self, heap: SymmetricHeap, teams_by_slot, gptr: GlobalPtr,
+            shape: Tuple[int, ...], dtype) -> GetHandle:
+        poolid, row, off = deref(heap, teams_by_slot, gptr)
+        n = nbytes_of(shape, dtype)
+        if off + n > heap.pools[poolid].pool_bytes:
+            raise ValueError("get overruns the target allocation's pool")
+        h = GetHandle(shape, dtype, engine=self)
+        h.poolid = poolid
+        self._pending.append(_PendingGet(poolid, row, off, n, h))
+        self.ops_enqueued += 1
+        return h
+
+    def pending_ops(self, poolid: Optional[int] = None) -> int:
+        if poolid is None:
+            return len(self._pending)
+        return sum(1 for op in self._pending if op.poolid == poolid)
+
+    # -- flush (epoch close) --------------------------------------------
+    def flush(self, poolid: Optional[int] = None) -> HeapState:
+        """Dispatch pending ops (all, or one pool's) in program order.
+
+        Consecutive same-pool ops of the same kind and payload size are
+        coalesced into one batched jitted dispatch.  Ops on distinct
+        pools touch distinct arrays, so a per-pool flush cannot reorder
+        visible effects.
+        """
+        if poolid is None:
+            todo, rest = self._pending, []
+        else:
+            todo = [op for op in self._pending if op.poolid == poolid]
+            rest = [op for op in self._pending if op.poolid != poolid]
+        if not todo:
+            return self._holder.state
+        state = copy_state(self._holder.state)
+        for run in _coalesced_runs(todo):
+            pid = run[0].poolid
+            if isinstance(run[0], _PendingPut):
+                state[pid] = self._dispatch_put_run(state[pid], run)
+                for op in run:
+                    op.handle._resolve((state[pid],))
+            else:
+                self._dispatch_get_run(state[pid], run)
+        self._pending = rest
+        self._holder.state = state
+        self.epoch += 1
+        return state
+
+    def _dispatch_put_run(self, arena: jax.Array,
+                          run: Sequence[_PendingPut]) -> jax.Array:
+        self.dispatch_count += 1
+        if len(run) == 1:
+            op = run[0]
+            return _arena_write(arena, jnp.int32(op.row),
+                                jnp.int32(op.off), op.payload)
+        self.ops_coalesced += len(run)
+        rows = jnp.asarray([op.row for op in run], jnp.int32)
+        offs = jnp.asarray([op.off for op in run], jnp.int32)
+        payloads = jnp.stack([op.payload for op in run])
+        return _arena_scatter(arena, rows, offs, payloads)
+
+    def _dispatch_get_run(self, arena: jax.Array,
+                          run: Sequence[_PendingGet]) -> None:
+        self.dispatch_count += 1
+        if len(run) == 1:
+            op = run[0]
+            raw = _arena_read(arena, jnp.int32(op.row),
+                              jnp.int32(op.off), op.nbytes)
+            op.handle._resolve_value(
+                from_bytes(raw, op.handle.shape, op.handle.dtype))
+            return
+        self.ops_coalesced += len(run)
+        rows = jnp.asarray([op.row for op in run], jnp.int32)
+        offs = jnp.asarray([op.off for op in run], jnp.int32)
+        raws = _arena_gather(arena, rows, offs, run[0].nbytes)
+        for i, op in enumerate(run):
+            op.handle._resolve_value(
+                from_bytes(raws[i], op.handle.shape, op.handle.dtype))
+
+    def clear(self) -> None:
+        """Drop queued ops without dispatching (dart_exit teardown)."""
+        self._pending = []
+
+
+def _run_key(op) -> Tuple:
+    if isinstance(op, _PendingPut):
+        return ("put", op.poolid, int(op.payload.size))
+    return ("get", op.poolid, op.nbytes)
+
+
+def _coalesced_runs(ops: Sequence) -> List[List]:
+    """Split into maximal runs of consecutive same-key ops.  Keeping
+    runs in queue order preserves put/put and put/get program order
+    for overlapping addresses (last writer wins, reads see prior
+    writes), exactly like the blocking sequence."""
+    runs: List[List] = []
+    for op in ops:
+        if runs and _run_key(runs[-1][-1]) == _run_key(op):
+            runs[-1].append(op)
+        else:
+            runs.append([op])
+    return runs
+
+
+# --------------------------------------------------------------------------
+# Host-plane one-sided ops (immediate / functional path)
 # --------------------------------------------------------------------------
 
 
@@ -155,13 +424,15 @@ def dart_put(state: HeapState, heap: SymmetricHeap, teams_by_slot,
 
     Returns the updated heap state and a handle.  The write is issued
     immediately (async dispatch); completion = handle.wait()/test().
+    The engine-backed path in :mod:`repro.core.runtime` defers the
+    dispatch instead (queued → flush-coalesced).
     """
     poolid, row, off = deref(heap, teams_by_slot, gptr)
     payload = to_bytes(jnp.asarray(value))
     meta = heap.pools[poolid]
     if off + payload.size > meta.pool_bytes:
         raise ValueError("put overruns the target allocation's pool")
-    arena = _arena_write(state[poolid], jnp.uint32(row), jnp.uint32(off),
+    arena = _arena_write(state[poolid], jnp.int32(row), jnp.int32(off),
                          payload)
     new_state = dict(state)
     new_state[poolid] = arena
@@ -185,7 +456,7 @@ def dart_get(state: HeapState, heap: SymmetricHeap, teams_by_slot,
     meta = heap.pools[poolid]
     if off + n > meta.pool_bytes:
         raise ValueError("get overruns the target allocation's pool")
-    raw = _arena_read(state[poolid], jnp.uint32(row), jnp.uint32(off), n)
+    raw = _arena_read(state[poolid], jnp.int32(row), jnp.int32(off), n)
     value = from_bytes(raw, shape, dtype)
     return value, Handle((value,))
 

@@ -60,6 +60,10 @@ class DartContext:
         self.locks = LockService(self.atomics,
                                  tail_placement=config.lock_tail_placement)
         self.state: HeapState = {}
+        # epoch-scoped pending-op queue (onesided.CommEngine): dart_put/
+        # dart_get_nb enqueue here; dart_flush / handle.wait() dispatch
+        # coalesced batches against self.state.
+        self.engine = _os.CommEngine(holder=self)
         self._initialized = False
 
     # ------------------------------------------------------------------
@@ -114,6 +118,7 @@ def np_prod(shape) -> int:
 
 def dart_exit(ctx: DartContext) -> None:
     """Tear down (paper: ``dart_exit``)."""
+    ctx.engine.clear()
     ctx.state.clear()
     ctx.teams.clear()
     ctx.teams_by_slot.clear()
@@ -204,31 +209,86 @@ def dart_team_memfree(ctx: DartContext, teamid: int,
 
 
 # -- one-sided + collective conveniences bound to a context ------------------
+#
+# Non-blocking ops ENQUEUE on ctx.engine (initiation = translation +
+# bounds check only); dispatch happens at dart_flush / handle.wait() /
+# a blocking op on the same pool, coalescing queued ops into batched
+# jitted kernels (see onesided.py module docstring).
 
 def dart_put(ctx: DartContext, gptr: GlobalPtr, value):
-    ctx.state, h = _os.dart_put(ctx.state, ctx.heap, ctx.teams_by_slot,
-                                gptr, value)
-    return h
+    """Non-blocking put: enqueue on the engine, return a queued handle."""
+    return ctx.engine.put(ctx.heap, ctx.teams_by_slot, gptr, value)
 
 
 def dart_put_blocking(ctx: DartContext, gptr: GlobalPtr, value) -> None:
-    ctx.state = _os.dart_put_blocking(ctx.state, ctx.heap,
-                                      ctx.teams_by_slot, gptr, value)
+    """Blocking put: enqueue + flush + local/remote completion."""
+    h = ctx.engine.put(ctx.heap, ctx.teams_by_slot, gptr, value)
+    h.wait()
+
+
+def dart_get_nb(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
+    """Non-blocking get: enqueue; ``handle.value()`` flushes and yields
+    the typed result.  Consecutive same-size gets coalesce at flush."""
+    return ctx.engine.get(ctx.heap, ctx.teams_by_slot, gptr, shape, dtype)
 
 
 def dart_get(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
-    return _os.dart_get(ctx.state, ctx.heap, ctx.teams_by_slot, gptr,
-                        shape, dtype)
+    """Issue-immediately get: returns (value-future, handle).
+
+    Flushes the target pool (queued puts become visible — read-after-
+    write ordering), then dispatches the read; the value is an XLA
+    async future, the handle completes when it is ready.
+    """
+    h = ctx.engine.get(ctx.heap, ctx.teams_by_slot, gptr, shape, dtype)
+    ctx.engine.flush(h.poolid)
+    return h._value, h
 
 
 def dart_get_blocking(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
-    return _os.dart_get_blocking(ctx.state, ctx.heap, ctx.teams_by_slot,
-                                 gptr, shape, dtype)
+    """Blocking get, locality-routed.
+
+    SHM_LOCAL targets (FLAG_SHM pointer + host-visible arena) bypass
+    XLA entirely: the queued ops on the pool are flushed and the bytes
+    are read through the zero-copy view — no jitted dispatch.  Remote
+    targets take the engine's jitted gather path.
+    """
+    from . import shm as _shm
+    if _shm.classify_locality(ctx, gptr) is _shm.Locality.SHM_LOCAL:
+        poolid, _, _ = _os.deref(ctx.heap, ctx.teams_by_slot, gptr)
+        ctx.engine.flush(poolid)
+        return _shm.dart_shm_view(ctx, gptr, shape, dtype)
+    h = ctx.engine.get(ctx.heap, ctx.teams_by_slot, gptr, shape, dtype)
+    return h.value()
+
+
+def dart_flush(ctx: DartContext, gptr: Optional[GlobalPtr] = None) -> None:
+    """Close the epoch (the ``MPI_Win_flush`` analogue): dispatch all
+    pending ops — or only those against ``gptr``'s pool — as coalesced
+    batches.  Completion of individual handles still goes through
+    ``dart_wait``/``dart_test``."""
+    if gptr is None:
+        ctx.engine.flush()
+    else:
+        poolid, _, _ = _os.deref(ctx.heap, ctx.teams_by_slot, gptr)
+        ctx.engine.flush(poolid)
 
 
 def dart_bcast(ctx: DartContext, root_gptr: GlobalPtr, nbytes: int):
     ctx.state, h = _coll.dart_bcast(ctx.state, ctx.heap, ctx.teams_by_slot,
-                                    root_gptr, nbytes)
+                                    root_gptr, nbytes, engine=ctx.engine)
+    return h
+
+
+def dart_gather(ctx: DartContext, gptr: GlobalPtr, per_unit_nbytes: int):
+    out, h = _coll.dart_gather(ctx.state, ctx.heap, ctx.teams_by_slot,
+                               gptr, per_unit_nbytes, engine=ctx.engine)
+    return out, h
+
+
+def dart_scatter(ctx: DartContext, gptr: GlobalPtr, values):
+    ctx.state, h = _coll.dart_scatter(ctx.state, ctx.heap,
+                                      ctx.teams_by_slot, gptr, values,
+                                      engine=ctx.engine)
     return h
 
 
@@ -236,9 +296,10 @@ def dart_allreduce(ctx: DartContext, gptr: GlobalPtr, shape, dtype,
                    op: str = "sum"):
     ctx.state, red = _coll.dart_allreduce(ctx.state, ctx.heap,
                                           ctx.teams_by_slot, gptr, shape,
-                                          dtype, op)
+                                          dtype, op, engine=ctx.engine)
     return red
 
 
 def dart_barrier(ctx: DartContext) -> None:
+    ctx.engine.flush()
     _coll.dart_barrier(ctx.state)

@@ -21,6 +21,7 @@ paper's "a lot more efficient for small messages" expectation.
 
 from __future__ import annotations
 
+import enum
 from typing import Tuple
 
 import jax
@@ -29,6 +30,27 @@ import numpy as np
 from .globmem import nbytes_of
 from .gptr import FLAG_COLLECTIVE, FLAG_SHM, GlobalPtr
 from .onesided import deref
+
+
+class Locality(enum.Enum):
+    """Where a deref'd target can be serviced (paper §VI routing)."""
+    SHM_LOCAL = "shm_local"     # zero-copy host view, no jitted dispatch
+    REMOTE = "remote"           # jitted arena dynamic-slice dispatch
+
+
+def classify_locality(ctx, gptr: GlobalPtr) -> Locality:
+    """Locality classifier used on deref by the runtime's get path.
+
+    A target is SHM_LOCAL when its pointer was minted by
+    ``dart_team_memalloc_shared`` (FLAG_SHM) *and* the backing arena is
+    host-visible on this controller (CPU backend, or same-host HBM via
+    dlpack).  Everything else takes the jitted one-sided path.
+    """
+    if not gptr.is_shm:
+        return Locality.REMOTE
+    if not shm_supported(ctx):
+        return Locality.REMOTE
+    return Locality.SHM_LOCAL
 
 
 def dart_team_memalloc_shared(ctx, teamid: int,
@@ -67,9 +89,21 @@ def dart_shm_view(ctx, gptr: GlobalPtr, shape: Tuple[int, ...],
 
 
 def shm_supported(ctx) -> bool:
-    """True when the current backend exposes host-visible arenas."""
+    """True when the current backend exposes host-visible arenas.
+
+    Probed once per context and cached — the classifier sits on the
+    hot get path, so the dlpack probe must not re-run per deref.
+    """
+    cached = getattr(ctx, "_shm_supported", None)
+    if cached is not None:
+        return cached
     try:
         np.from_dlpack(next(iter(ctx.state.values())))
-        return True
+        ok = True
     except Exception:   # noqa: BLE001
-        return False
+        ok = False
+    try:
+        ctx._shm_supported = ok
+    except AttributeError:      # holder without attribute support
+        pass
+    return ok

@@ -13,13 +13,13 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 
 from repro.kernels.ops import (make_rdma_put, make_ring_all_gather,
                                make_ring_reduce_scatter)
 
 N = 8
-mesh = jax.make_mesh((N,), ("unit",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((N,), ("unit",))
 
 SHAPES = [(8, 128), (16, 256), (5, 128), (32, 512)]
 DTYPES = [jnp.float32, jnp.bfloat16, jnp.int32]

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (ALIGNMENT, BlockAllocator, OutOfGlobalMemory,
                         SymmetricHeap, align_up, from_bytes, nbytes_of,

@@ -1,7 +1,7 @@
 """Unit + property tests for gptr/group/team (paper §III, §IV.B.1/2/4)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (DART_GPTR_NULL, GlobalPtr, DartGroup, FreeListTeamList,
                         Team, TeamList, TeamListFullError, TeamPartition,

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (DART_TEAM_ALL, DartConfig, GlobalPtr, dart_exit,
                         dart_get, dart_get_blocking, dart_init,

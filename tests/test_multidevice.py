@@ -14,6 +14,8 @@ import pytest
 HERE = pathlib.Path(__file__).parent
 SRC = str(HERE.parent / "src")
 
+pytestmark = pytest.mark.multidevice
+
 
 def run_script(name, timeout=600):
     env = dict(os.environ)

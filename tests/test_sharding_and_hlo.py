@@ -55,7 +55,7 @@ def test_sized_spec_fsdp_embed():
     assert spec == P(None, "model")
 
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 LOGICAL = [None, "embed", "vocab", "q_heads", "kv_heads", "mlp",
            "experts", "batch", "seq", "layers"]
