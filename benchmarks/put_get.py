@@ -17,6 +17,10 @@ Mirrors §V of the paper:
   non-blocking on Cray XE6; ours is µs-scale because the per-call cost
   is Python dispatch rather than a C library call — same model, shifted
   constant; see EXPERIMENTS.md §Paper-repro).
+* `typed_api` series — the typed GlobalArray front-end (docs/API.md)
+  vs the raw `dart_put`/`dart_get` byte API, blocking and coalesced
+  non-blocking, with the same constant-overhead model fit applied to
+  the layering cost.
 """
 
 from __future__ import annotations
@@ -241,6 +245,84 @@ def run(report: Report, *, full: bool = False, repeats: int = 20,
             report.add(f"shm_fastpath/{nbytes}B", tr.mean_us,
                        f"jitted_get={tg.mean_us:.3f}us "
                        f"speedup={tg.mean_us / tr.mean_us:.1f}x")
+
+    # --- typed GlobalArray front-end vs the raw byte API ----------------
+    # The DASH-over-DART layering cost: same substrate ops underneath,
+    # so t_typed(m) - t_raw(m) should be the constant per-call translation
+    # overhead (the §V.C model applied one layer up).  `shm=False` keeps
+    # the typed get on the jitted path so both sides pay the same kernel.
+    dst = 1
+    typed_sizes = [64, 4096] if quick else [64, 4096, 65536]
+    t_typed_put, t_raw_put = [], []
+    t_typed_get, t_raw_get = [], []
+    for nbytes in typed_sizes:
+        n = nbytes // 4
+        ga = ctx.alloc((n,), jnp.float32, shm=False)
+        gp_raw = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, nbytes)
+        ptr_raw = gp_raw.setunit(dst)
+        val = jnp.arange(n, dtype=jnp.float32)
+        ref = ga[dst]
+
+        def typed_put_block():
+            ref.put(val)
+
+        def raw_put_block():
+            rt.dart_put_blocking(ctx, ptr_raw, val)
+
+        td = time_call(typed_put_block, repeats=repeats)
+        tr = time_call(raw_put_block, repeats=repeats)
+        t_typed_put.append(td.mean_us)
+        t_raw_put.append(tr.mean_us)
+        report.add(f"typed_api/put/{nbytes}B", td.mean_us,
+                   f"raw={tr.mean_us:.3f}us "
+                   f"overhead={td.mean_us - tr.mean_us:.3f}us")
+
+        def typed_get_block():
+            ref.get()
+
+        def raw_get_block():
+            rt.dart_get_blocking(ctx, ptr_raw, (n,), jnp.float32)
+
+        td = time_call(typed_get_block, repeats=repeats)
+        tr = time_call(raw_get_block, repeats=repeats)
+        t_typed_get.append(td.mean_us)
+        t_raw_get.append(tr.mean_us)
+        report.add(f"typed_api/get/{nbytes}B", td.mean_us,
+                   f"raw={tr.mean_us:.3f}us "
+                   f"overhead={td.mean_us - tr.mean_us:.3f}us")
+
+        # coalesced non-blocking: N typed put_nb in one epoch vs the raw
+        # enqueue + flush — both must land in ONE batched dispatch.
+        def typed_coalesced():
+            with ctx.epoch():
+                for u in range(COALESCE_N):
+                    ga[u % N_UNITS].put_nb(val)
+
+        def raw_coalesced():
+            hs = [rt.dart_put(ctx, gp_raw.setunit(u % N_UNITS), val)
+                  for u in range(COALESCE_N)]
+            rt.dart_flush(ctx)
+            dart_waitall(hs)
+
+        d0 = ctx.engine.dispatch_count
+        typed_coalesced()
+        assert ctx.engine.dispatch_count - d0 == 1, \
+            "typed epoch must flush as one dispatch"
+        tt = time_call(typed_coalesced, repeats=repeats)
+        tc = time_call(raw_coalesced, repeats=repeats)
+        report.add(f"typed_api/put_nb_coalesced/{nbytes}B/{COALESCE_N}ops",
+                   tt.mean_us,
+                   f"raw={tc.mean_us:.3f}us "
+                   f"overhead={tt.mean_us - tc.mean_us:.3f}us")
+        ga.free()
+        rt.dart_team_memfree(ctx, DART_TEAM_ALL, gp_raw)
+
+    for kind, td, tr in (("put", t_typed_put, t_raw_put),
+                         ("get", t_typed_get, t_raw_get)):
+        c, se = fit_constant_overhead(typed_sizes, td, tr)
+        fits[f"typed/{kind}"] = (c, se)
+        report.add(f"typed_api/overhead_fit/{kind}", c,
+                   f"stderr={se:.3f}us (model t_typed-t_raw=c)")
 
     dart_exit(ctx)
     return fits

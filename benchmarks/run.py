@@ -7,6 +7,8 @@ benchmarks/out/*.csv.  Mapping to the paper:
 
     put_get    — figs 8/9 (DTCT), 10/11 (DTIT), 12–15 (bandwidth),
                  + the §V.C constant-overhead model fit
+                 + the typed_api series (GlobalArray front-end vs raw
+                 byte API; runs in --quick too)
     collective — §IV.B.5 collectives overhead
     lock       — §IV.B.6 MCS lock + §VI balanced-tail comparison
     teamlist   — §IV.B.2 slot allocator + §VI O(1) variant

@@ -1,78 +1,66 @@
 """Classic PGAS application: 1-D heat diffusion with one-sided halo
-exchange (the pattern DART/DASH was built for).
+exchange (the pattern DART/DASH was built for) — on the typed
+GlobalArray front-end (docs/API.md).
 
 Each of 8 units owns a block of the rod; every step it PUTs its edge
 cells into its neighbours' halo slots (one-sided — neighbours don't
-participate), then applies the stencil locally.  Result is checked
+participate), then applies the stencil locally.  The halo array is a
+``ctx.alloc((2,), float32)``: element 0 is a unit's *left* halo,
+element 1 its *right* halo — no byte offsets, no to_bytes/from_bytes.
+
+Per step the runtime does exactly TWO jitted dispatches: every edge
+put of the epoch coalesces into one batched scatter, and the typed
+``ga.gather()`` reads all halos back in one gather.  Result is checked
 against a single-device dense reference.
 
     PYTHONPATH=src python examples/halo_exchange.py
 """
 
-import os
-
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                           + os.environ.get("XLA_FLAGS", ""))
-
-import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro.compat import make_mesh, shard_map
-from repro.core.onesided import shmem_halo_exchange
-from repro.core.globmem import from_bytes
+from repro.core import DartConfig, dart_exit, dart_init
 
 N_UNITS = 8
 LOCAL = 32                      # cells per unit
 ALPHA = 0.1
 STEPS = 50
 
-mesh = make_mesh((N_UNITS,), ("unit",))
+LEFT, RIGHT = 0, 1              # element slots in the halo array
 
-# arena layout per unit: [left_halo (4B) | right_halo (4B)]
-LEFT_OFF, RIGHT_OFF = 0, 128
-POOL = 256
-
-
-def step_body(u, arena_row):
-    """One diffusion step for this unit's block (SPMD)."""
-    left_edge = u[:1]            # what the left neighbour needs
-    right_edge = u[-1:]
-    arena_row = shmem_halo_exchange(
-        arena_row, left_edge, right_edge, LEFT_OFF, RIGHT_OFF,
-        "unit", N_UNITS, wrap=False)
-    lh = from_bytes(jax.lax.dynamic_slice(arena_row, (0, LEFT_OFF),
-                                          (1, 4))[0], (1,), jnp.float32)
-    rh = from_bytes(jax.lax.dynamic_slice(arena_row, (0, RIGHT_OFF),
-                                          (1, 4))[0], (1,), jnp.float32)
-    # boundary units keep their edge value (insulated ends)
-    idx = jax.lax.axis_index("unit")
-    lh = jnp.where(idx == 0, u[:1], lh)
-    rh = jnp.where(idx == N_UNITS - 1, u[-1:], rh)
-    padded = jnp.concatenate([lh, u, rh])
-    new_u = u + ALPHA * (padded[:-2] - 2 * u + padded[2:])
-    return new_u, arena_row
-
-
-def run(u0):
-    def body(carry, _):
-        u, arena = carry
-        u, arena = step_body(u, arena)
-        return (u, arena), None
-
-    arena0 = jnp.zeros((1, POOL), jnp.uint8)
-    (u, _), _ = jax.lax.scan(body, (u0, arena0), None, length=STEPS)
-    return u
-
-
-spmd = jax.jit(shard_map(run, mesh=mesh, in_specs=P("unit"),
-                             out_specs=P("unit"), check_vma=False))
+ctx = dart_init(n_units=N_UNITS, config=DartConfig())
+halo = ctx.alloc((2,), jnp.float32)
 
 # initial condition: a hot spike in the middle
 x0 = np.zeros(N_UNITS * LOCAL, np.float32)
 x0[len(x0) // 2 - 4:len(x0) // 2 + 4] = 100.0
-result = np.asarray(spmd(jnp.asarray(x0)))
+blocks = x0.reshape(N_UNITS, LOCAL).copy()
+
+dispatches0 = ctx.engine.dispatch_count
+for _ in range(STEPS):
+    # one-sided halo exchange: each unit puts its edges into its
+    # neighbours' halo slots; the epoch close coalesces all 14 puts
+    # into a single jitted dispatch.
+    with ctx.epoch():
+        for u in range(N_UNITS):
+            if u > 0:
+                halo.at[u - 1, RIGHT].put_nb(blocks[u, 0])
+            if u < N_UNITS - 1:
+                halo.at[u + 1, LEFT].put_nb(blocks[u, -1])
+    halos = np.asarray(halo.gather())          # (N_UNITS, 2), one dispatch
+    # local stencil update (insulated ends: boundary units reuse their
+    # own edge value as the missing halo)
+    lh = np.where(np.arange(N_UNITS) == 0, blocks[:, 0], halos[:, LEFT])
+    rh = np.where(np.arange(N_UNITS) == N_UNITS - 1, blocks[:, -1],
+                  halos[:, RIGHT])
+    padded = np.concatenate([lh[:, None], blocks, rh[:, None]], axis=1)
+    blocks = blocks + ALPHA * (padded[:, :-2] - 2 * blocks + padded[:, 2:])
+
+result = blocks.reshape(-1)
+n_dispatch = ctx.engine.dispatch_count - dispatches0
+print(f"{STEPS} steps -> {n_dispatch} jitted dispatches "
+      f"({n_dispatch / STEPS:.0f}/step: 1 coalesced put + 1 gather)")
+assert n_dispatch == 2 * STEPS
 
 # dense single-device reference
 ref = x0.copy()
@@ -86,3 +74,4 @@ assert err < 1e-4, "halo exchange diverged from the dense reference"
 print("OK — one-sided halo exchange matches the dense stencil.")
 print("temperature profile (coarse):",
       np.round(result.reshape(N_UNITS, LOCAL).mean(axis=1), 2))
+dart_exit(ctx)

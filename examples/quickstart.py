@@ -1,9 +1,12 @@
-"""DART-JAX quickstart: the PGAS runtime in 60 lines.
+"""DART-JAX quickstart: the PGAS runtime in 60 lines — typed edition.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Covers the five DART API areas (paper §III): init/exit, teams+groups,
-global memory, one-sided communication, synchronization.
+Covers the five DART API areas (paper §III) through the typed
+GlobalArray front-end (docs/API.md): init/exit, teams+groups, global
+memory, one-sided communication, synchronization.  No byte offsets, no
+to_bytes/from_bytes — the raw ``dart_*`` substrate stays available one
+layer down.
 """
 
 import threading
@@ -11,12 +14,9 @@ import threading
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DART_TEAM_ALL, DartConfig, dart_allreduce,
-                        dart_barrier, dart_exit, dart_flush,
-                        dart_get_blocking, dart_get_nb, dart_init,
-                        dart_memalloc, dart_put, dart_put_blocking,
-                        dart_team_create, dart_team_memalloc_aligned,
-                        dart_team_myid, dart_waitall, group_from_units)
+from repro.core import (DART_TEAM_ALL, DartConfig, dart_barrier, dart_exit,
+                        dart_init, dart_team_create, dart_team_myid,
+                        group_from_units)
 
 # 1. initialize a runtime with 8 units -----------------------------------
 ctx = dart_init(n_units=8, config=DartConfig())
@@ -28,37 +28,37 @@ team = dart_team_create(ctx, DART_TEAM_ALL, evens)
 print("unit 4 has relative id", dart_team_myid(ctx, team, 4),
       "in the even team")
 
-# 3. global memory: collective aligned allocation ------------------------
-gptr = dart_team_memalloc_aligned(ctx, team, 1024)
-print(f"collective gptr: unit={gptr.unitid} seg={gptr.segid} "
-      f"addr={gptr.addr} (same offset valid on every member)")
+# 3. global memory: typed collective allocation --------------------------
+# 8 float32 per member — shape/dtype bookkeeping lives on the array,
+# not on the caller (the substrate's byte offsets never appear).
+ga = ctx.alloc((8,), jnp.float32, team=team)
+print(f"GlobalArray: shape={ga.shape} dtype={ga.dtype} units={ga.units}")
 
 # 4. one-sided communication ---------------------------------------------
-# blocking put to unit 6's partition, then get it back
-dart_put_blocking(ctx, gptr.setunit(6), jnp.arange(8, dtype=jnp.float32))
-out = dart_get_blocking(ctx, gptr.setunit(6), (8,), jnp.float32)
-print("roundtrip:", np.asarray(out))
+# blocking put to unit 6's block, then get it back
+ga[6].put(jnp.arange(8, dtype=jnp.float32))
+print("roundtrip:", np.asarray(ga[6].get()))
 
-# non-blocking puts + waitall: the puts queue on the engine and the
-# waitall flushes them as ONE coalesced jitted dispatch
+# non-blocking puts inside an epoch: the puts queue on the engine and
+# the epoch close flushes them as ONE coalesced jitted dispatch
 d0 = ctx.engine.dispatch_count
-handles = [dart_put(ctx, gptr.setunit(u) + 64,
-                    jnp.full((4,), float(u), jnp.float32))
-           for u in evens.members]
-dart_waitall(handles)
+with ctx.epoch():
+    handles = [ga.at[u, 4:8].put_nb(jnp.full((4,), float(u)))
+               for u in ga.units]
 print(f"coalesced {len(handles)} puts into "
       f"{ctx.engine.dispatch_count - d0} dispatch(es)")
 
-# non-blocking gets: enqueue, flush once, then read the values
-gets = [dart_get_nb(ctx, gptr.setunit(u) + 64, (4,), jnp.float32)
-        for u in evens.members]
-dart_flush(ctx)
+# non-blocking gets: enqueue, then value() flushes the epoch once
+gets = {u: ga.at[u, 4:8].get_nb() for u in ga.units}
 assert all(float(np.asarray(h.value())[0]) == float(u)
-           for h, u in zip(gets, evens.members))
+           for u, h in gets.items())
 
-# collective: allreduce the 4 floats each member just wrote
-red = dart_allreduce(ctx, gptr + 64, (4,), jnp.float32, op="sum")
-print("allreduce(sum):", np.asarray(red))       # 0+2+4+6 = 12
+# collective: allreduce the blocks the members just wrote
+print("allreduce(sum):", np.asarray(ga.allreduce("sum")[4:8]))  # 0+2+4+6
+
+# zero-copy local view: routed through the locality classifier — on
+# host-visible arenas this is a numpy view with zero jitted dispatches
+print("local view:", np.asarray(ga.local[4:8]))
 
 # 5. synchronization: the MCS queueing lock (paper §IV.B.6) --------------
 lock = ctx.locks.create_lock(ctx.teams[DART_TEAM_ALL])

@@ -1,11 +1,17 @@
 """DART-JAX core: the paper's PGAS runtime (DART-MPI, §III/§IV) on JAX.
 
-Public API surface mirrors the DART specification: initialization,
-team/group management, synchronization, global memory management, and
-communication (one-sided + collective).
+Two layers (docs/API.md):
+
+* the **byte-offset substrate** mirroring the DART specification —
+  initialization, team/group management, synchronization, global memory
+  management, and communication (one-sided + collective) over raw
+  128-bit global pointers;
+* the **typed front-end** — :class:`GlobalArray` / :class:`GlobalRef`
+  minted by ``ctx.alloc`` / ``Team.alloc``, which hides byte offsets,
+  ``to_bytes``/``from_bytes``, and unit arithmetic entirely.
 """
 
-from .gptr import (ADDR_MAX, DART_GPTR_NULL, FLAG_COLLECTIVE,
+from .gptr import (ADDR_MAX, DART_GPTR_NULL, FLAG_COLLECTIVE, FLAG_SHM,
                    NON_COLLECTIVE_SEG, GlobalPtr)
 from .group import (DartGroup, dart_group_addmember, dart_group_copy,
                     dart_group_delmember, dart_group_init,
@@ -27,16 +33,61 @@ from .collectives import (team_all_gather, team_all_to_all, team_barrier,
 from .atomics import AtomicsProvider, Cell, ThreadedAtomics
 from .lock import FREE, DartLock, LockService
 from .shm import (Locality, classify_locality, dart_shm_view,
-                  dart_team_memalloc_shared, shm_supported)
+                  dart_team_memalloc_shared, mint_shm, shm_supported)
 from .atomic_ops import (HeapAtomicsProvider, dart_compare_and_swap,
                          dart_fetch_and_add, dart_fetch_and_store)
 from .runtime import (DartConfig, DartContext, dart_allreduce, dart_barrier,
                       dart_bcast, dart_exit, dart_flush, dart_gather,
-                      dart_get, dart_get_blocking, dart_get_nb, dart_init,
-                      dart_memalloc, dart_memfree, dart_put,
-                      dart_put_blocking, dart_scatter, dart_team_create,
+                      dart_gather_typed, dart_get, dart_get_blocking,
+                      dart_get_nb, dart_init, dart_memalloc, dart_memfree,
+                      dart_put, dart_put_blocking, dart_scatter,
+                      dart_scatter_typed, dart_team_create,
                       dart_team_destroy, dart_team_get_group,
                       dart_team_memalloc_aligned, dart_team_memfree,
                       dart_team_myid, dart_team_size, dart_team_split)
+from .array import GlobalArray, GlobalRef
 
-__all__ = [n for n in dir() if not n.startswith("_")]
+# Curated public surface (no dir()-scraping: scraping re-exported the
+# submodule names bound by the imports above, leaking e.g. ``gptr`` and
+# ``runtime`` as if they were API and hiding the real surface).
+__all__ = [
+    # typed front-end
+    "GlobalArray", "GlobalRef",
+    # global pointers
+    "ADDR_MAX", "DART_GPTR_NULL", "FLAG_COLLECTIVE", "FLAG_SHM",
+    "NON_COLLECTIVE_SEG", "GlobalPtr",
+    # groups
+    "DartGroup", "dart_group_addmember", "dart_group_copy",
+    "dart_group_delmember", "dart_group_init", "dart_group_intersect",
+    "dart_group_split", "dart_group_union", "group_from_units",
+    # teams
+    "DART_TEAM_ALL", "EMPTY_SLOT", "FreeListTeamList", "Team", "TeamList",
+    "TeamListFullError", "TeamPartition",
+    # global memory
+    "ALIGNMENT", "BlockAllocator", "HeapState", "OutOfGlobalMemory",
+    "SymmetricHeap", "TranslationRecord", "TranslationTable", "align_up",
+    "copy_state", "from_bytes", "nbytes_of", "to_bytes",
+    # one-sided engine + handles
+    "CommEngine", "GetHandle", "Handle", "dart_test", "dart_testall",
+    "dart_wait", "dart_waitall", "deref", "shmem_get", "shmem_get_dynamic",
+    "shmem_halo_exchange", "shmem_put",
+    # collectives
+    "dart_gather_typed", "dart_scatter_typed", "team_all_gather",
+    "team_all_to_all", "team_barrier", "team_broadcast", "team_pmax",
+    "team_psum", "team_reduce_scatter",
+    # atomics + locks
+    "AtomicsProvider", "Cell", "ThreadedAtomics", "HeapAtomicsProvider",
+    "dart_compare_and_swap", "dart_fetch_and_add", "dart_fetch_and_store",
+    "FREE", "DartLock", "LockService",
+    # shared-memory windows
+    "Locality", "classify_locality", "dart_shm_view",
+    "dart_team_memalloc_shared", "mint_shm", "shm_supported",
+    # runtime
+    "DartConfig", "DartContext", "dart_allreduce", "dart_barrier",
+    "dart_bcast", "dart_exit", "dart_flush", "dart_gather", "dart_get",
+    "dart_get_blocking", "dart_get_nb", "dart_init", "dart_memalloc",
+    "dart_memfree", "dart_put", "dart_put_blocking", "dart_scatter",
+    "dart_team_create", "dart_team_destroy", "dart_team_get_group",
+    "dart_team_memalloc_aligned", "dart_team_memfree", "dart_team_myid",
+    "dart_team_size", "dart_team_split",
+]

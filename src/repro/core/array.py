@@ -1,0 +1,342 @@
+"""Typed GlobalArray front-end: a DASH-style object API over the
+byte-offset DART core (docs/API.md).
+
+The paper's DART API is deliberately C-flavored — raw 128-bit global
+pointers, byte offsets, untyped put/get.  The PGAS promise ("program it
+like shared memory") is delivered by the typed layer built on top, as
+DASH does over DART.  :class:`GlobalArray` is that layer:
+
+* minted by ``ctx.alloc(shape, dtype, team=...)`` / ``Team.alloc`` —
+  one collective symmetric allocation, one block of ``shape`` elements
+  of ``dtype`` per team member, byte layout never exposed;
+* addressed NumPy-style: ``ga[unit]`` is a typed :class:`GlobalRef`
+  view of that member's block, ``ga.at[unit, 3:7]`` a contiguous
+  element run inside it, each supporting ``.put/.get`` (blocking) and
+  ``.put_nb/.get_nb`` (engine-queued, coalescing at flush);
+* collective ops are typed too: ``ga.allreduce("sum")``,
+  ``ga.broadcast(root)``, ``ga.gather()``, ``ga.scatter(values)``;
+* ``ga.local`` reads this controller's portion through the
+  ``FLAG_SHM`` / :func:`repro.core.shm.classify_locality` fast path —
+  a zero-copy, zero-dispatch numpy view on host-visible arenas.
+
+Every data-plane op lowers onto the existing :class:`CommEngine`
+enqueue path — never around it — so N typed non-blocking puts still
+coalesce into one jitted dispatch, and ``with ctx.epoch(): ...``
+(→ :meth:`CommEngine.epoch_scope`) preserves the paper's
+queued→issued→complete ladder.  The raw ``dart_*`` byte API remains
+the documented substrate layer underneath (docs/API.md has the
+migration table).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .globmem import nbytes_of
+from .gptr import GlobalPtr
+from .team import DART_TEAM_ALL
+
+Index = Union[int, slice, Tuple[Union[int, slice], ...]]
+
+
+def _element_run(shape: Tuple[int, ...], index: Index
+                 ) -> Tuple[int, Tuple[int, ...]]:
+    """Translate a NumPy-style index on ``shape`` (row-major) into a
+    *contiguous* element run: ``(element_offset, out_shape)``.
+
+    Contiguity rule: leading integer indices, then at most one step-1
+    slice, then only full slices — anything else (strided slice,
+    integer/partial slice after a slice) would address a gather, which
+    the byte substrate does not express as one run.
+    """
+    if not isinstance(index, tuple):
+        index = (index,)
+    if len(index) > len(shape):
+        raise IndexError(f"too many indices for shape {shape}")
+    strides = [1] * len(shape)
+    for ax in range(len(shape) - 2, -1, -1):
+        strides[ax] = strides[ax + 1] * shape[ax + 1]
+    offset = 0
+    out_shape = []
+    sliced = False
+    for ax, idx in enumerate(index):
+        extent = shape[ax]
+        if isinstance(idx, (int, np.integer)):
+            if sliced:
+                raise IndexError(
+                    "integer index after a slice is non-contiguous")
+            i = int(idx)
+            if i < 0:
+                i += extent
+            if not (0 <= i < extent):
+                raise IndexError(
+                    f"index {idx} out of range for axis {ax} (size {extent})")
+            offset += i * strides[ax]
+        elif isinstance(idx, slice):
+            start, stop, step = idx.indices(extent)
+            if step != 1:
+                raise IndexError("only step-1 slices address a "
+                                 "contiguous run")
+            if sliced:
+                if (start, stop) != (0, extent):
+                    raise IndexError(
+                        "partial slice after a slice is non-contiguous")
+                out_shape.append(extent)
+            else:
+                offset += start * strides[ax]
+                out_shape.append(max(stop - start, 0))
+                # ANY slice (full or partial) starts the run's tail: a
+                # later integer or partial slice would select a column /
+                # strided block, which is not one contiguous run.
+                sliced = True
+        else:
+            raise TypeError(f"unsupported index {idx!r}")
+    out_shape.extend(shape[len(index):])
+    return offset, tuple(out_shape)
+
+
+class GlobalRef:
+    """A typed reference to one contiguous element run on one unit.
+
+    Immutable and cheap: holds (array, unit, element offset, shape).
+    Data ops translate to engine ops on the underlying byte pointer —
+    the translation the raw API forces every caller to hand-roll.
+    """
+
+    __slots__ = ("array", "unit", "offset", "shape")
+
+    def __init__(self, array: "GlobalArray", unit: int, offset: int,
+                 shape: Tuple[int, ...]):
+        self.array = array
+        self.unit = unit
+        self.offset = offset
+        self.shape = shape
+
+    @property
+    def dtype(self):
+        return self.array.dtype
+
+    @property
+    def gptr(self) -> GlobalPtr:
+        """The substrate-layer byte pointer this ref denotes."""
+        return (self.array.gptr.setunit(self.unit)
+                .incaddr(self.offset * self.array.itemsize))
+
+    def __getitem__(self, index: Index) -> "GlobalRef":
+        off, shp = _element_run(self.shape, index)
+        return GlobalRef(self.array, self.unit, self.offset + off, shp)
+
+    def _coerce(self, value) -> jax.Array:
+        v = jnp.asarray(value, dtype=self.dtype)
+        if v.shape == self.shape:
+            return v
+        if v.ndim == 0:
+            return jnp.broadcast_to(v, self.shape)
+        if v.size == int(np.prod(self.shape, dtype=np.int64)):
+            return v.reshape(self.shape)
+        raise ValueError(
+            f"value of shape {v.shape} does not fit ref of shape "
+            f"{self.shape}")
+
+    # -- data plane (lowers onto the CommEngine, never around it) --------
+    def put(self, value) -> None:
+        """Blocking put (enqueue + flush + completion)."""
+        from . import runtime as rt
+        rt.dart_put_blocking(self.array.ctx, self.gptr, self._coerce(value))
+
+    def put_nb(self, value):
+        """Non-blocking put: queued on the engine; coalesces with its
+        neighbours at the next epoch close.  Returns the Handle."""
+        from . import runtime as rt
+        return rt.dart_put(self.array.ctx, self.gptr, self._coerce(value))
+
+    def get(self) -> jax.Array:
+        """Blocking get, locality-routed (zero-copy on SHM_LOCAL)."""
+        from . import runtime as rt
+        return rt.dart_get_blocking(self.array.ctx, self.gptr, self.shape,
+                                    self.dtype)
+
+    def get_nb(self):
+        """Non-blocking get: queued; ``handle.value()`` flushes and
+        yields the typed result."""
+        from . import runtime as rt
+        return rt.dart_get_nb(self.array.ctx, self.gptr, self.shape,
+                              self.dtype)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"GlobalRef(unit={self.unit}, offset={self.offset}, "
+                f"shape={self.shape}, dtype={self.dtype})")
+
+
+class _AtIndexer:
+    """``ga.at[unit, <element index>]`` → :class:`GlobalRef`."""
+
+    __slots__ = ("_array",)
+
+    def __init__(self, array: "GlobalArray"):
+        self._array = array
+
+    def __getitem__(self, key) -> GlobalRef:
+        if isinstance(key, tuple):
+            unit, index = key[0], key[1:]
+        else:
+            unit, index = key, ()
+        return self._array[unit][index]
+
+
+class GlobalArray:
+    """A typed, team-distributed array over one symmetric allocation.
+
+    Each member of ``team`` owns one block of ``shape`` elements of
+    ``dtype`` at the same offset in the team pool (aligned & symmetric,
+    paper §III) — so any unit's block is addressable from a locally
+    computed pointer, which is exactly what :class:`GlobalRef` hides.
+    """
+
+    def __init__(self, ctx, gptr: GlobalPtr, shape: Sequence[int], dtype,
+                 teamid: int):
+        self.ctx = ctx
+        self.gptr = gptr
+        self.shape = tuple(int(s) for s in shape)
+        self.dtype = jnp.dtype(dtype)
+        self.teamid = teamid
+
+    # -- allocation ------------------------------------------------------
+    @classmethod
+    def alloc(cls, ctx, shape: Sequence[int], dtype,
+              team: int = DART_TEAM_ALL, shm: bool = True) -> "GlobalArray":
+        """Collective symmetric allocation, typed.
+
+        ``shm=True`` (default) mints a ``FLAG_SHM`` pointer so reads of
+        host-visible blocks take the zero-copy locality fast path;
+        pass ``shm=False`` to force every read through the jitted
+        one-sided path (useful for benchmarking the substrate).
+        """
+        from . import runtime as rt
+        from .shm import mint_shm
+        shape = tuple(int(s) for s in shape)
+        g = rt.dart_team_memalloc_aligned(ctx, team,
+                                          nbytes_of(shape, dtype))
+        if shm:
+            g = mint_shm(g)
+        return cls(ctx, g, shape, dtype, team)
+
+    def free(self) -> None:
+        """Release the backing allocation (``dart_team_memfree``)."""
+        from . import runtime as rt
+        rt.dart_team_memfree(self.ctx, self.teamid, self.gptr)
+
+    # -- identity --------------------------------------------------------
+    @property
+    def team(self):
+        return self.ctx.teams[self.teamid]
+
+    @property
+    def units(self) -> Tuple[int, ...]:
+        """Absolute unit ids of the owning team's members."""
+        return self.team.group.members
+
+    @property
+    def team_size(self) -> int:
+        return self.team.size()
+
+    @property
+    def itemsize(self) -> int:
+        return self.dtype.itemsize
+
+    @property
+    def nbytes_per_unit(self) -> int:
+        return nbytes_of(self.shape, self.dtype)
+
+    def _check_unit(self, unit: int) -> int:
+        unit = int(unit)
+        if self.team.myid(unit) < 0:
+            raise KeyError(
+                f"unit {unit} is not a member of team {self.teamid} "
+                f"(members {self.units})")
+        return unit
+
+    # -- addressing ------------------------------------------------------
+    def __getitem__(self, unit: int) -> GlobalRef:
+        """Typed view of ``unit``'s whole block."""
+        return GlobalRef(self, self._check_unit(unit), 0, self.shape)
+
+    @property
+    def at(self) -> _AtIndexer:
+        """Element-granular addressing: ``ga.at[unit, 3:7]`` denotes a
+        contiguous run inside ``unit``'s block."""
+        return _AtIndexer(self)
+
+    # -- local (zero-copy) view -----------------------------------------
+    @property
+    def local(self):
+        """This controller's portion — in the single-controller runtime,
+        the base pointer's owning unit (the team's first member).
+
+        Routed through :func:`repro.core.shm.classify_locality`: on a
+        host-visible arena with a ``FLAG_SHM`` pointer this is a
+        read-only zero-copy numpy view with **zero** jitted dispatches
+        (queued writes to the pool are flushed first, so the view sees
+        them); otherwise it falls back to the jitted one-sided get.
+        Writes must go through ``put``/``put_nb`` so XLA dataflow stays
+        authoritative.
+        """
+        return self.local_view(self.gptr.unitid)
+
+    def local_view(self, unit: int):
+        """Locality-routed read of any member's block (see :attr:`local`)."""
+        from . import runtime as rt
+        return rt.dart_get_blocking(self.ctx,
+                                    self.gptr.setunit(self._check_unit(unit)),
+                                    self.shape, self.dtype)
+
+    # -- typed collectives ----------------------------------------------
+    def allreduce(self, op: str = "sum") -> jax.Array:
+        """All-reduce the per-member blocks elementwise across the team;
+        every member's block is replaced by the result, which is also
+        returned typed."""
+        from . import runtime as rt
+        return rt.dart_allreduce(self.ctx, self.gptr, self.shape,
+                                 self.dtype, op=op)
+
+    def broadcast(self, root: int):
+        """Broadcast ``root``'s block to every member.  Returns the
+        collective's Handle (born issued)."""
+        from . import runtime as rt
+        return rt.dart_bcast(self.ctx,
+                             self.gptr.setunit(self._check_unit(root)),
+                             self.nbytes_per_unit)
+
+    def gather(self) -> jax.Array:
+        """Gather every member's block → typed ``(team_size, *shape)``
+        array, in team-relative order, in one jitted dispatch."""
+        from . import runtime as rt
+        vals, _ = rt.dart_gather_typed(self.ctx, self.gptr, self.shape,
+                                       self.dtype)
+        return vals
+
+    def scatter(self, values) -> None:
+        """Scatter row i of ``values`` (``(team_size, *shape)``) to the
+        team's i-th member."""
+        values = jnp.asarray(values, dtype=self.dtype)
+        want = (self.team_size,) + self.shape
+        if values.shape != want:
+            raise ValueError(
+                f"scatter values of shape {values.shape}, expected {want}")
+        from . import runtime as rt
+        rt.dart_scatter_typed(self.ctx, self.gptr, values).wait()
+
+    # -- epochs ----------------------------------------------------------
+    def epoch(self):
+        """Epoch scoped to this array's pool: non-blocking ops enqueued
+        inside coalesce into one flush on exit (other pools keep
+        accumulating)."""
+        return self.ctx.epoch(self.gptr)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"GlobalArray(shape={self.shape}, dtype={self.dtype}, "
+                f"team={self.teamid}, units={self.units})")

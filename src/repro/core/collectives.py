@@ -26,7 +26,8 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from .globmem import HeapState, SymmetricHeap, from_bytes, nbytes_of
+from .globmem import (HeapState, SymmetricHeap, copy_state,
+                      from_bytes, nbytes_of, to_bytes)
 from .gptr import GlobalPtr
 from .onesided import Handle, deref
 
@@ -117,8 +118,32 @@ def _seg_scatter(arena, off, values):
     return jax.lax.dynamic_update_slice(arena, values, (jnp.int32(0), off))
 
 
+_REDUCERS = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min,
+             "prod": jnp.prod}
+
+
+# NOT donated: unlike the engine-holder-owned bcast/scatter paths, the
+# functional engine=None contract lets callers keep the old snapshot.
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def _seg_allreduce(arena, off, shape, dtype, op):
+    n = nbytes_of(shape, dtype)
+    raw = jax.lax.dynamic_slice(arena, (jnp.int32(0), off),
+                                (arena.shape[0], n))
+    vals = jax.vmap(lambda r: from_bytes(r, shape, dtype))(raw)
+    red = _REDUCERS[op](vals, axis=0)
+    payload = jnp.broadcast_to(to_bytes(red)[None, :], (arena.shape[0], n))
+    return jax.lax.dynamic_update_slice(arena, payload,
+                                        (jnp.int32(0), off)), red
+
+
 def _pre_collective(state, poolid, engine):
-    """Flush queued one-sided ops on the pool, count our dispatch."""
+    """Flush queued one-sided ops on the pool, count our dispatch.
+
+    With an engine, the collective operates on the engine holder's
+    freshly flushed state — the caller-passed ``state`` is superseded
+    (runtime callers always pass ``ctx.state`` where ``ctx`` is the
+    holder).  Pass ``engine=None`` to thread state purely functionally.
+    """
     if engine is not None:
         state = engine.flush(poolid)
         engine.dispatch_count += 1
@@ -133,7 +158,7 @@ def dart_bcast(state: HeapState, heap: SymmetricHeap, teams_by_slot,
     state = _pre_collective(state, poolid, engine)
     arena = _seg_bcast(state[poolid], jnp.int32(row), jnp.int32(off),
                        nbytes)
-    new_state = dict(state)
+    new_state = copy_state(state)
     new_state[poolid] = arena
     return new_state, Handle((arena,))
 
@@ -155,9 +180,31 @@ def dart_scatter(state: HeapState, heap: SymmetricHeap, teams_by_slot,
     state = _pre_collective(state, poolid, engine)
     values = jnp.asarray(values, jnp.uint8)
     arena = _seg_scatter(state[poolid], jnp.int32(off), values)
-    new_state = dict(state)
+    new_state = copy_state(state)
     new_state[poolid] = arena
     return new_state, Handle((arena,))
+
+
+def dart_gather_typed(state: HeapState, heap: SymmetricHeap, teams_by_slot,
+                      gptr: GlobalPtr, shape, dtype, engine=None):
+    """Typed gather: each row's value at ``gptr.addr`` decoded to its
+    dtype → ``(n_rows, *shape)``.  One jitted dispatch for the byte
+    motion (same as :func:`dart_gather`); the per-row decode is a
+    bitcast, not a copy."""
+    raw, h = dart_gather(state, heap, teams_by_slot, gptr,
+                         nbytes_of(shape, dtype), engine=engine)
+    vals = jax.vmap(lambda r: from_bytes(r, shape, dtype))(raw)
+    return vals, h
+
+
+def dart_scatter_typed(state: HeapState, heap: SymmetricHeap, teams_by_slot,
+                       gptr: GlobalPtr, values: jax.Array, engine=None):
+    """Typed scatter: row i of ``values`` (``(n_rows, *shape)``, any
+    dtype) lands at ``gptr.addr`` on unit i."""
+    values = jnp.asarray(values)
+    rows = jax.vmap(to_bytes)(values.reshape(values.shape[0], -1))
+    return dart_scatter(state, heap, teams_by_slot, gptr, rows,
+                        engine=engine)
 
 
 def dart_allreduce(state: HeapState, heap: SymmetricHeap, teams_by_slot,
@@ -167,18 +214,9 @@ def dart_allreduce(state: HeapState, heap: SymmetricHeap, teams_by_slot,
     replaces every row's copy.  Returns (new_state, reduced_value)."""
     poolid, _, off = deref(heap, teams_by_slot, gptr)
     state = _pre_collective(state, poolid, engine)
-    n = nbytes_of(shape, dtype)
-    arena = state[poolid]
-    raw = jax.lax.dynamic_slice(arena, (jnp.int32(0), jnp.int32(off)),
-                                (arena.shape[0], n))
-    vals = jax.vmap(lambda r: from_bytes(r, shape, dtype))(raw)
-    red = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min,
-           "prod": jnp.prod}[op](vals, axis=0)
-    from .globmem import to_bytes
-    payload = jnp.broadcast_to(to_bytes(red)[None, :], (arena.shape[0], n))
-    arena = jax.lax.dynamic_update_slice(arena, payload,
-                                         (jnp.int32(0), jnp.int32(off)))
-    new_state = dict(state)
+    arena, red = _seg_allreduce(state[poolid], jnp.int32(off),
+                                tuple(shape), jnp.dtype(dtype), op)
+    new_state = copy_state(state)
     new_state[poolid] = arena
     return new_state, red
 

@@ -74,7 +74,7 @@ class BlockAllocator:
                 return off
         raise OutOfGlobalMemory(
             f"pool exhausted: need {nbytes}B, largest free block "
-            f"{max((l for _, l in self._free), default=0)}B")
+            f"{self.largest_free()}B")
 
     def free(self, offset: int) -> None:
         ln = self._live.pop(offset)
@@ -90,6 +90,14 @@ class BlockAllocator:
 
     def bytes_live(self) -> int:
         return sum(self._live.values())
+
+    def bytes_free(self) -> int:
+        return sum(l for _, l in self._free)
+
+    def largest_free(self) -> int:
+        """Largest contiguous free block — the quantity coalescing on
+        :meth:`free` exists to maximize."""
+        return max((l for _, l in self._free), default=0)
 
 
 @dataclasses.dataclass

@@ -116,11 +116,44 @@ class GlobalPtr:
 
     # -- arithmetic ------------------------------------------------------
     def incaddr(self, nbytes: int) -> "GlobalPtr":
-        """``dart_gptr_incaddr``: advance the offset by ``nbytes``."""
+        """``dart_gptr_incaddr``: advance the offset by ``nbytes``.
+
+        ``nbytes`` may be negative; the result must stay inside
+        [0, ADDR_MAX] or a :class:`ValueError` is raised.
+        """
         new = self.addr + nbytes
         if not (0 <= new <= ADDR_MAX):
-            raise ValueError("global pointer arithmetic overflow")
+            raise ValueError("global pointer arithmetic out of range "
+                             f"(addr {self.addr} {nbytes:+d})")
         return dataclasses.replace(self, addr=new)
+
+    def decaddr(self, nbytes: int) -> "GlobalPtr":
+        """``dart_gptr_decaddr``: move the offset back by ``nbytes``
+        (the negative-direction twin of :meth:`incaddr`)."""
+        return self.incaddr(-nbytes)
+
+    def addrdiff(self, other: "GlobalPtr") -> int:
+        """Signed byte distance ``self.addr - other.addr``.
+
+        Only meaningful for pointers into the same segment: both must
+        share ``segid`` and collectivity, and non-collective pointers
+        must also share ``unitid`` (their offsets are displacements into
+        per-unit WORLD partitions, not a common pool).  Collective
+        pointers may target different units — the allocation is aligned
+        & symmetric, so offsets are unit-independent (paper §III).
+        """
+        if self.segid != other.segid:
+            raise ValueError(
+                f"pointer distance across segments ({self.segid} vs "
+                f"{other.segid}) is undefined")
+        if self.is_collective != other.is_collective:
+            raise ValueError("pointer distance between collective and "
+                             "non-collective pointers is undefined")
+        if not self.is_collective and self.unitid != other.unitid:
+            raise ValueError(
+                "non-collective pointer distance requires the same unit "
+                f"(got {self.unitid} vs {other.unitid})")
+        return self.addr - other.addr
 
     def setunit(self, unitid: int) -> "GlobalPtr":
         """``dart_gptr_setunit``: retarget at another unit's portion.
@@ -132,6 +165,13 @@ class GlobalPtr:
 
     def __add__(self, nbytes: int) -> "GlobalPtr":
         return self.incaddr(nbytes)
+
+    def __sub__(self, other):
+        """``gptr - int`` → :meth:`decaddr`; ``gptr - gptr`` →
+        :meth:`addrdiff` (signed byte distance)."""
+        if isinstance(other, GlobalPtr):
+            return self.addrdiff(other)
+        return self.decaddr(other)
 
 
 #: the DART null pointer.

@@ -63,6 +63,7 @@ same semantics.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -92,7 +93,7 @@ class Handle:
     to the same pool), it is treated as complete: XLA executes ops on a
     device in program order, so a successor consuming the buffer is
     ordered after this op, and all reads flow through the successor's
-    heap state anyway (dataflow = the RMA unified model, DESIGN.md §2).
+    heap state anyway (dataflow = the RMA unified model, docs/API.md).
     """
 
     def __init__(self, arrays: Tuple[jax.Array, ...] = (),
@@ -118,6 +119,10 @@ class Handle:
             # close only this handle's pool epoch; other pools keep
             # accumulating ops for their own coalesced flush
             self._engine.flush(getattr(self, "poolid", None))
+            if not self._issued:
+                raise RuntimeError(
+                    "queued op was dropped before dispatch (engine "
+                    "cleared by dart_exit?)")
         jax.block_until_ready([a for a in self.arrays
                                if not a.is_deleted()])
 
@@ -147,6 +152,10 @@ class GetHandle(Handle):
 
     def value(self) -> jax.Array:
         self.wait()
+        if self._value is None:
+            raise RuntimeError(
+                "queued get was dropped before dispatch (engine cleared "
+                "by dart_exit?)")
         return self._value
 
 
@@ -164,6 +173,10 @@ def dart_waitall(handles: Sequence[Handle]) -> None:
     for h in handles:
         if not h._issued and h._engine is not None:
             h._engine.flush(getattr(h, "poolid", None))
+            if not h._issued:
+                raise RuntimeError(
+                    "queued op was dropped before dispatch (engine "
+                    "cleared by dart_exit?)")
     jax.block_until_ready([a for h in handles for a in h.arrays
                            if not a.is_deleted()])
 
@@ -388,6 +401,18 @@ class CommEngine:
             op.handle._resolve_value(
                 from_bytes(raws[i], op.handle.shape, op.handle.dtype))
 
+    @contextlib.contextmanager
+    def epoch_scope(self, poolid: Optional[int] = None):
+        """Explicit epoch as a ``with`` block (the typed front-end's
+        ``ctx.epoch()``): ops enqueued inside stay queued; leaving the
+        block closes the epoch with one coalesced flush — of everything,
+        or of a single pool when ``poolid`` is given.  The flush runs
+        even on error so no op is silently left queued."""
+        try:
+            yield self
+        finally:
+            self.flush(poolid)
+
     def clear(self) -> None:
         """Drop queued ops without dispatching (dart_exit teardown)."""
         self._pending = []
@@ -434,7 +459,7 @@ def dart_put(state: HeapState, heap: SymmetricHeap, teams_by_slot,
         raise ValueError("put overruns the target allocation's pool")
     arena = _arena_write(state[poolid], jnp.int32(row), jnp.int32(off),
                          payload)
-    new_state = dict(state)
+    new_state = copy_state(state)
     new_state[poolid] = arena
     return new_state, Handle((arena,))
 
@@ -516,7 +541,7 @@ def shmem_get_dynamic(arena_row: jax.Array, offset, nbytes: int,
     Lowers to all_gather + one-hot row select.  Semantically exact;
     costs a team-wide gather of the addressed window, so the static
     ``shmem_get`` / Pallas RDMA path is preferred where the pattern is
-    known at trace time (documented perf note, DESIGN.md §2).
+    known at trace time (documented perf note, docs/API.md).
     """
     raw = jax.lax.dynamic_slice(
         arena_row, (jnp.int32(0), jnp.asarray(offset, jnp.int32)),

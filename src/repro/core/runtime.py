@@ -9,8 +9,12 @@ Single-controller layout: one :class:`DartContext` owns
 
 ``dart_init`` reserves the non-collective WORLD pool and creates
 DART_TEAM_ALL with its collective pool — which "opens the shared access
-epoch" in paper terms (a no-op under XLA's unified-model dataflow,
-DESIGN.md §2).
+epoch" in paper terms (a no-op under XLA's unified-model dataflow; see
+docs/API.md, "Epochs, flush, and completion").
+
+This module is the byte-offset *substrate* layer; the typed
+:class:`repro.core.array.GlobalArray` front-end (``ctx.alloc``) sits on
+top of it — docs/API.md describes the two-layer design.
 """
 
 from __future__ import annotations
@@ -65,6 +69,24 @@ class DartContext:
         # coalesced batches against self.state.
         self.engine = _os.CommEngine(holder=self)
         self._initialized = False
+
+    # -- typed front-end (docs/API.md) ---------------------------------
+    def alloc(self, shape, dtype, team: int = DART_TEAM_ALL,
+              shm: bool = True):
+        """Ergonomic typed allocator: a :class:`GlobalArray` of
+        ``shape`` elements of ``dtype`` per member of ``team``."""
+        from .array import GlobalArray
+        return GlobalArray.alloc(self, shape, dtype, team=team, shm=shm)
+
+    def epoch(self, gptr: Optional[GlobalPtr] = None):
+        """Epoch as a ``with`` block: non-blocking ops enqueued inside
+        are flushed — coalesced — on exit (``gptr`` scopes the flush to
+        one pool).  The explicit form of the queued→issued→complete
+        ladder (docs/API.md)."""
+        poolid = None
+        if gptr is not None:
+            poolid, _, _ = _os.deref(self.heap, self.teams_by_slot, gptr)
+        return self.engine.epoch_scope(poolid)
 
     # ------------------------------------------------------------------
     def _create_team(self, group: DartGroup, parent: Optional[int]) -> Team:
@@ -283,6 +305,21 @@ def dart_gather(ctx: DartContext, gptr: GlobalPtr, per_unit_nbytes: int):
     out, h = _coll.dart_gather(ctx.state, ctx.heap, ctx.teams_by_slot,
                                gptr, per_unit_nbytes, engine=ctx.engine)
     return out, h
+
+
+def dart_gather_typed(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
+    """Typed gather: every row's value at ``gptr.addr`` → (n_rows, *shape)."""
+    out, h = _coll.dart_gather_typed(ctx.state, ctx.heap, ctx.teams_by_slot,
+                                     gptr, shape, dtype, engine=ctx.engine)
+    return out, h
+
+
+def dart_scatter_typed(ctx: DartContext, gptr: GlobalPtr, values):
+    """Typed scatter: row i of ``values`` ((n_rows, *shape)) → unit i."""
+    ctx.state, h = _coll.dart_scatter_typed(ctx.state, ctx.heap,
+                                            ctx.teams_by_slot, gptr, values,
+                                            engine=ctx.engine)
+    return h
 
 
 def dart_scatter(ctx: DartContext, gptr: GlobalPtr, values):

@@ -53,13 +53,20 @@ def classify_locality(ctx, gptr: GlobalPtr) -> Locality:
     return Locality.SHM_LOCAL
 
 
+def mint_shm(gptr: GlobalPtr) -> GlobalPtr:
+    """Return ``gptr`` with ``FLAG_SHM`` set: marks it *eligible* for
+    the zero-copy view — actual routing still depends on the backing
+    arena being host-visible (:func:`classify_locality`)."""
+    return GlobalPtr(unitid=gptr.unitid, segid=gptr.segid,
+                     flags=gptr.flags | FLAG_SHM, addr=gptr.addr)
+
+
 def dart_team_memalloc_shared(ctx, teamid: int,
                               nbytes_per_unit: int) -> GlobalPtr:
     """Collective aligned allocation whose pointers allow shm views."""
     from .runtime import dart_team_memalloc_aligned
-    g = dart_team_memalloc_aligned(ctx, teamid, nbytes_per_unit)
-    return GlobalPtr(unitid=g.unitid, segid=g.segid,
-                     flags=g.flags | FLAG_SHM, addr=g.addr)
+    return mint_shm(dart_team_memalloc_aligned(ctx, teamid,
+                                               nbytes_per_unit))
 
 
 def dart_shm_view(ctx, gptr: GlobalPtr, shape: Tuple[int, ...],

@@ -143,6 +143,15 @@ class Team:
     def contains(self, absolute_unit: int) -> bool:
         return self.myid(absolute_unit) >= 0
 
+    # -- typed front-end ------------------------------------------------
+    def alloc(self, ctx, shape, dtype, shm: bool = True):
+        """Ergonomic typed allocator on this team's collective pool:
+        ``team.alloc(ctx, shape, dtype)`` ≡ ``ctx.alloc(shape, dtype,
+        team=team.teamid)`` (see :class:`repro.core.array.GlobalArray`)."""
+        from .array import GlobalArray
+        return GlobalArray.alloc(ctx, shape, dtype, team=self.teamid,
+                                 shm=shm)
+
 
 @dataclasses.dataclass(frozen=True)
 class TeamPartition:

@@ -168,6 +168,33 @@ def test_epoch_counter_advances_on_flush(ctx):
     assert ctx.engine.epoch == e0 + 1
 
 
+def test_get_nb_dropped_by_clear_raises():
+    """A queued get whose op was cleared (dart_exit) must raise from
+    value(), not silently return None."""
+    ctx = dart_init(n_units=2, config=DartConfig(
+        non_collective_pool_bytes=1024, team_pool_bytes=1024))
+    g = dart_memalloc(ctx, 256, unit=0)
+    h = dart_get_nb(ctx, g, (4,), jnp.int32)
+    dart_exit(ctx)                          # engine.clear() drops the op
+    with pytest.raises(RuntimeError):
+        h.value()
+
+
+def test_put_dropped_by_clear_raises_on_wait():
+    """Same for a queued put: wait()/waitall must not report a lost
+    write as success."""
+    ctx = dart_init(n_units=2, config=DartConfig(
+        non_collective_pool_bytes=1024, team_pool_bytes=1024))
+    g = dart_memalloc(ctx, 256, unit=0)
+    h1 = dart_put(ctx, g, jnp.ones((4,), jnp.int32))
+    h2 = dart_put(ctx, g + 128, jnp.ones((4,), jnp.int32))
+    dart_exit(ctx)
+    with pytest.raises(RuntimeError):
+        dart_wait(h1)
+    with pytest.raises(RuntimeError):
+        dart_waitall([h2])
+
+
 # ----------------------------------------------------- shm fast path -------
 
 def test_shm_fastpath_equivalence_and_zero_dispatch(ctx):
@@ -217,6 +244,13 @@ def test_put_get_benchmark_quick_runs_new_series():
     assert any(n.startswith("coalesced/put_flush/") for n in names)
     assert any(n.startswith("coalesced/get_flush/") for n in names)
     assert any(n.startswith("shm_fastpath/") for n in names)
+    # typed GlobalArray front-end series: blocking put/get overhead vs
+    # the raw byte API, the coalesced non-blocking path, and the
+    # constant-overhead model fit
+    assert any(n.startswith("typed_api/put/") for n in names)
+    assert any(n.startswith("typed_api/get/") for n in names)
+    assert any(n.startswith("typed_api/put_nb_coalesced/") for n in names)
+    assert any(n.startswith("typed_api/overhead_fit/") for n in names)
 
 
 # ------------------------------------------------- property-based ----------

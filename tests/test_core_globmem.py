@@ -80,6 +80,64 @@ def test_symmetric_heap_pools():
     assert h.memalloc_aligned(team, 128) == 0   # slot recycled
 
 
+def test_block_allocator_free_introspection():
+    a = BlockAllocator(1024)
+    o1, o2 = a.alloc(128), a.alloc(128)
+    o3 = a.alloc(128)                          # live: [0,128,256), tail free
+    assert a.bytes_live() == 384
+    assert a.bytes_free() == 640
+    assert a.largest_free() == 640             # the tail block
+    a.free(o1)
+    assert a.bytes_free() == 768
+    assert a.largest_free() == 640             # hole at 0 is not adjacent
+    a.free(o2)
+    assert a.bytes_free() == 896
+    assert a.largest_free() == 640             # [0,256) still split by o3
+    a.free(o3)
+    assert a.bytes_free() == 1024
+    assert a.largest_free() == 1024            # everything coalesced
+
+
+def test_team_memfree_then_realloc_returns_coalesced_block():
+    """Runtime-level allocator reuse: dart_team_memfree returns blocks
+    to the team pool, adjacent holes coalesce, and a re-alloc spanning
+    the combined extent succeeds at the original offset."""
+    from repro.core import (DART_TEAM_ALL, DartConfig, dart_exit, dart_init,
+                            dart_team_memalloc_aligned, dart_team_memfree)
+    ctx = dart_init(n_units=2, config=DartConfig(team_pool_bytes=4096))
+    try:
+        g1 = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 1024)
+        g2 = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 1024)
+        assert (g1.addr, g2.addr) == (0, 1024)
+        alloc = ctx._team_pool[DART_TEAM_ALL].shared_alloc
+        dart_team_memfree(ctx, DART_TEAM_ALL, g1)
+        dart_team_memfree(ctx, DART_TEAM_ALL, g2)
+        assert alloc.bytes_live() == 0
+        assert alloc.largest_free() == 4096    # holes coalesced
+        g3 = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 2048)
+        assert g3.addr == 0                    # spans both former blocks
+        # and the translation table tracks only the live allocation
+        assert len(ctx._team_pool[DART_TEAM_ALL].table) == 1
+    finally:
+        dart_exit(ctx)
+
+
+def test_global_array_request_overflowing_team_pool_raises():
+    """A GlobalArray-sized request larger than team_pool_bytes must
+    surface OutOfGlobalMemory from the pool allocator."""
+    import jax.numpy as jnp
+    from repro.core import DartConfig, dart_exit, dart_init
+    ctx = dart_init(n_units=2, config=DartConfig(team_pool_bytes=2048))
+    try:
+        ctx.alloc((256,), jnp.float32)         # 1 KiB fits
+        with pytest.raises(OutOfGlobalMemory):
+            ctx.alloc((512,), jnp.float32)     # 2 KiB > remaining 1 KiB
+        with pytest.raises(OutOfGlobalMemory):
+            ctx.alloc((4096,), jnp.float64)    # 32 KiB > whole pool
+    finally:
+        dart_exit(ctx)
+
+
 def test_translation_table_query_miss():
     h = SymmetricHeap(n_units=2)
     team = h.reserve_pool(n_rows=2, pool_bytes=512, collective=True)

@@ -43,6 +43,62 @@ def test_gptr_incaddr(g, n):
         assert (g2.unitid, g2.segid, g2.flags) == (g.unitid, g.segid, g.flags)
 
 
+@given(gptrs, st.integers(0, 1 << 20))
+def test_gptr_decaddr_and_sub_int(g, n):
+    """decaddr / ``- int`` mirror incaddr with a lower-bound check."""
+    if n > g.addr:
+        with pytest.raises(ValueError):
+            g.decaddr(n)
+        with pytest.raises(ValueError):
+            g - n
+    else:
+        g2 = g.decaddr(n)
+        assert g2.addr == g.addr - n
+        assert (g2.unitid, g2.segid, g2.flags) == (g.unitid, g.segid, g.flags)
+        assert (g - n) == g2
+
+
+@given(gptrs, st.integers(0, 1 << 20))
+def test_gptr_inc_dec_roundtrip(g, n):
+    if g.addr + n <= ADDR_MAX:
+        assert (g + n) - n == g
+        assert (g + n).decaddr(n) == g
+
+
+def test_gptr_decaddr_edge_cases():
+    g = GlobalPtr(unitid=0, segid=0, flags=0, addr=128)
+    assert g.decaddr(128).addr == 0            # down to exactly zero
+    assert g.decaddr(0) == g
+    assert g.decaddr(-64).addr == 192          # negative = incaddr
+    with pytest.raises(ValueError):
+        g.decaddr(129)                         # below the pool base
+
+
+def test_gptr_addrdiff_same_segment():
+    g = GlobalPtr(unitid=1, segid=3, flags=FLAG_COLLECTIVE, addr=256)
+    assert g.addrdiff(g) == 0
+    assert (g + 128) - g == 128
+    assert g - (g + 128) == -128               # signed distance
+    # collective pointers: unit-independent offsets (aligned & symmetric)
+    assert g.setunit(5) - g == 0
+    assert (g.setunit(5) + 64) - g == 64
+
+
+def test_gptr_addrdiff_rejects_mismatched_segments():
+    coll = GlobalPtr(unitid=0, segid=2, flags=FLAG_COLLECTIVE, addr=128)
+    with pytest.raises(ValueError):
+        coll.addrdiff(GlobalPtr(unitid=0, segid=3, flags=FLAG_COLLECTIVE,
+                                addr=0))       # different segment
+    with pytest.raises(ValueError):
+        coll.addrdiff(GlobalPtr(unitid=0, segid=2, flags=0, addr=0))
+    # non-collective: offsets are per-unit partitions — unit must match
+    nc0 = GlobalPtr(unitid=0, segid=0, flags=0, addr=256)
+    nc1 = GlobalPtr(unitid=1, segid=0, flags=0, addr=128)
+    with pytest.raises(ValueError):
+        nc0 - nc1
+    assert nc0 - (nc0 + 128) == -128
+
+
 def test_gptr_is_128_bits():
     g = GlobalPtr(unitid=UNIT_MAX, segid=SEG_MAX, flags=(1 << 16) - 1,
                   addr=ADDR_MAX)
