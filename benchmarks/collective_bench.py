@@ -24,7 +24,7 @@ def run(report: Report, *, repeats: int = 20):
     ctx = dart_init(n_units=n_units, config=DartConfig(
         non_collective_pool_bytes=4096, team_pool_bytes=pool))
     gp = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, pool // 2)
-    poolid = ctx.teams[DART_TEAM_ALL].slot + 1
+    poolid = ctx.teams[DART_TEAM_ALL].poolid   # window-registry binding
 
     sizes = [2 ** p for p in range(6, 19, 4)]
     t_dart, t_raw = [], []

@@ -63,7 +63,7 @@ def run(report: Report, *, full: bool = False, repeats: int = 20,
     ctx = _mk_ctx(pool)
     gp = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, pool // 2)
     team = ctx.teams[DART_TEAM_ALL]
-    poolid = team.slot + 1
+    poolid = team.poolid                 # window-registry binding
 
     placements = (dict(list(PLACEMENTS.items())[:1]) if quick
                   else PLACEMENTS)
@@ -326,3 +326,96 @@ def run(report: Report, *, full: bool = False, repeats: int = 20,
 
     dart_exit(ctx)
     return fits
+
+
+def engine_profile(*, repeats: int = 20, quick: bool = False) -> dict:
+    """Machine-readable engine trajectory (written to
+    ``benchmarks/out/BENCH_engine.json`` by ``benchmarks.run``):
+    dispatch counts + µs/op for the blocking, coalesced, per-target
+    flush, and mixed-size (overlap-aware) series, so the
+    request-aggregation wins are tracked across PRs instead of only
+    asserted in tests."""
+    n_ops = 8 if quick else 16
+    nbytes = 4096
+    n = nbytes // 4
+    val = jnp.arange(n, dtype=jnp.float32)
+    ctx = _mk_ctx(1 << 22)
+    gp = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 1 << 20)
+    stride = ((nbytes + 127) // 128) * 128
+    series = {}
+
+    def measure(name, fn, ops_per_call):
+        rt.dart_flush(ctx)
+        d0 = ctx.engine.dispatch_count
+        fn()
+        dispatches = ctx.engine.dispatch_count - d0
+        t = time_call(fn, repeats=repeats)
+        series[name] = {
+            "dispatches": dispatches,
+            "ops": ops_per_call,
+            "us_per_op": round(t.mean_us / ops_per_call, 3),
+            "us_per_call": round(t.mean_us, 3),
+        }
+
+    def blocking():
+        for i in range(n_ops):
+            rt.dart_put_blocking(ctx, gp + i * stride, val)
+
+    def coalesced():
+        hs = [rt.dart_put(ctx, gp + i * stride, val)
+              for i in range(n_ops)]
+        rt.dart_flush(ctx)
+        dart_waitall(hs)
+
+    def per_target():
+        # half the ops target unit 1, half unit 2; flushing unit 1's
+        # lane must dispatch ONE batch and leave unit 2 queued
+        hs = []
+        for u in (1, 2):
+            hs += [rt.dart_put(ctx, gp.setunit(u) + i * stride, val)
+                   for i in range(n_ops // 2)]
+        rt.dart_flush(ctx, gp, target=1)
+        rt.dart_flush(ctx)
+        dart_waitall(hs)
+
+    def mixed_sizes():
+        hs = [rt.dart_put(ctx, gp + i * stride,
+                          jnp.arange(max(n // (1 + i % 3), 1),
+                                     dtype=jnp.float32))
+              for i in range(n_ops)]
+        rt.dart_flush(ctx)
+        dart_waitall(hs)
+
+    measure("blocking", blocking, n_ops)
+    measure("coalesced", coalesced, n_ops)
+    measure("per_target_flush", per_target, n_ops)
+    measure("mixed_size_coalesced", mixed_sizes, n_ops)
+
+    # isolation numbers for the per-target series: dispatches seen by
+    # the target-1 flush alone, with target 2 still queued
+    hs = []
+    for u in (1, 2):
+        hs += [rt.dart_put(ctx, gp.setunit(u) + i * stride, val)
+               for i in range(n_ops // 2)]
+    d0 = ctx.engine.dispatch_count
+    rt.dart_flush(ctx, gp, target=1)
+    series["per_target_flush"]["dispatches_target_only"] = \
+        ctx.engine.dispatch_count - d0
+    series["per_target_flush"]["ops_left_queued"] = ctx.engine.pending_ops()
+    rt.dart_flush(ctx)
+    dart_waitall(hs)
+
+    profile = {
+        "schema": "BENCH_engine/v1",
+        "n_ops": n_ops,
+        "nbytes": nbytes,
+        "quick": quick,
+        "series": series,
+        "engine_totals": {
+            "dispatch_count": ctx.engine.dispatch_count,
+            "ops_enqueued": ctx.engine.ops_enqueued,
+            "ops_coalesced": ctx.engine.ops_coalesced,
+        },
+    }
+    dart_exit(ctx)
+    return profile

@@ -22,6 +22,7 @@ Roofline tables (§Roofline) are produced by the dry-run pipeline
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 from .common import OUT_DIR, Report
@@ -72,6 +73,24 @@ def main() -> None:
                   file=sys.stderr)
         path = report.save(f"{name}.csv")
         print(f"# wrote {path}", flush=True)
+
+    if "put_get" in suites:
+        # machine-readable engine trajectory (dispatch counts + µs/op
+        # for blocking vs coalesced vs per-target vs mixed-size): the
+        # perf numbers dashboards diff across PRs.
+        try:
+            profile = put_get.engine_profile(repeats=args.repeats,
+                                             quick=args.quick)
+            OUT_DIR.mkdir(parents=True, exist_ok=True)
+            jpath = OUT_DIR / "BENCH_engine.json"
+            with open(jpath, "w") as f:
+                json.dump(profile, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"# wrote {jpath}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"# engine profile FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -48,7 +48,9 @@ with ctx.epoch():
 print(f"coalesced {len(handles)} puts into "
       f"{ctx.engine.dispatch_count - d0} dispatch(es)")
 
-# non-blocking gets: enqueue, then value() flushes the epoch once
+# non-blocking gets: enqueue, then value() flushes — per target: each
+# handle dispatches only its own unit's lane, leaving other targets'
+# queued epochs untouched (MPI_Win_flush_local analogue)
 gets = {u: ga.at[u, 4:8].get_nb() for u in ga.units}
 assert all(float(np.asarray(h.value())[0]) == float(u)
            for u, h in gets.items())

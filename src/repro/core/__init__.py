@@ -21,8 +21,8 @@ from .team import (DART_TEAM_ALL, EMPTY_SLOT, FreeListTeamList, Team,
                    TeamList, TeamListFullError, TeamPartition)
 from .globmem import (ALIGNMENT, BlockAllocator, HeapState,
                       OutOfGlobalMemory, SymmetricHeap, TranslationRecord,
-                      TranslationTable, align_up, copy_state, from_bytes,
-                      nbytes_of, to_bytes)
+                      TranslationTable, WindowDestroyedError, WindowRegistry,
+                      align_up, copy_state, from_bytes, nbytes_of, to_bytes)
 from .onesided import (CommEngine, GetHandle, Handle, dart_test,
                        dart_testall, dart_wait, dart_waitall, deref,
                        shmem_get, shmem_get_dynamic, shmem_halo_exchange,
@@ -65,8 +65,9 @@ __all__ = [
     "TeamListFullError", "TeamPartition",
     # global memory
     "ALIGNMENT", "BlockAllocator", "HeapState", "OutOfGlobalMemory",
-    "SymmetricHeap", "TranslationRecord", "TranslationTable", "align_up",
-    "copy_state", "from_bytes", "nbytes_of", "to_bytes",
+    "SymmetricHeap", "TranslationRecord", "TranslationTable",
+    "WindowDestroyedError", "WindowRegistry", "align_up", "copy_state",
+    "from_bytes", "nbytes_of", "to_bytes",
     # one-sided engine + handles
     "CommEngine", "GetHandle", "Handle", "dart_test", "dart_testall",
     "dart_wait", "dart_waitall", "deref", "shmem_get", "shmem_get_dynamic",

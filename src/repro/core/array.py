@@ -167,6 +167,14 @@ class GlobalRef:
         return rt.dart_get_nb(self.array.ctx, self.gptr, self.shape,
                               self.dtype)
 
+    def flush(self) -> None:
+        """Per-target flush (the ``MPI_Win_flush_local(rank, win)``
+        analogue): dispatch only this unit's queued ops on the array's
+        window, coalesced; other targets' queued epochs keep
+        accumulating for their own flush."""
+        from . import runtime as rt
+        rt.dart_flush(self.array.ctx, self.array.gptr, target=self.unit)
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"GlobalRef(unit={self.unit}, offset={self.offset}, "
                 f"shape={self.shape}, dtype={self.dtype})")
@@ -331,6 +339,17 @@ class GlobalArray:
         rt.dart_scatter_typed(self.ctx, self.gptr, values).wait()
 
     # -- epochs ----------------------------------------------------------
+    def flush(self, unit: Optional[int] = None) -> None:
+        """Flush this array's window: all queued ops on its pool, or —
+        with ``unit`` — only that target's lane (``ga.flush(u)`` ≡
+        ``ga[u].flush()``)."""
+        from . import runtime as rt
+        if unit is None:
+            rt.dart_flush(self.ctx, self.gptr)
+        else:
+            rt.dart_flush(self.ctx, self.gptr,
+                          target=self._check_unit(unit))
+
     def epoch(self):
         """Epoch scoped to this array's pool: non-blocking ops enqueued
         inside coalesce into one flush on exit (other pools keep

@@ -118,6 +118,23 @@ def _seg_scatter(arena, off, values):
     return jax.lax.dynamic_update_slice(arena, values, (jnp.int32(0), off))
 
 
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _seg_gather_typed(arena, off, shape, dtype):
+    """Typed gather as ONE kernel: slice + per-row byte decode fused,
+    so the dispatch the engine counts is the dispatch that runs."""
+    n = nbytes_of(shape, dtype)
+    raw = jax.lax.dynamic_slice(arena, (jnp.int32(0), off),
+                                (arena.shape[0], n))
+    return jax.vmap(lambda r: from_bytes(r, shape, dtype))(raw)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _seg_scatter_typed(arena, off, values):
+    """Typed scatter as ONE kernel: per-row byte encode + update fused."""
+    rows = jax.vmap(to_bytes)(values.reshape(values.shape[0], -1))
+    return jax.lax.dynamic_update_slice(arena, rows, (jnp.int32(0), off))
+
+
 _REDUCERS = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min,
              "prod": jnp.prod}
 
@@ -188,23 +205,29 @@ def dart_scatter(state: HeapState, heap: SymmetricHeap, teams_by_slot,
 def dart_gather_typed(state: HeapState, heap: SymmetricHeap, teams_by_slot,
                       gptr: GlobalPtr, shape, dtype, engine=None):
     """Typed gather: each row's value at ``gptr.addr`` decoded to its
-    dtype → ``(n_rows, *shape)``.  One jitted dispatch for the byte
-    motion (same as :func:`dart_gather`); the per-row decode is a
-    bitcast, not a copy."""
-    raw, h = dart_gather(state, heap, teams_by_slot, gptr,
-                         nbytes_of(shape, dtype), engine=engine)
-    vals = jax.vmap(lambda r: from_bytes(r, shape, dtype))(raw)
-    return vals, h
+    dtype → ``(n_rows, *shape)``.  Slice *and* decode run inside the
+    single counted jitted dispatch (:func:`_seg_gather_typed`), so the
+    engine's ``dispatch_count`` covers the whole typed op — previously
+    the vmap decode ran eagerly outside it and went uncounted."""
+    poolid, _, off = deref(heap, teams_by_slot, gptr)
+    state = _pre_collective(state, poolid, engine)
+    vals = _seg_gather_typed(state[poolid], jnp.int32(off), tuple(shape),
+                             jnp.dtype(dtype))
+    return vals, Handle((vals,))
 
 
 def dart_scatter_typed(state: HeapState, heap: SymmetricHeap, teams_by_slot,
                        gptr: GlobalPtr, values: jax.Array, engine=None):
     """Typed scatter: row i of ``values`` (``(n_rows, *shape)``, any
-    dtype) lands at ``gptr.addr`` on unit i."""
+    dtype) lands at ``gptr.addr`` on unit i.  Encode + update run inside
+    the single counted jitted dispatch (:func:`_seg_scatter_typed`)."""
     values = jnp.asarray(values)
-    rows = jax.vmap(to_bytes)(values.reshape(values.shape[0], -1))
-    return dart_scatter(state, heap, teams_by_slot, gptr, rows,
-                        engine=engine)
+    poolid, _, off = deref(heap, teams_by_slot, gptr)
+    state = _pre_collective(state, poolid, engine)
+    arena = _seg_scatter_typed(state[poolid], jnp.int32(off), values)
+    new_state = copy_state(state)
+    new_state[poolid] = arena
+    return new_state, Handle((arena,))
 
 
 def dart_allreduce(state: HeapState, heap: SymmetricHeap, teams_by_slot,

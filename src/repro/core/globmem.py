@@ -54,6 +54,13 @@ class OutOfGlobalMemory(RuntimeError):
     pass
 
 
+class WindowDestroyedError(KeyError):
+    """A global pointer was dereferenced against a team whose window
+    (collective pool) is no longer live — the pool was dropped by
+    ``dart_team_destroy`` and the teamlist slot may since have been
+    reused by an unrelated team (paper §IV.B.2)."""
+
+
 class BlockAllocator:
     """First-fit free-list allocator with coalescing over [0, size)."""
 
@@ -153,6 +160,56 @@ class PoolMeta:
     table: Optional[TranslationTable] = None
 
 
+class WindowRegistry:
+    """teamid → live :class:`PoolMeta` binding (the window-object table).
+
+    DART-MPI binds every team to an MPI window object; dereference of a
+    collective pointer goes team → window, never through slot
+    arithmetic.  This registry is that binding made first-class: teams
+    register their pool at creation, drop it at destroy, and ``deref``
+    keys off it — so teamlist-slot reuse (paper §IV.B.2) can never
+    route a new team's pointers at a dropped or foreign pool.
+
+    TeamIDs are never reused (§IV.B.2), so a teamid uniquely identifies
+    one window for the lifetime of the runtime.
+    """
+
+    def __init__(self):
+        self._by_team: Dict[int, PoolMeta] = {}
+
+    def register(self, teamid: int, meta: PoolMeta) -> None:
+        if teamid in self._by_team:
+            raise ValueError(f"team {teamid} already has a live window")
+        self._by_team[teamid] = meta
+
+    def lookup(self, teamid: int) -> PoolMeta:
+        try:
+            return self._by_team[teamid]
+        except KeyError:
+            raise WindowDestroyedError(
+                f"team {teamid} has no live window (pool dropped by "
+                "dart_team_destroy?)") from None
+
+    def drop(self, teamid: int) -> PoolMeta:
+        try:
+            return self._by_team.pop(teamid)
+        except KeyError:
+            raise WindowDestroyedError(
+                f"team {teamid} has no live window to drop") from None
+
+    def clear(self) -> None:
+        self._by_team.clear()
+
+    def __contains__(self, teamid: int) -> bool:
+        return teamid in self._by_team
+
+    def __len__(self) -> int:
+        return len(self._by_team)
+
+    def live_teams(self) -> Tuple[int, ...]:
+        return tuple(self._by_team)
+
+
 # The device-resident heap state is a plain dict pytree:
 #   {poolid: uint8[n_rows, pool_bytes]}
 # Pending (queued, not-yet-dispatched) one-sided ops against it live in
@@ -175,6 +232,7 @@ class SymmetricHeap:
         self.mesh = mesh
         self.unit_axes = unit_axes
         self.pools: Dict[int, PoolMeta] = {}
+        self.windows = WindowRegistry()
         self._next_poolid = 0
 
     # -- pool management -------------------------------------------------

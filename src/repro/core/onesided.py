@@ -24,12 +24,23 @@ queue** over the symmetric heap:
   bounds-checked at initiation (translation happens once, like the
   paper's dart_put), but no device work is dispatched.  The returned
   :class:`Handle` starts in the ``queued`` state.
-* ``CommEngine.flush`` closes the epoch: maximal runs of consecutive
-  same-pool, same-size ops are **coalesced** into one batched jitted
-  scatter (:func:`_arena_scatter`) or gather (:func:`_arena_gather`) —
-  N queued puts become a single XLA dispatch instead of N.  Program
-  order is preserved run-by-run, so overlapping writes resolve exactly
-  as the equivalent sequence of blocking ops (last writer wins).
+* ``CommEngine.flush`` closes the epoch: maximal runs of same-pool
+  ops are **coalesced** into one batched jitted scatter
+  (:func:`_arena_scatter`) or gather (:func:`_arena_gather`) — N
+  queued puts become a single XLA dispatch instead of N.  Same-size
+  ops coalesce unconditionally; **mixed-size** ops share the dispatch
+  when their byte ranges are disjoint (pad-to-max segmented kernels,
+  :func:`_arena_scatter_segmented`) and split the run when they
+  overlap.  Program order is preserved run-by-run, so overlapping
+  writes resolve exactly as the equivalent sequence of blocking ops
+  (last writer wins).
+* ``CommEngine.flush(poolid, row)`` is the **per-target** form — the
+  ``MPI_Win_flush_local(rank, win)`` analogue: only the named
+  ``(pool, row)`` lane dispatches; other targets' queued epochs keep
+  accumulating (rows are disjoint per-unit partitions, so this can
+  never reorder visible effects).  ``handle.wait()`` flushes only its
+  own lane; the runtime surfaces ``dart_flush(ctx, gptr,
+  target=unit)`` and the typed layer ``ga[unit].flush()``.
 * Handle lifecycle: ``queued`` → (flush) → ``issued`` → (XLA async
   dispatch drains) → ``complete`` — the paper's §III
   issued/locally-complete/remotely-complete ladder.  ``dart_wait`` on
@@ -63,9 +74,11 @@ same semantics.
 
 from __future__ import annotations
 
+import bisect
 import contextlib
 import dataclasses
 import functools
+import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -101,9 +114,12 @@ class Handle:
         self.arrays = tuple(arrays)
         self._engine = engine
         self._issued = engine is None
+        self._error: Optional[str] = None
 
     @property
     def state(self) -> str:
+        if self._error is not None:
+            return "failed"
         if not self._issued:
             return "queued"
         if all(a.is_deleted() or a.is_ready() for a in self.arrays):
@@ -114,11 +130,24 @@ class Handle:
         self.arrays = tuple(arrays)
         self._issued = True
 
+    def _fail(self, message: str) -> None:
+        """Mark a queued op as permanently failed (its target window was
+        destroyed before dispatch); wait/test surface the error."""
+        self._error = message
+
+    def _check_failed(self) -> None:
+        if self._error is not None:
+            raise RuntimeError(self._error)
+
     def wait(self) -> None:
+        self._check_failed()
         if not self._issued and self._engine is not None:
-            # close only this handle's pool epoch; other pools keep
-            # accumulating ops for their own coalesced flush
-            self._engine.flush(getattr(self, "poolid", None))
+            # close only this handle's (pool, row) lane — the
+            # MPI_Win_flush_local(rank, win) analogue; other targets
+            # keep accumulating ops for their own coalesced flush
+            self._engine.flush(getattr(self, "poolid", None),
+                               getattr(self, "row", None))
+            self._check_failed()
             if not self._issued:
                 raise RuntimeError(
                     "queued op was dropped before dispatch (engine "
@@ -127,6 +156,7 @@ class Handle:
                                if not a.is_deleted()])
 
     def test(self) -> bool:
+        self._check_failed()
         if not self._issued:
             return False
         return all(a.is_deleted() or a.is_ready() for a in self.arrays)
@@ -168,15 +198,32 @@ def dart_test(handle: Handle) -> bool:
 
 
 def dart_waitall(handles: Sequence[Handle]) -> None:
-    # flushing one queued handle's pool resolves every queued handle on
-    # the same (engine, pool); other pools are left accumulating
+    # group queued handles by (engine, pool) and flush each pool's
+    # UNION of target lanes once: the whole batch coalesces into the
+    # minimal number of dispatches (a per-handle lane flush would split
+    # it N ways for zero benefit — every listed lane completes here
+    # anyway), while untargeted lanes keep accumulating their epochs
+    lanes: Dict = {}
+    for h in handles:
+        h._check_failed()
+        if not h._issued and h._engine is not None:
+            key = (h._engine, getattr(h, "poolid", None))
+            row = getattr(h, "row", None)
+            if key not in lanes:
+                lanes[key] = None if row is None else {row}
+            elif lanes[key] is not None:
+                if row is None:
+                    lanes[key] = None        # unknown lane: whole pool
+                else:
+                    lanes[key].add(row)
+    for (engine, poolid), rows in lanes.items():
+        engine.flush(poolid, rows)
     for h in handles:
         if not h._issued and h._engine is not None:
-            h._engine.flush(getattr(h, "poolid", None))
-            if not h._issued:
-                raise RuntimeError(
-                    "queued op was dropped before dispatch (engine "
-                    "cleared by dart_exit?)")
+            h._check_failed()
+            raise RuntimeError(
+                "queued op was dropped before dispatch (engine "
+                "cleared by dart_exit?)")
     jax.block_until_ready([a for h in handles for a in h.arrays
                            if not a.is_deleted()])
 
@@ -223,6 +270,29 @@ def _arena_gather(arena: jax.Array, rows: jax.Array, offs: jax.Array,
     return jax.vmap(one)(rows, offs)
 
 
+@functools.partial(jax.jit, donate_argnums=0, static_argnums=(6,))
+def _arena_scatter_segmented(arena: jax.Array, rows: jax.Array,
+                             offs: jax.Array, lens: jax.Array,
+                             starts: jax.Array, flat: jax.Array,
+                             maxn: int) -> jax.Array:
+    """Batched mixed-size put (pad-to-max segmented scatter): ``flat``
+    is every payload concatenated (+ ``maxn`` trailing zeros so the
+    max-size segment read never clamps); op i's bytes are
+    ``flat[starts[i]:starts[i]+lens[i]]``, blended into the window in
+    queue order — ONE dispatch for a run the uniform scatter would
+    have split, with the padding done inside the kernel rather than as
+    per-op eager ops."""
+    lane = jnp.arange(maxn, dtype=jnp.int32)
+
+    def body(i, a):
+        seg = jax.lax.dynamic_slice(flat, (starts[i],), (maxn,))
+        window = jax.lax.dynamic_slice(a, (rows[i], offs[i]), (1, maxn))[0]
+        merged = jnp.where(lane < lens[i], seg, window)
+        return jax.lax.dynamic_update_slice(a, merged[None, :],
+                                            (rows[i], offs[i]))
+    return jax.lax.fori_loop(0, rows.shape[0], body, arena)
+
+
 # --------------------------------------------------------------------------
 # Global-pointer dereference (paper §IV.B.4)
 # --------------------------------------------------------------------------
@@ -234,9 +304,16 @@ def deref(heap: SymmetricHeap, teams_by_slot, gptr: GlobalPtr
 
     Collective pointers: segid is the owning team's teamlist slot; the
     absolute unitid is translated to the team-relative id, which indexes
-    the team pool's rows.  Non-collective pointers address the WORLD
-    pool directly by absolute unitid — "trivially dereferenced without
-    the unit translations" (paper §IV.B.4).
+    the team pool's rows.  The pool itself is resolved through the
+    heap's :class:`~repro.core.globmem.WindowRegistry` (teamid → live
+    PoolMeta) — the binding DART-MPI keeps between a team and its MPI
+    window object.  Slots are reused after ``dart_team_destroy``
+    (§IV.B.2) while pool ids grow monotonically, so any slot↔pool
+    arithmetic would route a recreated team's pointers at a dropped (or
+    worse, a foreign) pool; the registry makes the reuse case correct by
+    construction.  Non-collective pointers address the WORLD pool
+    directly by absolute unitid — "trivially dereferenced without the
+    unit translations" (paper §IV.B.4).
     """
     if gptr.is_collective:
         team = teams_by_slot[gptr.segid]
@@ -244,19 +321,14 @@ def deref(heap: SymmetricHeap, teams_by_slot, gptr: GlobalPtr
         if rel < 0:
             raise KeyError(
                 f"unit {gptr.unitid} is not a member of team {team.teamid}")
-        poolid = team_poolid(team)
-        return poolid, rel, gptr.addr
+        meta = heap.windows.lookup(team.teamid)
+        return meta.poolid, rel, gptr.addr
     return WORLD_POOLID, gptr.unitid, gptr.addr
 
 
 #: poolid of the pre-reserved non-collective WORLD pool (reserved first
 #: at dart_init, so it is always 0).
 WORLD_POOLID = 0
-
-
-def team_poolid(team) -> int:
-    """Teamlist slot → poolid.  Slot s keys pool s+1 (pool 0 = WORLD)."""
-    return team.slot + 1
 
 
 # --------------------------------------------------------------------------
@@ -319,6 +391,7 @@ class CommEngine:
             raise ValueError("put overruns the target allocation's pool")
         h = Handle((), engine=self)
         h.poolid = poolid
+        h.row = row
         self._pending.append(_PendingPut(poolid, row, off, payload, h))
         self.ops_enqueued += 1
         return h
@@ -331,33 +404,52 @@ class CommEngine:
             raise ValueError("get overruns the target allocation's pool")
         h = GetHandle(shape, dtype, engine=self)
         h.poolid = poolid
+        h.row = row
         self._pending.append(_PendingGet(poolid, row, off, n, h))
         self.ops_enqueued += 1
         return h
 
-    def pending_ops(self, poolid: Optional[int] = None) -> int:
+    def pending_ops(self, poolid: Optional[int] = None,
+                    row: Optional[int] = None) -> int:
         if poolid is None:
             return len(self._pending)
-        return sum(1 for op in self._pending if op.poolid == poolid)
+        return sum(1 for op in self._pending
+                   if op.poolid == poolid and (row is None or op.row == row))
 
     # -- flush (epoch close) --------------------------------------------
-    def flush(self, poolid: Optional[int] = None) -> HeapState:
-        """Dispatch pending ops (all, or one pool's) in program order.
+    def flush(self, poolid: Optional[int] = None,
+              row=None) -> HeapState:
+        """Dispatch pending ops in program order: all of them, one
+        pool's, or — the ``MPI_Win_flush_local(rank, win)`` analogue —
+        one ``(pool, row)`` target lane (``row`` may also be a
+        collection of rows: the union of lanes flushes as one epoch, so
+        a batch spanning targets still coalesces).
 
-        Consecutive same-pool ops of the same kind and payload size are
-        coalesced into one batched jitted dispatch.  Ops on distinct
-        pools touch distinct arrays, so a per-pool flush cannot reorder
-        visible effects.
+        Runs of same-pool ops of one kind are coalesced into one batched
+        jitted dispatch; mixed payload sizes share a dispatch when their
+        byte ranges are disjoint (:func:`_coalesced_runs`).  Ops on
+        distinct pools touch distinct arrays, and ops on distinct rows
+        of one pool touch disjoint per-unit partitions, so a per-pool or
+        per-target flush cannot reorder visible effects.
         """
         if poolid is None:
             todo, rest = self._pending, []
         else:
-            todo = [op for op in self._pending if op.poolid == poolid]
-            rest = [op for op in self._pending if op.poolid != poolid]
+            rows = (None if row is None else
+                    set(row) if isinstance(row, (set, frozenset, list,
+                                                 tuple)) else {row})
+
+            def _sel(op):
+                return op.poolid == poolid and (rows is None
+                                                or op.row in rows)
+            todo = [op for op in self._pending if _sel(op)]
+            rest = [op for op in self._pending if not _sel(op)]
         if not todo:
             return self._holder.state
         state = copy_state(self._holder.state)
-        for run in _coalesced_runs(todo):
+        pool_bytes = {pid: int(state[pid].shape[1])
+                      for pid in {op.poolid for op in todo}}
+        for run in _coalesced_runs(todo, pool_bytes):
             pid = run[0].poolid
             if isinstance(run[0], _PendingPut):
                 state[pid] = self._dispatch_put_run(state[pid], run)
@@ -370,6 +462,22 @@ class CommEngine:
         self.epoch += 1
         return state
 
+    def drop_pool(self, poolid: int, reason: str = "") -> int:
+        """Discard queued ops targeting ``poolid`` and fail their
+        handles (the pool's window is being destroyed, so dispatching —
+        or silently dropping — them would be wrong).  Returns the number
+        of ops dropped."""
+        dropped = [op for op in self._pending if op.poolid == poolid]
+        if not dropped:
+            return 0
+        self._pending = [op for op in self._pending
+                         if op.poolid != poolid]
+        msg = (f"window destroyed: pool {poolid} was dropped with this "
+               f"op still queued{' (' + reason + ')' if reason else ''}")
+        for op in dropped:
+            op.handle._fail(msg)
+        return len(dropped)
+
     def _dispatch_put_run(self, arena: jax.Array,
                           run: Sequence[_PendingPut]) -> jax.Array:
         self.dispatch_count += 1
@@ -380,8 +488,18 @@ class CommEngine:
         self.ops_coalesced += len(run)
         rows = jnp.asarray([op.row for op in run], jnp.int32)
         offs = jnp.asarray([op.off for op in run], jnp.int32)
-        payloads = jnp.stack([op.payload for op in run])
-        return _arena_scatter(arena, rows, offs, payloads)
+        sizes = [int(op.payload.size) for op in run]
+        if len(set(sizes)) == 1:
+            payloads = jnp.stack([op.payload for op in run])
+            return _arena_scatter(arena, rows, offs, payloads)
+        maxn = max(sizes)
+        lens = jnp.asarray(sizes, jnp.int32)
+        starts = jnp.asarray([0] + list(itertools.accumulate(sizes))[:-1],
+                             jnp.int32)
+        flat = jnp.concatenate(
+            [op.payload for op in run] + [jnp.zeros((maxn,), jnp.uint8)])
+        return _arena_scatter_segmented(arena, rows, offs, lens, starts,
+                                        flat, maxn)
 
     def _dispatch_get_run(self, arena: jax.Array,
                           run: Sequence[_PendingGet]) -> None:
@@ -396,10 +514,15 @@ class CommEngine:
         self.ops_coalesced += len(run)
         rows = jnp.asarray([op.row for op in run], jnp.int32)
         offs = jnp.asarray([op.off for op in run], jnp.int32)
-        raws = _arena_gather(arena, rows, offs, run[0].nbytes)
+        maxn = max(op.nbytes for op in run)
+        # mixed sizes: fetch pad-to-max windows, each op decodes its own
+        # leading nbytes (the run builder guarantees off+maxn stays in
+        # the pool, so the slice start is never clamped)
+        raws = _arena_gather(arena, rows, offs, maxn)
         for i, op in enumerate(run):
             op.handle._resolve_value(
-                from_bytes(raws[i], op.handle.shape, op.handle.dtype))
+                from_bytes(raws[i, :op.nbytes], op.handle.shape,
+                           op.handle.dtype))
 
     @contextlib.contextmanager
     def epoch_scope(self, poolid: Optional[int] = None):
@@ -418,23 +541,125 @@ class CommEngine:
         self._pending = []
 
 
-def _run_key(op) -> Tuple:
+def _kind_key(op) -> Tuple:
     if isinstance(op, _PendingPut):
-        return ("put", op.poolid, int(op.payload.size))
-    return ("get", op.poolid, op.nbytes)
+        return ("put", op.poolid)
+    return ("get", op.poolid)
 
 
-def _coalesced_runs(ops: Sequence) -> List[List]:
-    """Split into maximal runs of consecutive same-key ops.  Keeping
-    runs in queue order preserves put/put and put/get program order
-    for overlapping addresses (last writer wins, reads see prior
-    writes), exactly like the blocking sequence."""
+def _op_nbytes(op) -> int:
+    if isinstance(op, _PendingPut):
+        return int(op.payload.size)
+    return op.nbytes
+
+
+class _RunMeta:
+    """Bookkeeping for the run currently being grown: payload sizes,
+    per-row byte intervals, and the minimum headroom to the pool end
+    (mixed-size dispatch reads/writes pad-to-max windows, so every op
+    must have ``max_n`` bytes of room or the dynamic slice would clamp
+    its start).
+
+    Intervals are kept per row as a *merged* sorted disjoint set
+    (parallel ``starts``/``ends`` lists), so the disjointness query is
+    a bisect against at most two neighbours — O(log k) per candidate
+    instead of a linear scan over every recorded op.  Only put runs
+    track intervals: reads commute, so a get run never needs the
+    disjointness rule (a write would split the run by kind anyway).
+    """
+
+    __slots__ = ("kind", "sizes", "max_n", "headroom", "intervals")
+
+    def __init__(self, op, n: int, cap: Optional[int]):
+        self.kind = _kind_key(op)
+        self.sizes = {n}
+        self.max_n = n
+        self.headroom = (cap - op.off) if cap is not None else None
+        # row -> (starts, ends): merged, sorted, pairwise-disjoint
+        self.intervals: Dict[int, Tuple[List[int], List[int]]] = {}
+        if self.kind[0] == "put":
+            self._note(op.row, op.off, op.off + n)
+
+    def _note(self, row: int, off: int, end: int) -> None:
+        starts, ends = self.intervals.setdefault(row, ([], []))
+        i = bisect.bisect_right(starts, off)
+        # absorb a left neighbour that reaches (or touches) us
+        if i > 0 and ends[i - 1] >= off:
+            i -= 1
+            off = starts[i]
+            end = max(end, ends[i])
+            del starts[i], ends[i]
+        # absorb every following interval we now cover
+        while i < len(starts) and starts[i] <= end:
+            end = max(end, ends[i])
+            del starts[i], ends[i]
+        starts.insert(i, off)
+        ends.insert(i, end)
+
+    def _disjoint(self, op, n: int) -> bool:
+        row_ivs = self.intervals.get(op.row)
+        if row_ivs is None:
+            return True
+        starts, ends = row_ivs
+        end = op.off + n
+        i = bisect.bisect_right(starts, op.off)
+        if i > 0 and ends[i - 1] > op.off:
+            return False
+        return not (i < len(starts) and starts[i] < end)
+
+    def can_extend(self, op, n: int, cap: Optional[int]) -> bool:
+        if _kind_key(op) != self.kind:
+            return False
+        if self.sizes == {n}:
+            # uniform run: unconditional, exactly the pre-registry rule —
+            # the batched kernel applies ops in queue order, so even
+            # overlapping ranges keep last-writer-wins
+            return True
+        # mixed-size extension (pad-to-max segmented dispatch): puts
+        # require byte-range disjointness — overlapping writes stay in
+        # separate, sequentially dispatched runs so program order is
+        # preserved; gets commute, so only the headroom guard applies —
+        # and every op needs room for its padded window
+        if cap is None or self.headroom is None:
+            return False
+        if self.kind[0] == "put" and not self._disjoint(op, n):
+            return False
+        return max(self.max_n, n) <= min(self.headroom, cap - op.off)
+
+    def extend(self, op, n: int, cap: Optional[int]) -> None:
+        self.sizes.add(n)
+        self.max_n = max(self.max_n, n)
+        if cap is not None and self.headroom is not None:
+            self.headroom = min(self.headroom, cap - op.off)
+        if self.kind[0] == "put":
+            self._note(op.row, op.off, op.off + n)
+
+
+def _coalesced_runs(ops: Sequence,
+                    pool_bytes: Optional[Dict[int, int]] = None
+                    ) -> List[List]:
+    """Split into maximal runs sharing one batched dispatch.
+
+    An op extends the current run when it has the same kind and pool
+    and either (a) the same payload size as a so-far-uniform run — the
+    original coalescing rule — or (b) a *disjoint* byte range with
+    enough pool headroom, which lets mixed-size ops share one
+    pad-to-max segmented dispatch.  Overlapping ranges of different
+    sizes split the run, so dispatching runs in queue order preserves
+    put/put and put/get program order (last writer wins, reads see
+    prior writes), exactly like the blocking sequence.
+    """
     runs: List[List] = []
+    meta: Optional[_RunMeta] = None
     for op in ops:
-        if runs and _run_key(runs[-1][-1]) == _run_key(op):
+        n = _op_nbytes(op)
+        cap = None if pool_bytes is None else pool_bytes.get(op.poolid)
+        if runs and meta is not None and meta.can_extend(op, n, cap):
             runs[-1].append(op)
+            meta.extend(op, n, cap)
         else:
             runs.append([op])
+            meta = _RunMeta(op, n, cap)
     return runs
 
 

@@ -25,7 +25,7 @@ from typing import Dict, Optional, Tuple
 import jax
 
 from .atomics import ThreadedAtomics
-from .globmem import HeapState, PoolMeta, SymmetricHeap, align_up
+from .globmem import HeapState, SymmetricHeap
 from .gptr import (FLAG_COLLECTIVE, NON_COLLECTIVE_SEG, GlobalPtr)
 from .group import DartGroup
 from .lock import LockService
@@ -58,7 +58,6 @@ class DartContext:
         self.teamlist = tl_cls(config.teamlist_capacity)
         self.teams: Dict[int, Team] = {}          # teamid -> Team
         self.teams_by_slot: Dict[int, Team] = {}  # slot   -> Team
-        self._team_pool: Dict[int, PoolMeta] = {}  # teamid -> pool meta
         self._next_teamid = 0
         self.atomics = ThreadedAtomics(n_units)
         self.locks = LockService(self.atomics,
@@ -88,19 +87,30 @@ class DartContext:
             poolid, _, _ = _os.deref(self.heap, self.teams_by_slot, gptr)
         return self.engine.epoch_scope(poolid)
 
+    @property
+    def windows(self):
+        """The heap's teamid → live-PoolMeta window registry: the
+        binding ``deref`` routes collective pointers through (the MPI
+        window-object table; see ``globmem.WindowRegistry``)."""
+        return self.heap.windows
+
     # ------------------------------------------------------------------
     def _create_team(self, group: DartGroup, parent: Optional[int]) -> Team:
         teamid = self._next_teamid
         self._next_teamid += 1                  # teamIDs never reused (§IV.B.2)
         slot = self.teamlist.alloc(teamid)
-        team = Team(teamid=teamid, group=group, slot=slot, parent=parent)
-        self.teams[teamid] = team
-        self.teams_by_slot[slot] = team
-        # reserve the team's collective pool + empty translation table
+        # reserve the team's collective pool + empty translation table,
+        # and bind it: registry entry + poolid carried on the Team.
+        # Pool ids are monotonic while slots are reused (§IV.B.2), so
+        # this binding — not slot arithmetic — is what deref keys off.
         meta = self.heap.reserve_pool(
             n_rows=group.size(), pool_bytes=self.config.team_pool_bytes,
             collective=True)
-        self._team_pool[teamid] = meta
+        team = Team(teamid=teamid, group=group, slot=slot, parent=parent,
+                    poolid=meta.poolid)
+        self.teams[teamid] = team
+        self.teams_by_slot[slot] = team
+        self.heap.windows.register(teamid, meta)
         self.state[meta.poolid] = self.heap.init_pool_state(meta)
         return team
 
@@ -144,6 +154,7 @@ def dart_exit(ctx: DartContext) -> None:
     ctx.state.clear()
     ctx.teams.clear()
     ctx.teams_by_slot.clear()
+    ctx.heap.windows.clear()
     ctx._initialized = False
 
 
@@ -165,7 +176,12 @@ def dart_team_destroy(ctx: DartContext, teamid: int) -> None:
     team = ctx.teams.pop(teamid)
     ctx.teams_by_slot.pop(team.slot)
     ctx.teamlist.free(teamid)            # slot becomes reusable (§IV.B.2)
-    meta = ctx._team_pool.pop(teamid)
+    meta = ctx.heap.windows.drop(teamid)
+    # queued engine ops against the dropped window can never be
+    # dispatched (their arena is going away): fail their handles now
+    # with a clear error instead of KeyError-ing a later flush of
+    # unrelated pools.
+    ctx.engine.drop_pool(meta.poolid, reason=f"team {teamid} destroyed")
     ctx.state.pop(meta.poolid, None)
     ctx.heap.drop_pool(meta.poolid)
 
@@ -218,7 +234,7 @@ def dart_team_memalloc_aligned(ctx: DartContext, teamid: int,
     offset.
     """
     team = ctx.teams[teamid]
-    meta = ctx._team_pool[teamid]
+    meta = ctx.heap.windows.lookup(teamid)
     off = ctx.heap.memalloc_aligned(meta, nbytes_per_unit)
     return GlobalPtr(unitid=team.unit_at(0), segid=team.slot,
                      flags=FLAG_COLLECTIVE, addr=off)
@@ -226,7 +242,7 @@ def dart_team_memalloc_aligned(ctx: DartContext, teamid: int,
 
 def dart_team_memfree(ctx: DartContext, teamid: int,
                       gptr: GlobalPtr) -> None:
-    meta = ctx._team_pool[teamid]
+    meta = ctx.heap.windows.lookup(teamid)
     ctx.heap.memfree_aligned(meta, gptr.addr)
 
 
@@ -257,12 +273,13 @@ def dart_get_nb(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
 def dart_get(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
     """Issue-immediately get: returns (value-future, handle).
 
-    Flushes the target pool (queued puts become visible — read-after-
-    write ordering), then dispatches the read; the value is an XLA
-    async future, the handle completes when it is ready.
+    Flushes the target's ``(pool, row)`` lane (queued puts to that unit
+    become visible — read-after-write ordering; other targets' queued
+    epochs keep accumulating), then dispatches the read; the value is
+    an XLA async future, the handle completes when it is ready.
     """
     h = ctx.engine.get(ctx.heap, ctx.teams_by_slot, gptr, shape, dtype)
-    ctx.engine.flush(h.poolid)
+    ctx.engine.flush(h.poolid, h.row)
     return h._value, h
 
 
@@ -276,23 +293,31 @@ def dart_get_blocking(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
     """
     from . import shm as _shm
     if _shm.classify_locality(ctx, gptr) is _shm.Locality.SHM_LOCAL:
-        poolid, _, _ = _os.deref(ctx.heap, ctx.teams_by_slot, gptr)
-        ctx.engine.flush(poolid)
+        # dart_shm_view flushes the target's (pool, row) lane itself
         return _shm.dart_shm_view(ctx, gptr, shape, dtype)
     h = ctx.engine.get(ctx.heap, ctx.teams_by_slot, gptr, shape, dtype)
     return h.value()
 
 
-def dart_flush(ctx: DartContext, gptr: Optional[GlobalPtr] = None) -> None:
-    """Close the epoch (the ``MPI_Win_flush`` analogue): dispatch all
-    pending ops — or only those against ``gptr``'s pool — as coalesced
-    batches.  Completion of individual handles still goes through
+def dart_flush(ctx: DartContext, gptr: Optional[GlobalPtr] = None,
+               target: Optional[int] = None) -> None:
+    """Close the epoch: dispatch all pending ops, only those against
+    ``gptr``'s pool (the ``MPI_Win_flush`` analogue), or — with
+    ``target`` — only those against one unit's row of that pool (the
+    ``MPI_Win_flush_local(rank, win)`` analogue; other targets' queued
+    epochs keep accumulating for their own coalesced flush).
+    Completion of individual handles still goes through
     ``dart_wait``/``dart_test``."""
     if gptr is None:
+        if target is not None:
+            raise ValueError("per-target flush needs a gptr to name the "
+                             "window (dart_flush(ctx, gptr, target=unit))")
         ctx.engine.flush()
-    else:
-        poolid, _, _ = _os.deref(ctx.heap, ctx.teams_by_slot, gptr)
-        ctx.engine.flush(poolid)
+        return
+    if target is not None:
+        gptr = gptr.setunit(target)
+    poolid, row, _ = _os.deref(ctx.heap, ctx.teams_by_slot, gptr)
+    ctx.engine.flush(poolid, row if target is not None else None)
 
 
 def dart_bcast(ctx: DartContext, root_gptr: GlobalPtr, nbytes: int):

@@ -48,7 +48,8 @@ def classify_locality(ctx, gptr: GlobalPtr) -> Locality:
     """
     if not gptr.is_shm:
         return Locality.REMOTE
-    if not shm_supported(ctx):
+    poolid, _, _ = deref(ctx.heap, ctx.teams_by_slot, gptr)
+    if not shm_supported(ctx, poolid):
         return Locality.REMOTE
     return Locality.SHM_LOCAL
 
@@ -81,6 +82,13 @@ def dart_shm_view(ctx, gptr: GlobalPtr, shape: Tuple[int, ...],
         raise ValueError("pointer was not minted by "
                          "dart_team_memalloc_shared (no FLAG_SHM)")
     poolid, row, off = deref(ctx.heap, ctx.teams_by_slot, gptr)
+    # every read path flushes first (ROADMAP completion semantics):
+    # queued puts to this target must land before the zero-copy view is
+    # taken, or direct callers see stale bytes.  Per-target lane only —
+    # other targets' queued epochs keep accumulating.
+    engine = getattr(ctx, "engine", None)
+    if engine is not None:
+        engine.flush(poolid, row)
     arena = ctx.state[poolid]
     try:
         host = np.from_dlpack(arena)          # zero-copy on host backends
@@ -95,17 +103,30 @@ def dart_shm_view(ctx, gptr: GlobalPtr, shape: Tuple[int, ...],
     return view
 
 
-def shm_supported(ctx) -> bool:
+def shm_supported(ctx, poolid=None) -> bool:
     """True when the current backend exposes host-visible arenas.
 
-    Probed once per context and cached — the classifier sits on the
-    hot get path, so the dlpack probe must not re-run per deref.
+    Probes the *addressed* pool when ``poolid`` is given (an arbitrary
+    pool's visibility does not prove another's), and reports False —
+    instead of raising — when the pool is absent or the heap state is
+    empty (after ``dart_exit``).  The positive/negative result is
+    cached per context — the classifier sits on the hot get path, so
+    the dlpack probe must not re-run per deref.
     """
+    # liveness first, cache second: the cache records backend
+    # host-visibility, which says nothing about whether the addressed
+    # pool (or any pool, after dart_exit) still exists
+    if not ctx.state:
+        return False            # post-exit: nothing is addressable
+    if poolid is not None and poolid not in ctx.state:
+        return False            # addressed pool is gone
     cached = getattr(ctx, "_shm_supported", None)
     if cached is not None:
         return cached
+    arena = (ctx.state[poolid] if poolid is not None
+             else next(iter(ctx.state.values())))
     try:
-        np.from_dlpack(next(iter(ctx.state.values())))
+        np.from_dlpack(arena)
         ok = True
     except Exception:   # noqa: BLE001
         ok = False

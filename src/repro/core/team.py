@@ -121,8 +121,14 @@ class Team:
 
     teamid: int
     group: DartGroup
-    slot: int                      # teamlist slot index (keys pools/tables)
+    slot: int                      # teamlist slot index (gptr.segid routing)
     parent: Optional[int] = None   # parent teamid
+    #: poolid of this team's collective pool, bound at creation and
+    #: mirrored in the heap's :class:`~repro.core.globmem.WindowRegistry`
+    #: (teamid → PoolMeta).  Slots are reused after destroy (§IV.B.2) but
+    #: pool ids are not, so dereference keys off this binding — never off
+    #: slot arithmetic.
+    poolid: int = -1
 
     def size(self) -> int:
         return self.group.size()

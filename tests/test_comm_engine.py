@@ -253,6 +253,23 @@ def test_put_get_benchmark_quick_runs_new_series():
     assert any(n.startswith("typed_api/overhead_fit/") for n in names)
 
 
+@pytest.mark.slow
+def test_engine_profile_machine_readable():
+    """`benchmarks.run` emits BENCH_engine.json from this profile: the
+    dispatch-count wins (coalescing, per-target isolation, mixed-size
+    hoisting) must be present and assertable in the payload."""
+    from benchmarks import put_get
+    profile = put_get.engine_profile(repeats=2, quick=True)
+    s = profile["series"]
+    assert s["blocking"]["dispatches"] == profile["n_ops"]
+    assert s["coalesced"]["dispatches"] == 1
+    assert s["mixed_size_coalesced"]["dispatches"] == 1
+    assert s["per_target_flush"]["dispatches_target_only"] == 1
+    assert s["per_target_flush"]["ops_left_queued"] == profile["n_ops"] // 2
+    import json
+    json.dumps(profile)                  # machine-readable, no jnp leaks
+
+
 # ------------------------------------------------- property-based ----------
 
 @given(st.integers(2, 6), st.integers(0, 48),

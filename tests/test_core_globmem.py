@@ -109,7 +109,7 @@ def test_team_memfree_then_realloc_returns_coalesced_block():
         g1 = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 1024)
         g2 = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 1024)
         assert (g1.addr, g2.addr) == (0, 1024)
-        alloc = ctx._team_pool[DART_TEAM_ALL].shared_alloc
+        alloc = ctx.heap.windows.lookup(DART_TEAM_ALL).shared_alloc
         dart_team_memfree(ctx, DART_TEAM_ALL, g1)
         dart_team_memfree(ctx, DART_TEAM_ALL, g2)
         assert alloc.bytes_live() == 0
@@ -117,7 +117,7 @@ def test_team_memfree_then_realloc_returns_coalesced_block():
         g3 = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 2048)
         assert g3.addr == 0                    # spans both former blocks
         # and the translation table tracks only the live allocation
-        assert len(ctx._team_pool[DART_TEAM_ALL].table) == 1
+        assert len(ctx.heap.windows.lookup(DART_TEAM_ALL).table) == 1
     finally:
         dart_exit(ctx)
 

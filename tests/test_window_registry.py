@@ -1,0 +1,432 @@
+"""Window registry + per-target flush + overlap-aware coalescing.
+
+Covers the teamlist slot-reuse routing bug (paper §IV.B.2/§IV.B.4):
+slots are explicitly reused after ``dart_team_destroy`` while pool ids
+grow monotonically, so the old ``slot + 1`` dereference sent a
+recreated team's collective pointers to a dropped (or foreign) pool.
+Dereference is now keyed through the heap's ``WindowRegistry``
+(teamid → live PoolMeta, carried on the Team at creation), and the
+engine grew the ``MPI_Win_flush_local(rank, win)`` analogue plus
+mixed-size run coalescing.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DART_TEAM_ALL, DartConfig, WindowDestroyedError,
+                        dart_exit, dart_flush, dart_get_blocking,
+                        dart_get_nb, dart_init, dart_memalloc, dart_put,
+                        dart_put_blocking, dart_shm_view, dart_team_create,
+                        dart_team_destroy, dart_team_memalloc_aligned,
+                        dart_team_memalloc_shared, dart_test, dart_wait,
+                        dart_waitall, deref, group_from_units,
+                        shm_supported)
+from repro.core import runtime as rt
+
+
+TEAMLIST_IMPLS = ("paper", "freelist")
+
+
+def _mk_ctx(impl="paper", n_units=4, pool=8192):
+    return dart_init(n_units=n_units, config=DartConfig(
+        non_collective_pool_bytes=pool, team_pool_bytes=pool,
+        teamlist_impl=impl))
+
+
+@pytest.fixture(params=TEAMLIST_IMPLS)
+def ctx(request):
+    c = _mk_ctx(request.param)
+    yield c
+    dart_exit(c)
+
+
+# ------------------------------------------------- slot-reuse routing ------
+
+def test_destroy_recreate_roundtrip_on_reused_slot(ctx):
+    """THE regression: destroy a team, recreate on the same slot, then
+    put/get through the new team's collective pointer.  Before the
+    window registry this KeyError'd (the new team's slot+1 named the
+    dropped pool) or aliased a foreign pool."""
+    t1 = dart_team_create(ctx, DART_TEAM_ALL, group_from_units([0, 1]))
+    slot1 = ctx.teams[t1].slot
+    dart_team_destroy(ctx, t1)
+    t2 = dart_team_create(ctx, DART_TEAM_ALL, group_from_units([1, 2]))
+    assert ctx.teams[t2].slot == slot1          # slot really is reused
+    g = dart_team_memalloc_aligned(ctx, t2, 256)
+    val = jnp.arange(16, dtype=jnp.float32) * 2.0
+    dart_put_blocking(ctx, g.setunit(2), val)
+    out = dart_get_blocking(ctx, g.setunit(2), (16,), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(val))
+
+
+def test_destroy_recreate_no_cross_team_aliasing(ctx):
+    """A recreated team's pool starts zeroed and never shows the dead
+    team's bytes, and deref resolves to the NEW pool id."""
+    t1 = dart_team_create(ctx, DART_TEAM_ALL, group_from_units([0, 1]))
+    g1 = dart_team_memalloc_aligned(ctx, t1, 128)
+    dart_put_blocking(ctx, g1.setunit(1), jnp.full((8,), 77, jnp.int32))
+    old_poolid = ctx.teams[t1].poolid
+    dart_team_destroy(ctx, t1)
+    t2 = dart_team_create(ctx, DART_TEAM_ALL, group_from_units([0, 1]))
+    assert ctx.teams[t2].slot == ctx.teams_by_slot[ctx.teams[t2].slot].slot
+    assert ctx.teams[t2].poolid != old_poolid   # pool ids never reused
+    g2 = dart_team_memalloc_aligned(ctx, t2, 128)
+    pid, row, off = deref(ctx.heap, ctx.teams_by_slot, g2.setunit(1))
+    assert pid == ctx.teams[t2].poolid
+    out = dart_get_blocking(ctx, g2.setunit(1), (8,), jnp.int32)
+    assert np.all(np.asarray(out) == 0)         # fresh zeroed window
+
+
+def test_many_destroy_create_cycles(ctx):
+    """Repeated churn keeps routing correct on every generation."""
+    for k in range(5):
+        t = dart_team_create(ctx, DART_TEAM_ALL, group_from_units([0, 3]))
+        g = dart_team_memalloc_aligned(ctx, t, 64)
+        dart_put_blocking(ctx, g.setunit(3), jnp.full((4,), k, jnp.int32))
+        out = dart_get_blocking(ctx, g.setunit(3), (4,), jnp.int32)
+        assert np.all(np.asarray(out) == k)
+        dart_team_destroy(ctx, t)
+
+
+def test_window_registry_lookup_after_destroy_raises(ctx):
+    t = dart_team_create(ctx, DART_TEAM_ALL, group_from_units([0, 1]))
+    meta = ctx.heap.windows.lookup(t)
+    assert meta.poolid == ctx.teams[t].poolid
+    dart_team_destroy(ctx, t)
+    with pytest.raises(WindowDestroyedError):
+        ctx.heap.windows.lookup(t)
+
+
+def test_dangling_pointer_semantics(ctx):
+    """A pointer retained past its team's destruction is dangling (the
+    gptr names the slot, not the teamid — docs/API.md "Windows"): it
+    fails deref while the slot is empty, and resolves against the new
+    occupant's membership once the slot is reused."""
+    t1 = dart_team_create(ctx, DART_TEAM_ALL, group_from_units([0, 1]))
+    g1 = dart_team_memalloc_aligned(ctx, t1, 128)
+    dart_team_destroy(ctx, t1)
+    with pytest.raises(KeyError):           # slot unoccupied
+        deref(ctx.heap, ctx.teams_by_slot, g1.setunit(1))
+    t2 = dart_team_create(ctx, DART_TEAM_ALL, group_from_units([2, 3]))
+    assert ctx.teams[t2].slot == g1.segid   # slot reused
+    with pytest.raises(KeyError):           # unit 1 not in the occupant
+        deref(ctx.heap, ctx.teams_by_slot, g1.setunit(1))
+
+
+def test_team_carries_pool_binding(ctx):
+    """The binding rides on the Team object from creation."""
+    t = dart_team_create(ctx, DART_TEAM_ALL, group_from_units([2, 3]))
+    team = ctx.teams[t]
+    assert team.poolid == ctx.heap.windows.lookup(t).poolid
+    assert team.poolid in ctx.state
+
+
+# ------------------------------------- destroy with queued engine ops ------
+
+def test_destroy_fails_queued_ops_and_flush_survives(ctx):
+    """Queued ops on a destroyed window fail with a clear error, and a
+    later whole-engine flush must not KeyError on the dropped pool."""
+    t = dart_team_create(ctx, DART_TEAM_ALL, group_from_units([0, 1]))
+    g = dart_team_memalloc_aligned(ctx, t, 256)
+    gw = dart_memalloc(ctx, 256, unit=0)
+    h_doomed = dart_put(ctx, g.setunit(1), jnp.ones((8,), jnp.int32))
+    h_get = dart_get_nb(ctx, g.setunit(1), (8,), jnp.int32)
+    h_world = dart_put(ctx, gw, jnp.full((8,), 5, jnp.int32))
+    dart_team_destroy(ctx, t)
+    with pytest.raises(RuntimeError, match="window destroyed"):
+        dart_wait(h_doomed)
+    with pytest.raises(RuntimeError, match="window destroyed"):
+        h_get.value()
+    with pytest.raises(RuntimeError, match="window destroyed"):
+        dart_test(h_doomed)
+    assert h_doomed.state == "failed"
+    ctx.engine.flush()                  # must not KeyError on state[pid]
+    dart_wait(h_world)                  # the surviving pool is untouched
+    out = dart_get_blocking(ctx, gw, (8,), jnp.int32)
+    assert np.all(np.asarray(out) == 5)
+
+
+def test_destroy_waitall_reports_failed_handle(ctx):
+    t = dart_team_create(ctx, DART_TEAM_ALL, group_from_units([0, 1]))
+    g = dart_team_memalloc_aligned(ctx, t, 128)
+    h = dart_put(ctx, g.setunit(0), jnp.ones((4,), jnp.int32))
+    dart_team_destroy(ctx, t)
+    with pytest.raises(RuntimeError, match="window destroyed"):
+        dart_waitall([h])
+
+
+# ------------------------------------------------- per-target flush --------
+
+def test_per_target_flush_isolation(ctx):
+    """The acceptance criterion: flushing unit A's queued puts must not
+    dispatch unit B's queued ops on the same pool."""
+    g = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 1024)
+    ha = [dart_put(ctx, g.setunit(1) + 128 * i,
+                   jnp.full((8,), i, jnp.float32)) for i in range(3)]
+    hb = [dart_put(ctx, g.setunit(2) + 128 * i,
+                   jnp.full((8,), 10 + i, jnp.float32)) for i in range(3)]
+    d0 = ctx.engine.dispatch_count
+    dart_flush(ctx, g, target=1)
+    assert ctx.engine.dispatch_count - d0 == 1      # A's 3 puts, 1 batch
+    assert all(h.state != "queued" for h in ha)
+    assert all(h.state == "queued" for h in hb)     # B untouched
+    assert ctx.engine.pending_ops() == 3
+    dart_flush(ctx, g, target=2)
+    assert ctx.engine.dispatch_count - d0 == 2
+    assert all(h.state != "queued" for h in hb)
+    for i in range(3):
+        assert np.all(np.asarray(dart_get_blocking(
+            ctx, g.setunit(1) + 128 * i, (8,), jnp.float32)) == i)
+        assert np.all(np.asarray(dart_get_blocking(
+            ctx, g.setunit(2) + 128 * i, (8,), jnp.float32)) == 10 + i)
+
+
+def test_handle_wait_flushes_only_its_lane(ctx):
+    g = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 512)
+    h1 = dart_put(ctx, g.setunit(1), jnp.ones((8,), jnp.float32))
+    h2 = dart_put(ctx, g.setunit(3), jnp.ones((8,), jnp.float32))
+    dart_wait(h1)
+    assert h2.state == "queued"                     # other target untouched
+    assert ctx.engine.pending_ops() == 1
+    dart_wait(h2)
+    assert ctx.engine.pending_ops() == 0
+
+
+def test_typed_ref_flush_per_target(ctx):
+    ga = ctx.alloc((8,), jnp.float32)
+    with pytest.raises(Exception):
+        ga.flush(99)                                # non-member rejected
+    h1 = ga[1].put_nb(jnp.full((8,), 1.5, jnp.float32))
+    h2 = ga[2].put_nb(jnp.full((8,), 2.5, jnp.float32))
+    d0 = ctx.engine.dispatch_count
+    ga[1].flush()
+    assert ctx.engine.dispatch_count - d0 == 1
+    assert h1.state != "queued" and h2.state == "queued"
+    ga.flush()                                      # whole-window flush
+    assert h2.state != "queued"
+    np.testing.assert_array_equal(np.asarray(ga[2].get()),
+                                  np.full((8,), 2.5, np.float32))
+
+
+def test_waitall_coalesces_across_lanes_but_preserves_isolation(ctx):
+    """waitall flushes the UNION of its handles' lanes as one epoch —
+    N same-size puts to N units stay ONE dispatch — while a queued op
+    to a unit outside the handle list keeps accumulating."""
+    g = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 512)
+    hs = [dart_put(ctx, g.setunit(u), jnp.full((8,), float(u),
+                                               jnp.float32))
+          for u in range(3)]
+    bystander = dart_put(ctx, g.setunit(3), jnp.full((8,), 9.0,
+                                                     jnp.float32))
+    d0 = ctx.engine.dispatch_count
+    dart_waitall(hs)
+    assert ctx.engine.dispatch_count - d0 == 1      # one coalesced batch
+    assert bystander.state == "queued"              # lane 3 untouched
+    dart_wait(bystander)
+    for u in range(3):
+        assert np.all(np.asarray(dart_get_blocking(
+            ctx, g.setunit(u), (8,), jnp.float32)) == u)
+
+
+def test_dart_flush_target_without_gptr_rejected(ctx):
+    with pytest.raises(ValueError):
+        dart_flush(ctx, None, target=1)
+
+
+def test_get_nb_value_flushes_only_own_lane(ctx):
+    """A read of unit A must see A's queued puts but leave B queued."""
+    g = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 256)
+    dart_put(ctx, g.setunit(1), jnp.full((4,), 7.0, jnp.float32))
+    hb = dart_put(ctx, g.setunit(2), jnp.full((4,), 8.0, jnp.float32))
+    out = dart_get_nb(ctx, g.setunit(1), (4,), jnp.float32).value()
+    assert np.all(np.asarray(out) == 7.0)           # RAW ordering on A
+    assert hb.state == "queued"                     # B still accumulating
+    dart_wait(hb)
+
+
+# -------------------------------------------- overlap-aware coalescing -----
+
+def test_mixed_size_disjoint_puts_one_dispatch(ctx):
+    """The acceptance criterion: N non-overlapping puts of DIFFERENT
+    sizes coalesce into ONE pad-to-max segmented dispatch."""
+    g = dart_memalloc(ctx, 4096, unit=0)
+    sizes = [4, 16, 8, 32, 1, 24]
+    hs = []
+    d0, c0 = ctx.engine.dispatch_count, ctx.engine.ops_coalesced
+    for i, n in enumerate(sizes):
+        hs.append(dart_put(ctx, g + 256 * i,
+                           jnp.full((n,), float(i + 1), jnp.float32)))
+    dart_flush(ctx)
+    assert ctx.engine.dispatch_count - d0 == 1
+    assert ctx.engine.ops_coalesced - c0 == len(sizes)
+    dart_waitall(hs)
+    for i, n in enumerate(sizes):
+        out = np.asarray(dart_get_blocking(ctx, g + 256 * i,
+                                           (n,), jnp.float32))
+        assert np.all(out == i + 1)
+        # the padded window must not have smeared past the payload
+        tail = np.asarray(dart_get_blocking(
+            ctx, g + 256 * i + 4 * n, (4,), jnp.float32))
+        assert np.all(tail == 0)
+
+
+def test_mixed_size_disjoint_rows_share_dispatch(ctx):
+    """Disjointness is per-row: same offsets on different units never
+    overlap, so mixed sizes still share the dispatch."""
+    g = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 512)
+    d0 = ctx.engine.dispatch_count
+    hs = [dart_put(ctx, g.setunit(u), jnp.full((4 * (u + 1),), float(u),
+                                               jnp.float32))
+          for u in range(4)]
+    dart_flush(ctx)
+    assert ctx.engine.dispatch_count - d0 == 1
+    dart_waitall(hs)
+    for u in range(4):
+        out = np.asarray(dart_get_blocking(ctx, g.setunit(u),
+                                           (4 * (u + 1),), jnp.float32))
+        assert np.all(out == u)
+
+
+def test_overlapping_mixed_size_puts_split_and_order(ctx):
+    """Overlapping ranges of different sizes must NOT share a hoisted
+    dispatch: program order (last writer wins) is preserved by run
+    splitting."""
+    g = dart_memalloc(ctx, 512, unit=0)
+    d0 = ctx.engine.dispatch_count
+    dart_put(ctx, g, jnp.full((8,), 1.0, jnp.float32))       # 32B
+    dart_put(ctx, g + 16, jnp.full((2,), 2.0, jnp.float32))  # 8B, overlaps
+    dart_flush(ctx)
+    assert ctx.engine.dispatch_count - d0 == 2               # split
+    out = np.asarray(dart_get_blocking(ctx, g, (8,), jnp.float32))
+    np.testing.assert_array_equal(out, [1, 1, 1, 1, 2, 2, 1, 1])
+
+
+def test_mixed_size_gets_one_dispatch(ctx):
+    g = dart_memalloc(ctx, 2048, unit=1)
+    sizes = [4, 12, 8]
+    for i, n in enumerate(sizes):
+        dart_put_blocking(ctx, g + 128 * i,
+                          (jnp.arange(n) + 10 * i).astype(jnp.float32))
+    hs = [dart_get_nb(ctx, g + 128 * i, (n,), jnp.float32)
+          for i, n in enumerate(sizes)]
+    d0 = ctx.engine.dispatch_count
+    dart_flush(ctx)
+    assert ctx.engine.dispatch_count - d0 == 1
+    for i, (n, h) in enumerate(zip(sizes, hs)):
+        np.testing.assert_array_equal(
+            np.asarray(h.value()), np.arange(n, dtype=np.float32) + 10 * i)
+
+
+def test_overlapping_mixed_size_gets_still_coalesce(ctx):
+    """Reads commute: overlapping gets of different sizes need no
+    disjointness split — one dispatch, each decoding its own prefix."""
+    g = dart_memalloc(ctx, 512, unit=0)
+    dart_put_blocking(ctx, g, jnp.arange(8, dtype=jnp.float32))
+    hs = [dart_get_nb(ctx, g, (8,), jnp.float32),
+          dart_get_nb(ctx, g + 16, (2,), jnp.float32)]   # overlaps
+    d0 = ctx.engine.dispatch_count
+    dart_flush(ctx)
+    assert ctx.engine.dispatch_count - d0 == 1
+    np.testing.assert_array_equal(np.asarray(hs[0].value()),
+                                  np.arange(8, dtype=np.float32))
+    np.testing.assert_array_equal(np.asarray(hs[1].value()), [4.0, 5.0])
+
+
+def test_mixed_sizes_near_pool_end_stay_correct(ctx):
+    """Headroom guard: a small put hard against the pool end must not
+    join a larger-padded run (the padded window would clamp its start).
+    Correct bytes either way; this pins the semantics, not the count."""
+    pool = ctx.config.non_collective_pool_bytes
+    g = dart_memalloc(ctx, 4096, unit=0)
+    big = jnp.full((64,), 3.0, jnp.float32)              # 256B at offset 0
+    small_off = pool - 4                                 # last 4 bytes
+    tail_ptr = g + (small_off - g.addr)
+    dart_put(ctx, g, big)
+    dart_put(ctx, tail_ptr, jnp.full((1,), 9.0, jnp.float32))
+    dart_flush(ctx)
+    assert np.all(np.asarray(
+        dart_get_blocking(ctx, g, (64,), jnp.float32)) == 3.0)
+    assert np.all(np.asarray(
+        dart_get_blocking(ctx, tail_ptr, (1,), jnp.float32)) == 9.0)
+
+
+def test_same_size_runs_unchanged(ctx):
+    """The pre-registry uniform rule still holds: same-size overlapping
+    puts share one in-order dispatch (last writer wins)."""
+    g = dart_memalloc(ctx, 256, unit=0)
+    d0 = ctx.engine.dispatch_count
+    dart_put(ctx, g, jnp.full((8,), 1.0, jnp.float32))
+    dart_put(ctx, g, jnp.full((8,), 2.0, jnp.float32))
+    dart_flush(ctx)
+    assert ctx.engine.dispatch_count - d0 == 1
+    assert np.all(np.asarray(
+        dart_get_blocking(ctx, g, (8,), jnp.float32)) == 2.0)
+
+
+# ------------------------------------------------- shm read-path fixes -----
+
+def test_shm_view_flushes_target_lane(ctx):
+    """Direct dart_shm_view callers must see queued puts (the 'every
+    read path flushes first' invariant)."""
+    if not shm_supported(ctx):
+        pytest.skip("backend arenas not host-visible")
+    gs = dart_team_memalloc_shared(ctx, DART_TEAM_ALL, 256)
+    dart_put(ctx, gs.setunit(2), jnp.full((8,), 4.5, jnp.float32))
+    view = dart_shm_view(ctx, gs.setunit(2), (8,), jnp.float32)
+    assert np.all(np.asarray(view) == 4.5)
+
+
+def test_shm_supported_empty_state_returns_false():
+    c = _mk_ctx()
+    shm_supported(c)                        # warm the per-context cache
+    dart_exit(c)
+    # liveness must trump the warm cache: no stale True, no StopIteration
+    assert shm_supported(c) is False
+
+
+def test_shm_supported_probes_addressed_pool(ctx):
+    t = dart_team_create(ctx, DART_TEAM_ALL, group_from_units([0, 1]))
+    pid = ctx.teams[t].poolid
+    backend_visible = shm_supported(ctx)    # warms the cache
+    assert shm_supported(ctx, pid) == backend_visible
+    dart_team_destroy(ctx, t)
+    # the dropped pool must report False even with the cache warm
+    assert shm_supported(ctx, pid) is False
+    assert shm_supported(ctx, poolid=10**6) is False        # absent pool
+    assert shm_supported(ctx) == backend_visible            # others intact
+
+
+# ------------------------------------- typed collectives: one dispatch -----
+
+def test_gather_typed_single_counted_dispatch(ctx):
+    ga = ctx.alloc((4,), jnp.float32)
+    for u in range(4):
+        ga[u].put(jnp.full((4,), float(u), jnp.float32))
+    d0 = ctx.engine.dispatch_count
+    rows = ga.gather()
+    assert ctx.engine.dispatch_count - d0 == 1
+    np.testing.assert_array_equal(
+        np.asarray(rows),
+        np.repeat(np.arange(4, dtype=np.float32)[:, None], 4, axis=1))
+
+
+def test_scatter_typed_single_counted_dispatch(ctx):
+    ga = ctx.alloc((4,), jnp.int32)
+    vals = jnp.arange(16, dtype=jnp.int32).reshape(4, 4)
+    d0 = ctx.engine.dispatch_count
+    rt.dart_scatter_typed(ctx, ga.gptr, vals)
+    assert ctx.engine.dispatch_count - d0 == 1
+    for u in range(4):
+        np.testing.assert_array_equal(np.asarray(ga[u].get()),
+                                      np.asarray(vals[u]))
+
+
+def test_scatter_typed_roundtrip_dtypes(ctx):
+    for dtype in (jnp.float32, jnp.int32, jnp.bfloat16):
+        ga = ctx.alloc((3,), dtype)
+        vals = (jnp.arange(12).reshape(4, 3) + 1).astype(dtype)
+        ga.scatter(vals)
+        got = ga.gather()
+        assert (np.asarray(got).tobytes() == np.asarray(vals).tobytes())
+        ga.free()
