@@ -1,0 +1,15 @@
+.PHONY: verify test bench bench-quick
+
+# Tier-1 verification: pytest + quick benchmark smoke + BENCH_engine
+# schema guard (see scripts/ci.sh).
+verify:
+	bash scripts/ci.sh
+
+test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
+
+bench-quick:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m benchmarks.run --quick
+
+bench:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m benchmarks.run

@@ -75,9 +75,13 @@ def main() -> None:
         print(f"# wrote {path}", flush=True)
 
     if "put_get" in suites:
-        # machine-readable engine trajectory (dispatch counts + µs/op
-        # for blocking vs coalesced vs per-target vs mixed-size): the
-        # perf numbers dashboards diff across PRs.
+        # machine-readable engine trajectory (schema BENCH_engine/v2:
+        # dispatch counts + µs/op for blocking vs coalesced vs
+        # per-target vs mixed-size, plus the flush cost model — cold
+        # compile vs warm plan-cache-hit µs/op and steady-state
+        # recompile count): the perf numbers dashboards diff across
+        # PRs.  scripts/check_bench_schema.py (run by `make verify`)
+        # fails CI on schema drift.
         try:
             profile = put_get.engine_profile(repeats=args.repeats,
                                              quick=args.quick)

@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Fail CI on BENCH_engine schema drift.
+
+``benchmarks/out/BENCH_engine.json`` is the machine-readable engine
+trajectory dashboards diff across PRs; this guard keeps its shape
+stable so those diffs stay meaningful.  Checks the schema id, the
+required series and their dispatch-count invariants, and the v2 flush
+cost model (cold vs warm + zero steady-state recompiles — the
+shape-stable-flush acceptance criteria).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+PATH = pathlib.Path(__file__).resolve().parents[1] / (
+    "benchmarks/out/BENCH_engine.json")
+
+SCHEMA = "BENCH_engine/v2"
+SERIES_KEYS = {"dispatches", "ops", "us_per_op", "us_per_call"}
+REQUIRED_SERIES = {"blocking", "coalesced", "per_target_flush",
+                   "mixed_size_coalesced"}
+FLUSH_COST_KEYS = {"cold_us_per_op", "warm_us_per_op",
+                   "cold_vs_warm_speedup", "compiles_cold",
+                   "recompiles_steady_state", "warm_epoch_shapes"}
+PLAN_CACHE_KEYS = {"compile_count", "plan_cache_hits", "size", "builds"}
+
+
+def fail(msg: str) -> None:
+    print(f"BENCH_engine schema check FAILED: {msg}", file=sys.stderr)
+    raise SystemExit(1)
+
+
+def main() -> None:
+    if not PATH.exists():
+        fail(f"{PATH} missing (run `python -m benchmarks.run --quick`)")
+    profile = json.loads(PATH.read_text())
+
+    if profile.get("schema") != SCHEMA:
+        fail(f"schema is {profile.get('schema')!r}, expected {SCHEMA!r}")
+    series = profile.get("series", {})
+    missing = REQUIRED_SERIES - series.keys()
+    if missing:
+        fail(f"missing series: {sorted(missing)}")
+    for name in REQUIRED_SERIES:
+        if not SERIES_KEYS <= series[name].keys():
+            fail(f"series {name!r} lacks {sorted(SERIES_KEYS - series[name].keys())}")
+    if series["coalesced"]["dispatches"] != 1:
+        fail("coalesced series no longer flushes as ONE dispatch")
+    if series["blocking"]["dispatches"] != profile["n_ops"]:
+        fail("blocking series dispatch count drifted")
+
+    fc = profile.get("flush_cost", {})
+    if not FLUSH_COST_KEYS <= fc.keys():
+        fail(f"flush_cost lacks {sorted(FLUSH_COST_KEYS - fc.keys())}")
+    if fc["recompiles_steady_state"] != 0:
+        fail("steady-state epochs recompiled — plan cache regressed")
+    if fc["cold_vs_warm_speedup"] < 5.0:
+        fail(f"warm flush only {fc['cold_vs_warm_speedup']}x faster than "
+             "cold (acceptance: >= 5x)")
+    pc = profile.get("plan_cache", {})
+    if not PLAN_CACHE_KEYS <= pc.keys():
+        fail(f"plan_cache lacks {sorted(PLAN_CACHE_KEYS - pc.keys())}")
+
+    print(f"BENCH_engine schema OK ({SCHEMA}): "
+          f"cold {fc['cold_us_per_op']}us/op -> warm "
+          f"{fc['warm_us_per_op']}us/op "
+          f"({fc['cold_vs_warm_speedup']}x), 0 steady-state recompiles")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the checks every PR must keep green.
+#
+#   make verify          (or: bash scripts/ci.sh)
+#
+# 1. tier-1 pytest suite (ROADMAP "Tier-1 verify")
+# 2. benchmark harness smoke run (--quick): every suite must still run
+#    and emit its artifacts
+# 3. BENCH_engine schema guard: the machine-readable engine trajectory
+#    (benchmarks/out/BENCH_engine.json) must keep the BENCH_engine/v2
+#    shape and its dispatch/flush-cost invariants, so perf diffs stay
+#    comparable across PRs
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== benchmarks (quick) =="
+python -m benchmarks.run --quick
+
+echo "== BENCH_engine schema =="
+python scripts/check_bench_schema.py
+
+echo "verify: OK"

@@ -20,11 +20,13 @@ step it is a zero-payload psum (token barrier).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import segmented_copy as _sc
 
 from .globmem import (HeapState, SymmetricHeap, copy_state,
                       from_bytes, nbytes_of, to_bytes)
@@ -97,60 +99,169 @@ def team_barrier(axis: str, groups=None):
 # one-sided ops are flushed first (queued puts are ordered *before* the
 # collective, matching the paper's epoch semantics) and the kernel
 # launch is counted in engine.dispatch_count.
+#
+# The kernels follow the engine's shape-stable DispatchPlan discipline
+# (repro.kernels.segmented_copy): segment bytes / element counts are
+# bucketed to powers of two and the true length travels as a traced
+# scalar in a packed int32 params array, so varying collective sizes
+# hit a small cached kernel family instead of recompiling per size.
+# Masked flat-index addressing (scatter mode='drop', gather
+# mode='fill') keeps padded lanes from ever touching bytes outside the
+# addressed segment.  Donation is ENGINE-GATED: with an engine the
+# arena is holder-owned and donated; on the functional engine=None
+# path the caller keeps its snapshot, so the kernels must not donate
+# (previously _seg_bcast/_seg_scatter/_seg_scatter_typed donated
+# unconditionally and deleted the caller's retained state —
+# _seg_allreduce already documented why that is wrong).
 # --------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, donate_argnums=0, static_argnums=(3,))
-def _seg_bcast(arena, root_row, off, nbytes):
-    src = jax.lax.dynamic_slice(arena, (root_row, off), (1, nbytes))
-    tiled = jnp.broadcast_to(src, (arena.shape[0], nbytes))
-    return jax.lax.dynamic_update_slice(arena, tiled, (jnp.int32(0), off))
+def _row_lane_dst(R: int, P: int, off, lane, valid):
+    """(R, seg) flat arena positions for every row's segment lane;
+    masked lanes get distinct out-of-range markers (dropped)."""
+    rows = jnp.arange(R, dtype=jnp.int32)[:, None]
+    seg = lane.shape[0]
+    return jnp.where(valid[None, :], rows * P + off + lane[None, :],
+                     R * P + rows * seg + lane[None, :])
 
 
-@functools.partial(jax.jit, static_argnums=(2,))
-def _seg_gather(arena, off, nbytes):
-    return jax.lax.dynamic_slice(arena, (jnp.int32(0), off),
-                                 (arena.shape[0], nbytes))
+def _donate(donate: bool):
+    return (0,) if donate else ()
 
 
-@functools.partial(jax.jit, donate_argnums=0)
-def _seg_scatter(arena, off, values):
-    return jax.lax.dynamic_update_slice(arena, values, (jnp.int32(0), off))
+def _bcast_plan(arena_shape, seg: int, donate: bool):
+    _sc.check_flat_addressable(arena_shape)
+    key = ("coll_bcast", arena_shape, seg, donate)
+
+    def build():
+        def fn(arena, params):          # params = [root_row, off, nbytes]
+            R, P = arena.shape
+            root, off, n = params[0], params[1], params[2]
+            lane = jnp.arange(seg, dtype=jnp.int32)
+            valid = lane < n
+            src = jnp.take(arena.reshape(-1),
+                           jnp.where(valid, root * P + off + lane, R * P),
+                           mode="fill", fill_value=0)
+            dst = _row_lane_dst(R, P, off, lane, valid)
+            out = arena.reshape(-1).at[dst.reshape(-1)].set(
+                jnp.broadcast_to(src, (R, seg)).reshape(-1),
+                mode="drop", unique_indices=True)
+            return out.reshape(R, P)
+        return jax.jit(fn, donate_argnums=_donate(donate))
+
+    return _sc.cached_plan(key, build)
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
-def _seg_gather_typed(arena, off, shape, dtype):
-    """Typed gather as ONE kernel: slice + per-row byte decode fused,
-    so the dispatch the engine counts is the dispatch that runs."""
-    n = nbytes_of(shape, dtype)
-    raw = jax.lax.dynamic_slice(arena, (jnp.int32(0), off),
-                                (arena.shape[0], n))
-    return jax.vmap(lambda r: from_bytes(r, shape, dtype))(raw)
+def _row_gather_plan(arena_shape, seg: int):
+    _sc.check_flat_addressable(arena_shape)
+    key = ("coll_gather", arena_shape, seg)
+
+    def build():
+        def fn(arena, params):          # params = [off, nbytes]
+            R, P = arena.shape
+            off, n = params[0], params[1]
+            lane = jnp.arange(seg, dtype=jnp.int32)
+            valid = lane < n
+            rows = jnp.arange(R, dtype=jnp.int32)[:, None]
+            idx = jnp.where(valid[None, :],
+                            rows * P + off + lane[None, :], R * P)
+            return jnp.take(arena.reshape(-1), idx, mode="fill",
+                            fill_value=0)
+        return jax.jit(fn)
+
+    return _sc.cached_plan(key, build)
 
 
-@functools.partial(jax.jit, donate_argnums=0)
-def _seg_scatter_typed(arena, off, values):
-    """Typed scatter as ONE kernel: per-row byte encode + update fused."""
-    rows = jax.vmap(to_bytes)(values.reshape(values.shape[0], -1))
-    return jax.lax.dynamic_update_slice(arena, rows, (jnp.int32(0), off))
+def _row_scatter_plan(arena_shape, seg: int, donate: bool):
+    _sc.check_flat_addressable(arena_shape)
+    key = ("coll_scatter", arena_shape, seg, donate)
+
+    def build():
+        def fn(arena, params, values):  # values (R, seg) uint8 padded
+            R, P = arena.shape
+            off, n = params[0], params[1]
+            lane = jnp.arange(seg, dtype=jnp.int32)
+            dst = _row_lane_dst(R, P, off, lane, lane < n)
+            out = arena.reshape(-1).at[dst.reshape(-1)].set(
+                values.reshape(-1), mode="drop", unique_indices=True)
+            return out.reshape(R, P)
+        return jax.jit(fn, donate_argnums=_donate(donate))
+
+    return _sc.cached_plan(key, build)
+
+
+def _row_scatter_typed_plan(arena_shape, dtype, eb: int, donate: bool):
+    _sc.check_flat_addressable(arena_shape)
+    key = ("coll_scatter_typed", arena_shape, str(jnp.dtype(dtype)), eb,
+           donate)
+
+    def build():
+        def fn(arena, params, values):  # values (R, eb) dtype padded
+            R, P = arena.shape
+            off, n = params[0], params[1]
+            rows = jax.vmap(to_bytes)(values)          # (R, eb*itemsize)
+            seg = rows.shape[1]
+            lane = jnp.arange(seg, dtype=jnp.int32)
+            dst = _row_lane_dst(R, P, off, lane, lane < n)
+            out = arena.reshape(-1).at[dst.reshape(-1)].set(
+                rows.reshape(-1), mode="drop", unique_indices=True)
+            return out.reshape(R, P)
+        return jax.jit(fn, donate_argnums=_donate(donate))
+
+    return _sc.cached_plan(key, build)
+
+
+def _row_gather_typed_plan(arena_shape, dtype, eb: int):
+    dt = jnp.dtype(dtype)
+    _sc.check_flat_addressable(arena_shape)
+    key = ("coll_gather_typed", arena_shape, str(dt), eb)
+
+    def build():
+        def fn(arena, params):          # params = [off, nbytes]
+            R, P = arena.shape
+            off, n = params[0], params[1]
+            seg = eb * dt.itemsize
+            lane = jnp.arange(seg, dtype=jnp.int32)
+            valid = lane < n
+            rows = jnp.arange(R, dtype=jnp.int32)[:, None]
+            idx = jnp.where(valid[None, :],
+                            rows * P + off + lane[None, :], R * P)
+            raw = jnp.take(arena.reshape(-1), idx, mode="fill",
+                           fill_value=0)
+            return jax.vmap(lambda r: from_bytes(r, (eb,), dt))(raw)
+        return jax.jit(fn)
+
+    return _sc.cached_plan(key, build)
 
 
 _REDUCERS = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min,
              "prod": jnp.prod}
 
 
-# NOT donated: unlike the engine-holder-owned bcast/scatter paths, the
-# functional engine=None contract lets callers keep the old snapshot.
-@functools.partial(jax.jit, static_argnums=(2, 3, 4))
-def _seg_allreduce(arena, off, shape, dtype, op):
-    n = nbytes_of(shape, dtype)
-    raw = jax.lax.dynamic_slice(arena, (jnp.int32(0), off),
-                                (arena.shape[0], n))
-    vals = jax.vmap(lambda r: from_bytes(r, shape, dtype))(raw)
-    red = _REDUCERS[op](vals, axis=0)
-    payload = jnp.broadcast_to(to_bytes(red)[None, :], (arena.shape[0], n))
-    return jax.lax.dynamic_update_slice(arena, payload,
-                                        (jnp.int32(0), off)), red
+def _allreduce_plan(arena_shape, shape, dtype, op: str):
+    """All-reduce keeps exact shapes: the reduced value's shape IS the
+    output shape, so there is no shape-stable bucket for it — but the
+    plan cache still makes its compiles visible/countable.  Never
+    donates: the reduced value aliases nothing and the functional
+    contract lets callers keep the old snapshot."""
+    dt = jnp.dtype(dtype)
+    key = ("coll_allreduce", arena_shape, tuple(shape), str(dt), op)
+
+    def build():
+        def fn(arena, params):          # params = [off]
+            off = params[0]
+            n = nbytes_of(shape, dt)
+            raw = jax.lax.dynamic_slice(arena, (jnp.int32(0), off),
+                                        (arena.shape[0], n))
+            vals = jax.vmap(lambda r: from_bytes(r, shape, dt))(raw)
+            red = _REDUCERS[op](vals, axis=0)
+            payload = jnp.broadcast_to(to_bytes(red)[None, :],
+                                       (arena.shape[0], n))
+            return jax.lax.dynamic_update_slice(
+                arena, payload, (jnp.int32(0), off)), red
+        return jax.jit(fn)
+
+    return _sc.cached_plan(key, build)
 
 
 def _pre_collective(state, poolid, engine):
@@ -167,14 +278,22 @@ def _pre_collective(state, poolid, engine):
     return state
 
 
+def _note_plan(engine, hit: bool) -> None:
+    if engine is not None:
+        engine._note_plan(hit)
+
+
 def dart_bcast(state: HeapState, heap: SymmetricHeap, teams_by_slot,
                root_gptr: GlobalPtr, nbytes: int, engine=None):
     """Broadcast ``nbytes`` at the root's allocation to every row of the
     segment (team members all see the root's bytes at the same offset)."""
     poolid, row, off = deref(heap, teams_by_slot, root_gptr)
     state = _pre_collective(state, poolid, engine)
-    arena = _seg_bcast(state[poolid], jnp.int32(row), jnp.int32(off),
-                       nbytes)
+    seg = _sc.bucket_pow2(nbytes, _sc.SEG_FLOOR)
+    fn, hit = _bcast_plan(state[poolid].shape, seg,
+                          donate=engine is not None)
+    _note_plan(engine, hit)
+    arena = fn(state[poolid], np.asarray([row, off, nbytes], np.int32))
     new_state = copy_state(state)
     new_state[poolid] = arena
     return new_state, Handle((arena,))
@@ -186,7 +305,14 @@ def dart_gather(state: HeapState, heap: SymmetricHeap, teams_by_slot,
     shape (n_rows, per_unit_nbytes) uint8."""
     poolid, _, off = deref(heap, teams_by_slot, gptr)
     state = _pre_collective(state, poolid, engine)
-    out = _seg_gather(state[poolid], jnp.int32(off), per_unit_nbytes)
+    seg = _sc.bucket_pow2(per_unit_nbytes, _sc.SEG_FLOOR)
+    fn, hit = _row_gather_plan(state[poolid].shape, seg)
+    _note_plan(engine, hit)
+    padded = fn(state[poolid],
+                np.asarray([off, per_unit_nbytes], np.int32))
+    # trim the bucket padding host-side (one device→host copy; no
+    # extra jitted launch after the counted gather)
+    out = jnp.asarray(np.asarray(padded)[:, :per_unit_nbytes])
     return out, Handle((out,))
 
 
@@ -195,8 +321,15 @@ def dart_scatter(state: HeapState, heap: SymmetricHeap, teams_by_slot,
     """Scatter row i of ``values`` (uint8[n_rows, nbytes]) to unit i."""
     poolid, _, off = deref(heap, teams_by_slot, gptr)
     state = _pre_collective(state, poolid, engine)
-    values = jnp.asarray(values, jnp.uint8)
-    arena = _seg_scatter(state[poolid], jnp.int32(off), values)
+    vh = np.asarray(values, np.uint8)
+    nbytes = vh.shape[1]
+    seg = _sc.bucket_pow2(nbytes, _sc.SEG_FLOOR)
+    padded = np.zeros((vh.shape[0], seg), np.uint8)
+    padded[:, :nbytes] = vh                      # host staging: one H2D
+    fn, hit = _row_scatter_plan(state[poolid].shape, seg,
+                                donate=engine is not None)
+    _note_plan(engine, hit)
+    arena = fn(state[poolid], np.asarray([off, nbytes], np.int32), padded)
     new_state = copy_state(state)
     new_state[poolid] = arena
     return new_state, Handle((arena,))
@@ -206,25 +339,52 @@ def dart_gather_typed(state: HeapState, heap: SymmetricHeap, teams_by_slot,
                       gptr: GlobalPtr, shape, dtype, engine=None):
     """Typed gather: each row's value at ``gptr.addr`` decoded to its
     dtype → ``(n_rows, *shape)``.  Slice *and* decode run inside the
-    single counted jitted dispatch (:func:`_seg_gather_typed`), so the
-    engine's ``dispatch_count`` covers the whole typed op — previously
-    the vmap decode ran eagerly outside it and went uncounted."""
+    single counted jitted dispatch, bucketed on the element count so
+    varying gather sizes share a cached kernel; the bucket padding is
+    trimmed host-side from the one device→host copy."""
+    dt = jnp.dtype(dtype)
+    shape = tuple(shape)
+    n_elems = max(int(np.prod(shape, dtype=np.int64)), 1) if shape else 1
     poolid, _, off = deref(heap, teams_by_slot, gptr)
     state = _pre_collective(state, poolid, engine)
-    vals = _seg_gather_typed(state[poolid], jnp.int32(off), tuple(shape),
-                             jnp.dtype(dtype))
+    eb = _sc.bucket_pow2(n_elems, 4)
+    fn, hit = _row_gather_typed_plan(state[poolid].shape, dt, eb)
+    _note_plan(engine, hit)
+    padded = fn(state[poolid],
+                np.asarray([off, n_elems * dt.itemsize], np.int32))
+    n_rows = state[poolid].shape[0]
+    vals = jnp.asarray(
+        np.asarray(padded)[:, :n_elems].reshape((n_rows,) + shape))
     return vals, Handle((vals,))
 
 
 def dart_scatter_typed(state: HeapState, heap: SymmetricHeap, teams_by_slot,
                        gptr: GlobalPtr, values: jax.Array, engine=None):
     """Typed scatter: row i of ``values`` (``(n_rows, *shape)``, any
-    dtype) lands at ``gptr.addr`` on unit i.  Encode + update run inside
-    the single counted jitted dispatch (:func:`_seg_scatter_typed`)."""
-    values = jnp.asarray(values)
+    dtype) lands at ``gptr.addr`` on unit i.  Encode + update run
+    inside the single counted jitted dispatch, bucketed on the element
+    count (values are host-padded to the bucket and masked to the true
+    byte length in-kernel) so varying sizes share a cached kernel."""
+    vh = np.asarray(values)
+    canon = jax.dtypes.canonicalize_dtype(vh.dtype)
+    if vh.dtype != canon:
+        # mirror the old jnp.asarray path: the kernel's byte mask must
+        # be computed from the dtype the jit will actually store
+        # (int64/float64 inputs canonicalize to 32-bit without x64)
+        vh = vh.astype(canon)
+    vh = vh.reshape(vh.shape[0], -1)
+    n_elems = vh.shape[1]
+    dt = vh.dtype
     poolid, _, off = deref(heap, teams_by_slot, gptr)
     state = _pre_collective(state, poolid, engine)
-    arena = _seg_scatter_typed(state[poolid], jnp.int32(off), values)
+    eb = _sc.bucket_pow2(n_elems, 4)
+    padded = np.zeros((vh.shape[0], eb), dt)
+    padded[:, :n_elems] = vh                     # host staging: one H2D
+    fn, hit = _row_scatter_typed_plan(state[poolid].shape, dt, eb,
+                                      donate=engine is not None)
+    _note_plan(engine, hit)
+    arena = fn(state[poolid],
+               np.asarray([off, n_elems * dt.itemsize], np.int32), padded)
     new_state = copy_state(state)
     new_state[poolid] = arena
     return new_state, Handle((arena,))
@@ -237,8 +397,10 @@ def dart_allreduce(state: HeapState, heap: SymmetricHeap, teams_by_slot,
     replaces every row's copy.  Returns (new_state, reduced_value)."""
     poolid, _, off = deref(heap, teams_by_slot, gptr)
     state = _pre_collective(state, poolid, engine)
-    arena, red = _seg_allreduce(state[poolid], jnp.int32(off),
-                                tuple(shape), jnp.dtype(dtype), op)
+    fn, hit = _allreduce_plan(state[poolid].shape, tuple(shape),
+                              jnp.dtype(dtype), op)
+    _note_plan(engine, hit)
+    arena, red = fn(state[poolid], np.asarray([off], np.int32))
     new_state = copy_state(state)
     new_state[poolid] = arena
     return new_state, red

@@ -25,15 +25,25 @@ queue** over the symmetric heap:
   paper's dart_put), but no device work is dispatched.  The returned
   :class:`Handle` starts in the ``queued`` state.
 * ``CommEngine.flush`` closes the epoch: maximal runs of same-pool
-  ops are **coalesced** into one batched jitted scatter
-  (:func:`_arena_scatter`) or gather (:func:`_arena_gather`) — N
-  queued puts become a single XLA dispatch instead of N.  Same-size
-  ops coalesce unconditionally; **mixed-size** ops share the dispatch
-  when their byte ranges are disjoint (pad-to-max segmented kernels,
-  :func:`_arena_scatter_segmented`) and split the run when they
+  ops are **coalesced** into one batched jitted dispatch — N queued
+  puts become a single XLA launch instead of N.  Same-size ops
+  coalesce unconditionally; **mixed-size** ops share the dispatch
+  when their byte ranges are disjoint and split the run when they
   overlap.  Program order is preserved run-by-run, so overlapping
   writes resolve exactly as the equivalent sequence of blocking ops
   (last writer wins).
+* Dispatch is **shape-stable** (the DispatchPlan layer,
+  :mod:`repro.kernels.segmented_copy`): run length and segment size
+  are bucketed to powers of two, padded with masked no-op
+  descriptors, so a steady-state loop of varying-size epochs hits a
+  small fixed family of compiled kernels — zero recompiles after
+  warmup (``compile_count`` / ``plan_cache_hits`` make this
+  assertable).  Each flush stages its metadata as ONE packed
+  ``(k, 4)`` descriptor array and its payload as ONE flat byte
+  buffer (two host→device transfers, not 3–5 tiny ones per run), and
+  provably disjoint put runs dispatch as one *vectorized* segmented
+  update; only overlapping uniform runs keep the sequential in-order
+  loop.  See docs/API.md "Flush cost model".
 * ``CommEngine.flush(poolid, row)`` is the **per-target** form — the
   ``MPI_Win_flush_local(rank, win)`` analogue: only the named
   ``(pool, row)`` lane dispatches; other targets' queued epochs keep
@@ -78,15 +88,46 @@ import bisect
 import contextlib
 import dataclasses
 import functools
-import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import segmented_copy as _sc
 
 from .globmem import (HeapState, SymmetricHeap, copy_state, from_bytes,
                       nbytes_of, to_bytes)
 from .gptr import GlobalPtr
+
+
+def _to_host_bytes(value) -> np.ndarray:
+    """Typed value → host-staged 1-D uint8 bytes (little-endian bitcast,
+    identical layout to :func:`~repro.core.globmem.to_bytes`).
+
+    Puts stage their payload on the HOST at initiation so that flush
+    can assemble one flat buffer with plain ``memcpy`` and ship it in a
+    single host→device transfer — instead of one device bitcast per
+    enqueue plus an eager concatenate chain at flush.
+    """
+    arr = np.asarray(value)
+    canon = jax.dtypes.canonicalize_dtype(arr.dtype)
+    if arr.dtype != canon:
+        # mirror jnp.asarray: Python floats/ints arrive as 64-bit numpy
+        # dtypes but the heap's byte layout is the canonical (32-bit
+        # unless x64 is enabled) one the device path always used
+        arr = arr.astype(canon)
+    arr = np.ascontiguousarray(arr).reshape(-1)
+    if arr.dtype != np.uint8:
+        arr = arr.view(np.uint8)
+    return arr
+
+
+def _host_decode(raw: np.ndarray, shape: Tuple[int, ...], dtype
+                 ) -> np.ndarray:
+    """Inverse of :func:`_to_host_bytes` on a host byte window."""
+    dt = jnp.dtype(dtype)
+    return raw[: nbytes_of(shape, dt)].copy().view(dt).reshape(shape)
 
 # --------------------------------------------------------------------------
 # Request handles (paper: MPI_Rput/Rget handles + dart_wait/test[all])
@@ -139,6 +180,10 @@ class Handle:
         if self._error is not None:
             raise RuntimeError(self._error)
 
+    def _lane_repr(self) -> str:
+        return (f"pool {getattr(self, 'poolid', '?')}, "
+                f"row {getattr(self, 'row', '?')}")
+
     def wait(self) -> None:
         self._check_failed()
         if not self._issued and self._engine is not None:
@@ -150,8 +195,8 @@ class Handle:
             self._check_failed()
             if not self._issued:
                 raise RuntimeError(
-                    "queued op was dropped before dispatch (engine "
-                    "cleared by dart_exit?)")
+                    f"queued op ({self._lane_repr()}) was dropped "
+                    "before dispatch (engine cleared by dart_exit?)")
         jax.block_until_ready([a for a in self.arrays
                                if not a.is_deleted()])
 
@@ -165,6 +210,25 @@ class Handle:
         return f"Handle(state={self.state}, n_arrays={len(self.arrays)})"
 
 
+class _GatherBatch:
+    """One coalesced get dispatch: the ``(k, seg)`` pad-to-bucket byte
+    windows every handle of the run shares.  The device→host copy is
+    made ONCE, lazily, on the first ``value()``; per-op typed decoding
+    is then pure host work (no per-op jitted slice/bitcast launches —
+    the whole run stays inside the single counted dispatch)."""
+
+    __slots__ = ("raws", "_host")
+
+    def __init__(self, raws: jax.Array):
+        self.raws = raws
+        self._host: Optional[np.ndarray] = None
+
+    def host(self) -> np.ndarray:
+        if self._host is None:
+            self._host = np.asarray(self.raws)
+        return self._host
+
+
 class GetHandle(Handle):
     """Handle of a queued get; ``value()`` flushes and returns the
     typed result (identical bytes to the blocking path)."""
@@ -175,17 +239,24 @@ class GetHandle(Handle):
         self.shape = tuple(shape)
         self.dtype = dtype
         self._value: Optional[jax.Array] = None
+        self._batch: Optional[_GatherBatch] = None
+        self._batch_idx = 0
 
-    def _resolve_value(self, value: jax.Array) -> None:
-        self._value = value
-        self._resolve((value,))
+    def _resolve_gather(self, batch: _GatherBatch, idx: int) -> None:
+        self._batch = batch
+        self._batch_idx = idx
+        self._resolve((batch.raws,))
 
     def value(self) -> jax.Array:
         self.wait()
+        if self._value is None and self._batch is not None:
+            self._value = jnp.asarray(_host_decode(
+                self._batch.host()[self._batch_idx], self.shape,
+                self.dtype))
         if self._value is None:
             raise RuntimeError(
-                "queued get was dropped before dispatch (engine cleared "
-                "by dart_exit?)")
+                f"queued get ({self._lane_repr()}) was dropped before "
+                "dispatch (engine cleared by dart_exit?)")
         return self._value
 
 
@@ -216,14 +287,26 @@ def dart_waitall(handles: Sequence[Handle]) -> None:
                     lanes[key] = None        # unknown lane: whole pool
                 else:
                     lanes[key].add(row)
+    flushed = set()
     for (engine, poolid), rows in lanes.items():
         engine.flush(poolid, rows)
+        flushed.add((engine, poolid))
     for h in handles:
         if not h._issued and h._engine is not None:
             h._check_failed()
-            raise RuntimeError(
-                "queued op was dropped before dispatch (engine "
-                "cleared by dart_exit?)")
+            if (h._engine, getattr(h, "poolid", None)) in flushed:
+                # this handle's lane WAS flushed and its op still never
+                # dispatched: it was silently dropped (engine cleared).
+                # Name the op's own lane — a generic error here used to
+                # blame whichever handle happened to come first.
+                raise RuntimeError(
+                    f"queued op ({h._lane_repr()}) was dropped before "
+                    "dispatch (engine cleared by dart_exit?)")
+            # lane not covered by this call's flushes (e.g. the handle
+            # was enqueued on an engine whose lane scan raced a
+            # clear): close it individually — wait() raises the
+            # lane-specific error if the op is truly gone.
+            h.wait()
     jax.block_until_ready([a for h in handles for a in h.arrays
                            if not a.is_deleted()])
 
@@ -250,47 +333,12 @@ def _arena_read(arena: jax.Array, row: jax.Array, off: jax.Array,
     return jax.lax.dynamic_slice(arena, (row, off), (1, nbytes))[0]
 
 
-@functools.partial(jax.jit, donate_argnums=0)
-def _arena_scatter(arena: jax.Array, rows: jax.Array, offs: jax.Array,
-                   payloads: jax.Array) -> jax.Array:
-    """Batched put: apply k same-size updates in queue order — ONE
-    dispatch for the whole run (the MPI request-aggregation analogue)."""
-    def body(i, a):
-        return jax.lax.dynamic_update_slice(
-            a, payloads[i][None, :], (rows[i], offs[i]))
-    return jax.lax.fori_loop(0, rows.shape[0], body, arena)
-
-
-@functools.partial(jax.jit, static_argnums=(3,))
-def _arena_gather(arena: jax.Array, rows: jax.Array, offs: jax.Array,
-                  nbytes: int) -> jax.Array:
-    """Batched get: fetch k same-size slices in one dispatch."""
-    def one(r, o):
-        return jax.lax.dynamic_slice(arena, (r, o), (1, nbytes))[0]
-    return jax.vmap(one)(rows, offs)
-
-
-@functools.partial(jax.jit, donate_argnums=0, static_argnums=(6,))
-def _arena_scatter_segmented(arena: jax.Array, rows: jax.Array,
-                             offs: jax.Array, lens: jax.Array,
-                             starts: jax.Array, flat: jax.Array,
-                             maxn: int) -> jax.Array:
-    """Batched mixed-size put (pad-to-max segmented scatter): ``flat``
-    is every payload concatenated (+ ``maxn`` trailing zeros so the
-    max-size segment read never clamps); op i's bytes are
-    ``flat[starts[i]:starts[i]+lens[i]]``, blended into the window in
-    queue order — ONE dispatch for a run the uniform scatter would
-    have split, with the padding done inside the kernel rather than as
-    per-op eager ops."""
-    lane = jnp.arange(maxn, dtype=jnp.int32)
-
-    def body(i, a):
-        seg = jax.lax.dynamic_slice(flat, (starts[i],), (maxn,))
-        window = jax.lax.dynamic_slice(a, (rows[i], offs[i]), (1, maxn))[0]
-        merged = jnp.where(lane < lens[i], seg, window)
-        return jax.lax.dynamic_update_slice(a, merged[None, :],
-                                            (rows[i], offs[i]))
-    return jax.lax.fori_loop(0, rows.shape[0], body, arena)
+# Batched (coalesced-run) dispatch goes through the shape-stable
+# DispatchPlan layer instead: repro.kernels.segmented_copy buckets the
+# run length and segment size to powers of two, packs rows/offs/lens/
+# starts into ONE (k, 4) int32 descriptor array, and serves every epoch
+# from a small cached family of compiled segmented scatter/gather
+# kernels (XLA 'ref' or hand-tiled Pallas) — see CommEngine.
 
 
 # --------------------------------------------------------------------------
@@ -341,7 +389,7 @@ class _PendingPut:
     poolid: int
     row: int
     off: int
-    payload: jax.Array          # 1-D uint8, already byte-converted
+    payload: np.ndarray         # 1-D uint8, host-staged at initiation
     handle: Handle
 
 
@@ -369,24 +417,52 @@ class CommEngine:
       (the quantity the coalescing is meant to minimize).
     * ``ops_enqueued`` / ``ops_coalesced`` — totals; ``ops_coalesced``
       counts ops that shared a dispatch with at least one neighbour.
+    * ``compile_count`` / ``plan_cache_hits`` — DispatchPlan cache
+      misses (each builds + compiles one bucketed kernel) vs hits.  A
+      warm steady state must show hits only; tests assert
+      ``compile_count`` stays flat across varying-size epochs.
+
+    ``impl`` selects the batched-kernel implementation (matching
+    :mod:`repro.kernels.ops`): ``'ref'`` = XLA segmented scatter/
+    gather, ``'pallas'`` = the hand-tiled descriptor-grid kernel,
+    ``'auto'`` = pallas on TPU, ref elsewhere.  Runs whose descriptors
+    fail the Pallas window precondition fall back to ref per-dispatch,
+    so the choice never changes semantics.
     """
 
-    def __init__(self, holder=None):
+    def __init__(self, holder=None, impl: str = "auto"):
         self._holder = holder
         self._pending: List = []        # program order across pools
         self.epoch = 0
         self.dispatch_count = 0
         self.ops_enqueued = 0
         self.ops_coalesced = 0
+        self.compile_count = 0
+        self.plan_cache_hits = 0
+        if impl == "auto":
+            impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+        self.impl = impl
 
     def bind(self, holder) -> None:
         self._holder = holder
+
+    def _note_plan(self, hit: bool) -> None:
+        if hit:
+            self.plan_cache_hits += 1
+        else:
+            self.compile_count += 1
+
+    def _pick_impl(self, desc: np.ndarray, seg: int,
+                   pool_bytes: int) -> str:
+        if self.impl == "pallas" and _sc.pallas_ok(desc, seg, pool_bytes):
+            return "pallas"
+        return "ref"
 
     # -- enqueue (initiation) -------------------------------------------
     def put(self, heap: SymmetricHeap, teams_by_slot, gptr: GlobalPtr,
             value) -> Handle:
         poolid, row, off = deref(heap, teams_by_slot, gptr)
-        payload = to_bytes(jnp.asarray(value))
+        payload = _to_host_bytes(value)
         if off + payload.size > heap.pools[poolid].pool_bytes:
             raise ValueError("put overruns the target allocation's pool")
         h = Handle((), engine=self)
@@ -447,12 +523,11 @@ class CommEngine:
         if not todo:
             return self._holder.state
         state = copy_state(self._holder.state)
-        pool_bytes = {pid: int(state[pid].shape[1])
-                      for pid in {op.poolid for op in todo}}
-        for run in _coalesced_runs(todo, pool_bytes):
+        for run, disjoint in _coalesced_runs(todo):
             pid = run[0].poolid
             if isinstance(run[0], _PendingPut):
-                state[pid] = self._dispatch_put_run(state[pid], run)
+                state[pid] = self._dispatch_put_run(state[pid], run,
+                                                    disjoint)
                 for op in run:
                     op.handle._resolve((state[pid],))
             else:
@@ -479,50 +554,48 @@ class CommEngine:
         return len(dropped)
 
     def _dispatch_put_run(self, arena: jax.Array,
-                          run: Sequence[_PendingPut]) -> jax.Array:
+                          run: Sequence[_PendingPut],
+                          disjoint: bool = True) -> jax.Array:
+        """One counted dispatch for the whole run: pack descriptors +
+        flat payload on the host (one transfer each), then hit the
+        cached bucketed plan — vectorized when the run's byte ranges
+        are provably disjoint, the sequential in-order loop otherwise
+        (overlapping uniform runs: last writer wins)."""
         self.dispatch_count += 1
-        if len(run) == 1:
-            op = run[0]
-            return _arena_write(arena, jnp.int32(op.row),
-                                jnp.int32(op.off), op.payload)
-        self.ops_coalesced += len(run)
-        rows = jnp.asarray([op.row for op in run], jnp.int32)
-        offs = jnp.asarray([op.off for op in run], jnp.int32)
-        sizes = [int(op.payload.size) for op in run]
-        if len(set(sizes)) == 1:
-            payloads = jnp.stack([op.payload for op in run])
-            return _arena_scatter(arena, rows, offs, payloads)
-        maxn = max(sizes)
-        lens = jnp.asarray(sizes, jnp.int32)
-        starts = jnp.asarray([0] + list(itertools.accumulate(sizes))[:-1],
-                             jnp.int32)
-        flat = jnp.concatenate(
-            [op.payload for op in run] + [jnp.zeros((maxn,), jnp.uint8)])
-        return _arena_scatter_segmented(arena, rows, offs, lens, starts,
-                                        flat, maxn)
+        if len(run) > 1:
+            self.ops_coalesced += len(run)
+        desc, flat, seg = _sc.pack_descriptors(
+            [op.row for op in run], [op.off for op in run],
+            [int(op.payload.size) for op in run],
+            [op.payload for op in run])
+        fn, hit = _sc.scatter_plan(
+            arena.shape, desc.shape[0], seg, flat.shape[0],
+            ordered=not disjoint,
+            impl=self._pick_impl(desc, seg, int(arena.shape[1])))
+        self._note_plan(hit)
+        return fn(arena, desc, flat)
 
     def _dispatch_get_run(self, arena: jax.Array,
                           run: Sequence[_PendingGet]) -> None:
+        """One counted dispatch for the whole run (uniform AND mixed
+        sizes): a bucketed segmented gather returns every op's
+        pad-to-bucket byte window; the typed decode happens on the
+        host from ONE device→host copy, shared by the run
+        (:class:`_GatherBatch`) — no per-op jitted slice/bitcast
+        launches after the gather."""
         self.dispatch_count += 1
-        if len(run) == 1:
-            op = run[0]
-            raw = _arena_read(arena, jnp.int32(op.row),
-                              jnp.int32(op.off), op.nbytes)
-            op.handle._resolve_value(
-                from_bytes(raw, op.handle.shape, op.handle.dtype))
-            return
-        self.ops_coalesced += len(run)
-        rows = jnp.asarray([op.row for op in run], jnp.int32)
-        offs = jnp.asarray([op.off for op in run], jnp.int32)
-        maxn = max(op.nbytes for op in run)
-        # mixed sizes: fetch pad-to-max windows, each op decodes its own
-        # leading nbytes (the run builder guarantees off+maxn stays in
-        # the pool, so the slice start is never clamped)
-        raws = _arena_gather(arena, rows, offs, maxn)
+        if len(run) > 1:
+            self.ops_coalesced += len(run)
+        desc, _, seg = _sc.pack_descriptors(
+            [op.row for op in run], [op.off for op in run],
+            [op.nbytes for op in run])
+        fn, hit = _sc.gather_plan(
+            arena.shape, desc.shape[0], seg,
+            impl=self._pick_impl(desc, seg, int(arena.shape[1])))
+        self._note_plan(hit)
+        batch = _GatherBatch(fn(arena, desc))
         for i, op in enumerate(run):
-            op.handle._resolve_value(
-                from_bytes(raws[i, :op.nbytes], op.handle.shape,
-                           op.handle.dtype))
+            op.handle._resolve_gather(batch, i)
 
     @contextlib.contextmanager
     def epoch_scope(self, poolid: Optional[int] = None):
@@ -555,10 +628,10 @@ def _op_nbytes(op) -> int:
 
 class _RunMeta:
     """Bookkeeping for the run currently being grown: payload sizes,
-    per-row byte intervals, and the minimum headroom to the pool end
-    (mixed-size dispatch reads/writes pad-to-max windows, so every op
-    must have ``max_n`` bytes of room or the dynamic slice would clamp
-    its start).
+    per-row byte intervals, and whether every recorded write range is
+    pairwise *disjoint* — the proof the dispatcher uses to issue the
+    run as one vectorized segmented update (disjoint) instead of the
+    sequential in-order loop (overlapping).
 
     Intervals are kept per row as a *merged* sorted disjoint set
     (parallel ``starts``/``ends`` lists), so the disjointness query is
@@ -566,15 +639,20 @@ class _RunMeta:
     instead of a linear scan over every recorded op.  Only put runs
     track intervals: reads commute, so a get run never needs the
     disjointness rule (a write would split the run by kind anyway).
+
+    The bucketed flat-index kernels never read or write outside an
+    op's exact byte range (masked lanes are dropped/filled, not
+    clamped), so there is no pool-headroom constraint: mixed-size runs
+    coalesce anywhere in the pool, including hard against its end.
     """
 
-    __slots__ = ("kind", "sizes", "max_n", "headroom", "intervals")
+    __slots__ = ("kind", "sizes", "max_n", "disjoint", "intervals")
 
-    def __init__(self, op, n: int, cap: Optional[int]):
+    def __init__(self, op, n: int):
         self.kind = _kind_key(op)
         self.sizes = {n}
         self.max_n = n
-        self.headroom = (cap - op.off) if cap is not None else None
+        self.disjoint = True
         # row -> (starts, ends): merged, sorted, pairwise-disjoint
         self.intervals: Dict[int, Tuple[List[int], List[int]]] = {}
         if self.kind[0] == "put":
@@ -607,60 +685,56 @@ class _RunMeta:
             return False
         return not (i < len(starts) and starts[i] < end)
 
-    def can_extend(self, op, n: int, cap: Optional[int]) -> bool:
+    def can_extend(self, op, n: int) -> bool:
         if _kind_key(op) != self.kind:
             return False
         if self.sizes == {n}:
             # uniform run: unconditional, exactly the pre-registry rule —
-            # the batched kernel applies ops in queue order, so even
-            # overlapping ranges keep last-writer-wins
+            # an overlapping extension just demotes the dispatch to the
+            # ordered kernel, so even overlapping ranges keep
+            # last-writer-wins
             return True
-        # mixed-size extension (pad-to-max segmented dispatch): puts
+        # mixed-size extension (bucketed segmented dispatch): puts
         # require byte-range disjointness — overlapping writes stay in
         # separate, sequentially dispatched runs so program order is
-        # preserved; gets commute, so only the headroom guard applies —
-        # and every op needs room for its padded window
-        if cap is None or self.headroom is None:
-            return False
-        if self.kind[0] == "put" and not self._disjoint(op, n):
-            return False
-        return max(self.max_n, n) <= min(self.headroom, cap - op.off)
+        # preserved; gets commute, so they coalesce unconditionally
+        return self.kind[0] != "put" or self._disjoint(op, n)
 
-    def extend(self, op, n: int, cap: Optional[int]) -> None:
+    def extend(self, op, n: int) -> None:
         self.sizes.add(n)
         self.max_n = max(self.max_n, n)
-        if cap is not None and self.headroom is not None:
-            self.headroom = min(self.headroom, cap - op.off)
         if self.kind[0] == "put":
+            if self.disjoint and not self._disjoint(op, n):
+                self.disjoint = False
             self._note(op.row, op.off, op.off + n)
 
 
-def _coalesced_runs(ops: Sequence,
-                    pool_bytes: Optional[Dict[int, int]] = None
-                    ) -> List[List]:
-    """Split into maximal runs sharing one batched dispatch.
+def _coalesced_runs(ops: Sequence) -> List[Tuple[List, bool]]:
+    """Split into maximal ``(run, disjoint)`` pairs, each run sharing
+    one batched dispatch.
 
     An op extends the current run when it has the same kind and pool
     and either (a) the same payload size as a so-far-uniform run — the
-    original coalescing rule — or (b) a *disjoint* byte range with
-    enough pool headroom, which lets mixed-size ops share one
-    pad-to-max segmented dispatch.  Overlapping ranges of different
-    sizes split the run, so dispatching runs in queue order preserves
-    put/put and put/get program order (last writer wins, reads see
-    prior writes), exactly like the blocking sequence.
+    original coalescing rule — or (b) for mixed sizes, a byte range
+    *disjoint* from every write already in the run.  Overlapping
+    ranges of different sizes split the run, so dispatching runs in
+    queue order preserves put/put and put/get program order (last
+    writer wins, reads see prior writes), exactly like the blocking
+    sequence.  ``disjoint`` reports whether every write range in the
+    run is pairwise disjoint — the dispatcher's license to use the
+    vectorized segmented kernel instead of the ordered loop.
     """
     runs: List[List] = []
-    meta: Optional[_RunMeta] = None
+    metas: List[_RunMeta] = []
     for op in ops:
         n = _op_nbytes(op)
-        cap = None if pool_bytes is None else pool_bytes.get(op.poolid)
-        if runs and meta is not None and meta.can_extend(op, n, cap):
+        if runs and metas[-1].can_extend(op, n):
             runs[-1].append(op)
-            meta.extend(op, n, cap)
+            metas[-1].extend(op, n)
         else:
             runs.append([op])
-            meta = _RunMeta(op, n, cap)
-    return runs
+            metas.append(_RunMeta(op, n))
+    return [(run, meta.disjoint) for run, meta in zip(runs, metas)]
 
 
 # --------------------------------------------------------------------------

@@ -271,16 +271,18 @@ def dart_get_nb(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
 
 
 def dart_get(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
-    """Issue-immediately get: returns (value-future, handle).
+    """Issue-immediately get: returns (value, handle).
 
     Flushes the target's ``(pool, row)`` lane (queued puts to that unit
     become visible — read-after-write ordering; other targets' queued
-    epochs keep accumulating), then dispatches the read; the value is
-    an XLA async future, the handle completes when it is ready.
+    epochs keep accumulating), then dispatches the read.  The value is
+    decoded host-side from the run's single gathered byte window (the
+    shape-stable flush path — docs/API.md "Flush cost model"), so it
+    is concrete by the time this returns.
     """
     h = ctx.engine.get(ctx.heap, ctx.teams_by_slot, gptr, shape, dtype)
     ctx.engine.flush(h.poolid, h.row)
-    return h._value, h
+    return h.value(), h
 
 
 def dart_get_blocking(ctx: DartContext, gptr: GlobalPtr, shape, dtype):

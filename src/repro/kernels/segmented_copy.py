@@ -1,0 +1,344 @@
+"""Shape-stable segmented copy: the DispatchPlan substrate for
+``CommEngine.flush`` (and the host-plane collectives).
+
+The paper's §V.C case for DART-MPI is that the runtime adds only a
+*constant, small* per-call overhead over the raw substrate.  Our
+substrate is XLA, where every distinct input *shape* costs a trace +
+compile — so a flush path that specializes kernels on the exact
+``(run length, payload size)`` pair pays compile + host-staging costs
+on every new epoch shape instead of a constant dispatch overhead.
+This module removes the shape dependence:
+
+* **Bucketing** — run length ``k`` and the per-op segment size are
+  rounded up to the next power of two (:func:`bucket_pow2`), and the
+  run is padded with masked no-op descriptors (``len = 0``).  A small
+  fixed family of compiled kernels therefore serves *all* epochs; a
+  steady-state loop of varying-size epochs performs zero recompiles
+  after warmup.
+* **Packed descriptors** — ``rows/offs/lens/starts`` travel as ONE
+  ``(k, 4)`` int32 array (:func:`pack_descriptors`), and every payload
+  byte travels as ONE flat uint8 buffer assembled host-side into a
+  bucketed staging array: two host→device transfers per flush instead
+  of 3–5 tiny ones plus a per-op eager ``jnp.concatenate`` chain.
+* **Flat-index addressing** — kernels address the arena as a flat byte
+  string: op *i* touches positions ``row*P + off + lane`` for
+  ``lane < len``; masked lanes are routed to distinct out-of-range
+  indices and dropped (scatter, ``mode='drop'``) or filled with zeros
+  (gather, ``mode='fill'``).  Because only valid lanes produce
+  in-range indices, padding never clamps, smears across rows, or needs
+  pool headroom — the bounds check at initiation is the only range
+  requirement.
+* **Vectorized vs ordered** — runs whose byte ranges are provably
+  disjoint (``_RunMeta`` tracks this while the run is grown) dispatch
+  as ONE vectorized segmented update (``unique_indices`` scatter);
+  only overlapping uniform runs keep the sequential ``fori_loop`` so
+  last-writer-wins program order is preserved.
+* **Plan cache** — compiled executables are cached process-wide by
+  ``(kind, impl, arena shape, buckets, ...)``; the engine counts
+  misses (``compile_count``) and hits (``plan_cache_hits``) so tests
+  and ``BENCH_engine/v2`` can *assert* the steady state compiles
+  nothing.
+
+``impl='pallas'`` selects the hand-tiled Pallas kernel (grid over
+descriptors, scalar-prefetched descriptor table; interpret-mode off
+TPU), mirroring the ``impl`` switch in :mod:`repro.kernels.ops`.  The
+Pallas path stages pad-to-bucket windows through VMEM and therefore
+requires ``off + seg <= pool_bytes`` for every descriptor;
+:func:`pallas_ok` checks this host-side and callers fall back to the
+XLA (``'ref'``) kernels when it fails, so semantics never depend on
+the impl choice.  TPU grids execute sequentially, so the one Pallas
+scatter kernel serves ordered runs too.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# descriptor columns: desc[i] = (row, off, len, start)
+ROW, OFF, LEN, START = 0, 1, 2, 3
+
+#: smallest segment bucket — tiny ops (1..16 B) share one compiled shape
+SEG_FLOOR = 16
+#: smallest run-length bucket — runs of 1..4 ops share one compiled
+#: shape (a single blocking op and a short epoch hit the same plan)
+K_FLOOR = 4
+#: smallest flat-payload staging bucket
+FLAT_FLOOR = 64
+
+
+def bucket_pow2(n: int, floor: int = 1) -> int:
+    """Next power of two >= max(n, floor) — the shape-stability rule."""
+    n = max(int(n), floor, 1)
+    return 1 << (n - 1).bit_length()
+
+
+def pack_descriptors(rows: Sequence[int], offs: Sequence[int],
+                     lens: Sequence[int],
+                     payloads: Optional[Sequence[np.ndarray]] = None
+                     ) -> Tuple[np.ndarray, Optional[np.ndarray], int]:
+    """Host-side staging: k ops → one bucketed ``(k', 4)`` int32
+    descriptor table (k' = pow2 bucket of k, padded with ``len=0``
+    no-ops) and, for puts, one bucketed flat uint8 payload buffer.
+
+    ``starts`` index into the flat buffer; the buffer carries a
+    trailing ``seg`` bytes of zero margin so a pad-to-bucket window
+    read starting at any valid ``start`` stays in range (the Pallas
+    path relies on this; the XLA path is range-safe regardless).
+    Returns ``(desc, flat, seg)`` with ``flat is None`` for gathers.
+    """
+    k = len(rows)
+    kb = bucket_pow2(k, K_FLOOR)
+    seg = bucket_pow2(max(lens) if lens else 1, SEG_FLOOR)
+    desc = np.zeros((kb, 4), np.int32)
+    desc[:k, ROW] = rows
+    desc[:k, OFF] = offs
+    desc[:k, LEN] = lens
+    starts = np.zeros(k, np.int64)
+    np.cumsum(lens[:-1], out=starts[1:])
+    desc[:k, START] = starts
+    flat = None
+    if payloads is not None:
+        # sized by the BUCKETS, not the actual payload total, so the
+        # flat staging shape is a pure function of (kb, seg) and warm
+        # epochs with any payload mix inside the bucket reuse the plan
+        flat = np.zeros(max(kb * seg + seg, FLAT_FLOOR), np.uint8)
+        for s, p in zip(starts, payloads):
+            flat[int(s):int(s) + p.size] = p
+    return desc, flat, seg
+
+
+def check_flat_addressable(arena_shape: Tuple[int, int]) -> None:
+    """The segmented kernels address the arena as a flat int32 byte
+    index (``row * pool_bytes + off + lane``; OOB markers sit just
+    above ``rows * pool_bytes``).  Without x64, index arithmetic stays
+    int32, so arenas at or beyond 2**30 total bytes would overflow
+    *silently* (mode='drop' would discard the wrapped indices — lost
+    puts, zero-filled gets).  Refuse loudly instead."""
+    n_cells = int(arena_shape[0]) * int(arena_shape[1])
+    if n_cells >= 1 << 30:
+        raise NotImplementedError(
+            f"arena of {n_cells} bytes exceeds the flat int32 "
+            "addressing range of the segmented-copy kernels (see "
+            "ROADMAP: int64-lane variant for >1 GiB heaps)")
+
+
+def pallas_ok(desc: np.ndarray, seg: int, pool_bytes: int) -> bool:
+    """True iff every descriptor's padded window fits the pool — the
+    precondition for the VMEM-windowed Pallas kernels."""
+    return bool(np.all(desc[:, OFF] + seg <= pool_bytes))
+
+
+# --------------------------------------------------------------------------
+# XLA ('ref') kernels — flat-index scatter/gather, shapes fixed by buckets
+# --------------------------------------------------------------------------
+
+
+def _lane_mask(desc: jax.Array, seg: int) -> Tuple[jax.Array, jax.Array]:
+    """(k, seg) lane grid + validity mask (``lane < len``) for a
+    descriptor table; callers turn invalid lanes into out-of-range
+    flat indices (dropped by scatters, zero-filled by gathers)."""
+    lane = jnp.arange(seg, dtype=jnp.int32)[None, :]
+    valid = lane < desc[:, LEN][:, None]
+    return valid, lane
+
+
+def _ref_scatter_vec(arena: jax.Array, desc: jax.Array, flat: jax.Array,
+                     *, seg: int) -> jax.Array:
+    """Disjoint segmented put as ONE vectorized update: every valid lane
+    lands via a unique-index scatter, masked lanes are dropped."""
+    R, P = arena.shape
+    n_cells = R * P
+    valid, lane = _lane_mask(desc, seg)
+    k = desc.shape[0]
+    dst = desc[:, ROW][:, None] * P + desc[:, OFF][:, None] + lane
+    oob = n_cells + jnp.arange(k * seg, dtype=jnp.int32).reshape(k, seg)
+    dst = jnp.where(valid, dst, oob)
+    src_idx = jnp.where(valid, desc[:, START][:, None] + lane,
+                        flat.shape[0])
+    src = jnp.take(flat, src_idx, mode="fill", fill_value=0)
+    out = arena.reshape(-1).at[dst.reshape(-1)].set(
+        src.reshape(-1), mode="drop", unique_indices=True)
+    return out.reshape(R, P)
+
+
+def _ref_scatter_ordered(arena: jax.Array, desc: jax.Array,
+                         flat: jax.Array, *, seg: int) -> jax.Array:
+    """Overlap-tolerant segmented put: descriptors apply strictly in
+    queue order (``fori_loop``), preserving last-writer-wins."""
+    R, P = arena.shape
+    n_cells = R * P
+    lane = jnp.arange(seg, dtype=jnp.int32)
+
+    def body(i, a):
+        ln = desc[i, LEN]
+        valid = lane < ln
+        dst = jnp.where(valid, desc[i, ROW] * P + desc[i, OFF] + lane,
+                        n_cells + lane)
+        src = jnp.take(flat, jnp.where(valid, desc[i, START] + lane,
+                                       flat.shape[0]),
+                       mode="fill", fill_value=0)
+        return a.at[dst].set(src, mode="drop", unique_indices=True)
+
+    return jax.lax.fori_loop(0, desc.shape[0], body,
+                             arena.reshape(-1)).reshape(R, P)
+
+
+def _ref_gather(arena: jax.Array, desc: jax.Array, *, seg: int
+                ) -> jax.Array:
+    """Segmented get: (k, seg) pad-to-bucket byte windows in one
+    dispatch; masked lanes read as zero."""
+    R, P = arena.shape
+    valid, lane = _lane_mask(desc, seg)
+    idx = jnp.where(valid,
+                    desc[:, ROW][:, None] * P + desc[:, OFF][:, None] + lane,
+                    R * P)
+    return jnp.take(arena.reshape(-1), idx, mode="fill", fill_value=0)
+
+
+# --------------------------------------------------------------------------
+# Pallas kernels — grid over descriptors, scalar-prefetched table
+# --------------------------------------------------------------------------
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pallas_scatter_kernel(desc_ref, flat_ref, arena_ref, o_ref, *,
+                           seg: int):
+    i = pl.program_id(0)
+    row = desc_ref[i, ROW]
+    off = desc_ref[i, OFF]
+    ln = desc_ref[i, LEN]
+    st = desc_ref[i, START]
+    seg_bytes = flat_ref[pl.ds(st, seg)]
+    window = o_ref[pl.ds(row, 1), pl.ds(off, seg)]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, seg), 1)
+    o_ref[pl.ds(row, 1), pl.ds(off, seg)] = jnp.where(
+        lane < ln, seg_bytes[None, :], window)
+
+
+def _pallas_gather_kernel(desc_ref, arena_ref, o_ref, *, seg: int):
+    i = pl.program_id(0)
+    row = desc_ref[i, ROW]
+    off = desc_ref[i, OFF]
+    ln = desc_ref[i, LEN]
+    window = arena_ref[pl.ds(row, 1), pl.ds(off, seg)]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, seg), 1)
+    o_ref[...] = jnp.where(lane < ln, window, jnp.uint8(0))
+
+
+def _pallas_scatter(arena: jax.Array, desc: jax.Array, flat: jax.Array,
+                    *, seg: int) -> jax.Array:
+    """Segmented scatter, one grid step per descriptor.  The grid is
+    sequential on TPU (and in interpret mode), so this kernel is valid
+    for ordered (overlapping) runs as well as disjoint ones."""
+    k = desc.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec(flat.shape, lambda i, *_: (0,)),
+                  pl.BlockSpec(arena.shape, lambda i, *_: (0, 0))],
+        out_specs=pl.BlockSpec(arena.shape, lambda i, *_: (0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_pallas_scatter_kernel, seg=seg),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={2: 0},       # arena (arg after desc, flat)
+        interpret=_interpret_default(),
+    )(desc, flat, arena)
+
+
+def _pallas_gather(arena: jax.Array, desc: jax.Array, *, seg: int
+                   ) -> jax.Array:
+    k = desc.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec(arena.shape, lambda i, *_: (0, 0))],
+        out_specs=pl.BlockSpec((1, seg), lambda i, *_: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_pallas_gather_kernel, seg=seg),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, seg), jnp.uint8),
+        interpret=_interpret_default(),
+    )(desc, arena)
+
+
+# --------------------------------------------------------------------------
+# The plan cache
+# --------------------------------------------------------------------------
+
+_PLAN_CACHE: Dict[Tuple, Callable] = {}
+_BUILD_COUNT = [0]      # process-total plan builds (≈ XLA compiles)
+
+
+def cached_plan(key: Tuple, build: Callable[[], Callable]
+                ) -> Tuple[Callable, bool]:
+    """Process-wide executable cache (the DispatchPlan layer): returns
+    ``(fn, hit)``.  A miss runs ``build()`` — which creates a fresh
+    ``jax.jit`` wrapper, so exactly one XLA trace+compile follows on
+    first call — and records it; hits are the steady state."""
+    fn = _PLAN_CACHE.get(key)
+    if fn is not None:
+        return fn, True
+    fn = build()
+    _PLAN_CACHE[key] = fn
+    _BUILD_COUNT[0] += 1
+    return fn, False
+
+
+def clear_plan_cache() -> None:
+    """Drop every cached executable (benchmarks use this to measure a
+    true cold flush: rebuilt plans re-trace and re-compile)."""
+    _PLAN_CACHE.clear()
+
+
+def plan_cache_stats() -> Dict[str, int]:
+    return {"size": len(_PLAN_CACHE), "builds": _BUILD_COUNT[0]}
+
+
+def scatter_plan(arena_shape: Tuple[int, int], kb: int, seg: int,
+                 flat_len: int, *, ordered: bool, impl: str = "ref",
+                 donate: bool = True) -> Tuple[Callable, bool]:
+    """fn(arena, desc, flat) -> arena'. ``ordered`` keeps the
+    sequential loop (overlapping uniform runs); otherwise the
+    vectorized unique-index scatter runs.  The Pallas impl is
+    inherently ordered (sequential grid) so one kernel serves both."""
+    check_flat_addressable(arena_shape)
+    key = ("scatter", impl, arena_shape, kb, seg, flat_len, ordered,
+           donate)
+
+    def build():
+        if impl == "pallas":
+            fn = functools.partial(_pallas_scatter, seg=seg)
+        else:
+            fn = functools.partial(
+                _ref_scatter_ordered if ordered else _ref_scatter_vec,
+                seg=seg)
+        return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+    return cached_plan(key, build)
+
+
+def gather_plan(arena_shape: Tuple[int, int], kb: int, seg: int, *,
+                impl: str = "ref") -> Tuple[Callable, bool]:
+    """fn(arena, desc) -> (kb, seg) uint8 pad-to-bucket windows."""
+    check_flat_addressable(arena_shape)
+    key = ("gather", impl, arena_shape, kb, seg)
+
+    def build():
+        if impl == "pallas":
+            return jax.jit(functools.partial(_pallas_gather, seg=seg))
+        return jax.jit(functools.partial(_ref_gather, seg=seg))
+
+    return cached_plan(key, build)

@@ -261,11 +261,20 @@ def test_engine_profile_machine_readable():
     from benchmarks import put_get
     profile = put_get.engine_profile(repeats=2, quick=True)
     s = profile["series"]
+    assert profile["schema"] == "BENCH_engine/v2"
     assert s["blocking"]["dispatches"] == profile["n_ops"]
     assert s["coalesced"]["dispatches"] == 1
     assert s["mixed_size_coalesced"]["dispatches"] == 1
     assert s["per_target_flush"]["dispatches_target_only"] == 1
     assert s["per_target_flush"]["ops_left_queued"] == profile["n_ops"] // 2
+    # v2 flush cost model: a warm (plan-cache-hit) flush must beat the
+    # cold (compile) flush by >= 5x, and the steady-state loop of
+    # varying-size epochs must not recompile at all
+    fc = profile["flush_cost"]
+    assert fc["compiles_cold"] >= 1
+    assert fc["recompiles_steady_state"] == 0
+    assert fc["cold_vs_warm_speedup"] >= 5.0
+    assert profile["plan_cache"]["plan_cache_hits"] > 0
     import json
     json.dumps(profile)                  # machine-readable, no jnp leaks
 
