@@ -332,11 +332,14 @@ def engine_profile(*, repeats: int = 20, quick: bool = False) -> dict:
     """Machine-readable engine trajectory (written to
     ``benchmarks/out/BENCH_engine.json`` by ``benchmarks.run``):
     dispatch counts + µs/op for the blocking, coalesced, per-target
-    flush, and mixed-size (overlap-aware) series, PLUS — schema v2 —
-    the flush cost model: cold (first-plan compile) vs warm
-    (plan-cache hit) µs/op and the recompile count over a
-    steady-state loop of varying-size epochs, so the §V.C
-    constant-overhead claim is measured, not assumed."""
+    flush, and mixed-size (overlap-aware) series, the flush cost
+    model (cold compile vs warm plan-cache-hit µs/op + the
+    steady-state recompile count), PLUS — schema v3 — the
+    ``reduce_plane`` block: coalesced-vs-blocking accumulate µs/op
+    and dispatch counts, the op-identity-padded allreduce's cold vs
+    warm cost, and ``recompiles_steady_state`` over a varying
+    (shape, dtype, op) allreduce+accumulate loop (pinned to 0 by the
+    schema guard)."""
     from repro.kernels import segmented_copy as sc
     n_ops = 8 if quick else 16
     nbytes = 4096
@@ -440,6 +443,95 @@ def engine_profile(*, repeats: int = 20, quick: bool = False) -> dict:
         "warm_epoch_shapes": len(warm_shapes),
     }
 
+    # --- reduce plane (schema v3): queued accumulate + shape-stable ---
+    # allreduce.  Coalesced accumulate (N queued + one flush = ONE
+    # segmented read-modify-write dispatch) vs the blocking sequence,
+    # then the op-identity-padded allreduce's cold (first bucket
+    # compile) vs warm (plan-cache hit, varying shapes) µs, and the
+    # combined steady-state recompile count over varying (shape,
+    # dtype, op) for BOTH allreduce and accumulate — the assertable
+    # form of the closed ROADMAP item.
+    def acc_blocking():
+        for i in range(n_ops):
+            rt.dart_accumulate_blocking(ctx, gp + i * stride, val, "sum")
+
+    def acc_coalesced():
+        hs = [rt.dart_accumulate(ctx, gp + i * stride, val, "sum")
+              for i in range(n_ops)]
+        rt.dart_flush(ctx)
+        dart_waitall(hs)
+
+    rt.dart_flush(ctx)
+    acc_blocking()                            # settle the acc plans
+    d0 = ctx.engine.dispatch_count
+    acc_blocking()
+    acc_disp_blocking = ctx.engine.dispatch_count - d0
+    d0 = ctx.engine.dispatch_count
+    acc_coalesced()
+    acc_disp_coalesced = ctx.engine.dispatch_count - d0
+    tb = time_call(acc_blocking, repeats=repeats)
+    tc = time_call(acc_coalesced, repeats=repeats)
+
+    gr = dart_team_memalloc_aligned(ctx, DART_TEAM_ALL, 4096)
+    ar_elems = 96                             # buckets to 128
+    c0 = ctx.engine.compile_count
+    t0 = _time.perf_counter()
+    rt.dart_allreduce(ctx, gr, (ar_elems,), jnp.float32, "sum")  # COLD
+    ar_cold_us = (_time.perf_counter() - t0) * 1e6
+    ar_compiles_cold = ctx.engine.compile_count - c0
+
+    ar_warm_shapes = [(96,), (100,), (128,), (65,), (8, 12)]
+
+    def ar_warm():
+        for s in ar_warm_shapes:              # all in the 128 bucket
+            rt.dart_allreduce(ctx, gr, s, jnp.float32, "sum")
+
+    ar_warm()                                 # settle every warm shape
+    c0 = ctx.engine.compile_count
+    t = time_call(ar_warm, repeats=repeats)
+    ar_recompiles = ctx.engine.compile_count - c0
+    ar_warm_us = t.mean_us / len(ar_warm_shapes)
+
+    steady_combos = [((9,), jnp.float32, "sum"),
+                     ((14,), jnp.float32, "min"),
+                     ((12,), jnp.int32, "sum"),
+                     ((16,), jnp.int32, "max"),
+                     ((3, 4), jnp.float32, "prod")]
+
+    def steady_loop(shift):
+        for (shape, dt, op_name) in steady_combos:
+            n_el = max(int(np.prod(shape)) - shift, 1)
+            rt.dart_allreduce(ctx, gr, (n_el,), dt, op_name)
+            hs = [rt.dart_accumulate(ctx, gp + i * stride,
+                                     jnp.arange(n_el, dtype=dt),
+                                     op_name)
+                  for i in range(max(n_ops - shift, 1))]
+            rt.dart_flush(ctx)
+            dart_waitall(hs)
+
+    steady_loop(0)                            # warm every bucket family
+    steady_loop(1)
+    c0 = ctx.engine.compile_count
+    for shift in (2, 3, 1, 0, 2):
+        steady_loop(shift)
+    reduce_recompiles = ctx.engine.compile_count - c0
+
+    reduce_plane = {
+        "acc_blocking_us_per_op": round(tb.mean_us / n_ops, 3),
+        "acc_coalesced_us_per_op": round(tc.mean_us / n_ops, 3),
+        "acc_dispatches_blocking": acc_disp_blocking,
+        "acc_dispatches_coalesced": acc_disp_coalesced,
+        "acc_coalesced_vs_blocking_speedup": round(
+            tb.mean_us / max(tc.mean_us, 1e-9), 2),
+        "allreduce_cold_us": round(ar_cold_us, 3),
+        "allreduce_warm_us": round(ar_warm_us, 3),
+        "allreduce_cold_vs_warm_speedup": round(
+            ar_cold_us / max(ar_warm_us, 1e-9), 2),
+        "allreduce_compiles_cold": ar_compiles_cold,
+        "allreduce_warm_recompiles": ar_recompiles,
+        "recompiles_steady_state": reduce_recompiles,
+    }
+
     # isolation numbers for the per-target series: dispatches seen by
     # the target-1 flush alone, with target 2 still queued
     hs = []
@@ -455,12 +547,13 @@ def engine_profile(*, repeats: int = 20, quick: bool = False) -> dict:
     dart_waitall(hs)
 
     profile = {
-        "schema": "BENCH_engine/v2",
+        "schema": "BENCH_engine/v3",
         "n_ops": n_ops,
         "nbytes": nbytes,
         "quick": quick,
         "series": series,
         "flush_cost": flush_cost,
+        "reduce_plane": reduce_plane,
         "plan_cache": {
             "compile_count": ctx.engine.compile_count,
             "plan_cache_hits": ctx.engine.plan_cache_hits,

@@ -4,9 +4,11 @@
 ``benchmarks/out/BENCH_engine.json`` is the machine-readable engine
 trajectory dashboards diff across PRs; this guard keeps its shape
 stable so those diffs stay meaningful.  Checks the schema id, the
-required series and their dispatch-count invariants, and the v2 flush
-cost model (cold vs warm + zero steady-state recompiles — the
-shape-stable-flush acceptance criteria).
+required series and their dispatch-count invariants, the flush cost
+model (cold vs warm + zero steady-state recompiles — the
+shape-stable-flush acceptance criteria), and — v3 — the reduce_plane
+block (coalesced accumulate = ONE dispatch, zero recompiles over a
+varying (shape, dtype, op) allreduce+accumulate loop).
 """
 
 from __future__ import annotations
@@ -18,13 +20,22 @@ import sys
 PATH = pathlib.Path(__file__).resolve().parents[1] / (
     "benchmarks/out/BENCH_engine.json")
 
-SCHEMA = "BENCH_engine/v2"
+SCHEMA = "BENCH_engine/v3"
 SERIES_KEYS = {"dispatches", "ops", "us_per_op", "us_per_call"}
 REQUIRED_SERIES = {"blocking", "coalesced", "per_target_flush",
                    "mixed_size_coalesced"}
 FLUSH_COST_KEYS = {"cold_us_per_op", "warm_us_per_op",
                    "cold_vs_warm_speedup", "compiles_cold",
                    "recompiles_steady_state", "warm_epoch_shapes"}
+REDUCE_PLANE_KEYS = {"acc_blocking_us_per_op", "acc_coalesced_us_per_op",
+                     "acc_dispatches_blocking",
+                     "acc_dispatches_coalesced",
+                     "acc_coalesced_vs_blocking_speedup",
+                     "allreduce_cold_us", "allreduce_warm_us",
+                     "allreduce_cold_vs_warm_speedup",
+                     "allreduce_compiles_cold",
+                     "allreduce_warm_recompiles",
+                     "recompiles_steady_state"}
 PLAN_CACHE_KEYS = {"compile_count", "plan_cache_hits", "size", "builds"}
 
 
@@ -60,6 +71,20 @@ def main() -> None:
     if fc["cold_vs_warm_speedup"] < 5.0:
         fail(f"warm flush only {fc['cold_vs_warm_speedup']}x faster than "
              "cold (acceptance: >= 5x)")
+    rp = profile.get("reduce_plane", {})
+    if not REDUCE_PLANE_KEYS <= rp.keys():
+        fail(f"reduce_plane lacks {sorted(REDUCE_PLANE_KEYS - rp.keys())}")
+    if rp["acc_dispatches_coalesced"] != 1:
+        fail("coalesced accumulate no longer flushes as ONE dispatch")
+    if rp["acc_dispatches_blocking"] != profile["n_ops"]:
+        fail("blocking accumulate dispatch count drifted")
+    if rp["recompiles_steady_state"] != 0:
+        fail("varying (shape, dtype, op) allreduce+accumulate loop "
+             "recompiled — the reduction plane's shape stability "
+             "regressed")
+    if rp["allreduce_warm_recompiles"] != 0:
+        fail("warm varying-shape allreduce recompiled")
+
     pc = profile.get("plan_cache", {})
     if not PLAN_CACHE_KEYS <= pc.keys():
         fail(f"plan_cache lacks {sorted(PLAN_CACHE_KEYS - pc.keys())}")
@@ -67,7 +92,11 @@ def main() -> None:
     print(f"BENCH_engine schema OK ({SCHEMA}): "
           f"cold {fc['cold_us_per_op']}us/op -> warm "
           f"{fc['warm_us_per_op']}us/op "
-          f"({fc['cold_vs_warm_speedup']}x), 0 steady-state recompiles")
+          f"({fc['cold_vs_warm_speedup']}x), 0 steady-state recompiles; "
+          f"reduce_plane acc {rp['acc_blocking_us_per_op']}us/op -> "
+          f"{rp['acc_coalesced_us_per_op']}us/op coalesced, allreduce "
+          f"cold {rp['allreduce_cold_us']}us -> warm "
+          f"{rp['allreduce_warm_us']}us, 0 recompiles")
 
 
 if __name__ == "__main__":

@@ -36,12 +36,14 @@ from .shm import (Locality, classify_locality, dart_shm_view,
                   dart_team_memalloc_shared, mint_shm, shm_supported)
 from .atomic_ops import (HeapAtomicsProvider, dart_compare_and_swap,
                          dart_fetch_and_add, dart_fetch_and_store)
-from .runtime import (DartConfig, DartContext, dart_allreduce, dart_barrier,
-                      dart_bcast, dart_exit, dart_flush, dart_gather,
-                      dart_gather_typed, dart_get, dart_get_blocking,
+from .runtime import (DartConfig, DartContext, dart_accumulate,
+                      dart_accumulate_blocking, dart_allreduce,
+                      dart_barrier, dart_bcast, dart_exit, dart_flush,
+                      dart_gather, dart_gather_typed, dart_get,
+                      dart_get_accumulate, dart_get_blocking,
                       dart_get_nb, dart_init, dart_memalloc, dart_memfree,
-                      dart_put, dart_put_blocking, dart_scatter,
-                      dart_scatter_typed, dart_team_create,
+                      dart_put, dart_put_blocking, dart_reduce,
+                      dart_scatter, dart_scatter_typed, dart_team_create,
                       dart_team_destroy, dart_team_get_group,
                       dart_team_memalloc_aligned, dart_team_memfree,
                       dart_team_myid, dart_team_size, dart_team_split)
@@ -84,10 +86,12 @@ __all__ = [
     "Locality", "classify_locality", "dart_shm_view",
     "dart_team_memalloc_shared", "mint_shm", "shm_supported",
     # runtime
-    "DartConfig", "DartContext", "dart_allreduce", "dart_barrier",
+    "DartConfig", "DartContext", "dart_accumulate",
+    "dart_accumulate_blocking", "dart_allreduce", "dart_barrier",
     "dart_bcast", "dart_exit", "dart_flush", "dart_gather", "dart_get",
-    "dart_get_blocking", "dart_get_nb", "dart_init", "dart_memalloc",
-    "dart_memfree", "dart_put", "dart_put_blocking", "dart_scatter",
+    "dart_get_accumulate", "dart_get_blocking", "dart_get_nb",
+    "dart_init", "dart_memalloc", "dart_memfree", "dart_put",
+    "dart_put_blocking", "dart_reduce", "dart_scatter",
     "dart_team_create", "dart_team_destroy", "dart_team_get_group",
     "dart_team_memalloc_aligned", "dart_team_memfree", "dart_team_myid",
     "dart_team_size", "dart_team_split",

@@ -167,6 +167,39 @@ class GlobalRef:
         return rt.dart_get_nb(self.array.ctx, self.gptr, self.shape,
                               self.dtype)
 
+    # -- element-wise reductions at the target (the reduction plane) ----
+    def accumulate(self, value, op: str = "sum"):
+        """Non-blocking element-wise accumulate at the target (the
+        ``MPI_Accumulate`` analogue): queued on the engine; consecutive
+        same-``op`` accumulates coalesce into ONE read-modify-write
+        dispatch at the next epoch close — overlapping runs included
+        (the ops commute).  Returns the Handle."""
+        from . import runtime as rt
+        return rt.dart_accumulate(self.array.ctx, self.gptr,
+                                  self._coerce(value), op)
+
+    def add(self, value):
+        """``ref.add(v)`` ≡ ``ref.accumulate(v, "sum")``."""
+        return self.accumulate(value, "sum")
+
+    def mul(self, value):
+        return self.accumulate(value, "prod")
+
+    def min(self, value):
+        return self.accumulate(value, "min")
+
+    def max(self, value):
+        return self.accumulate(value, "max")
+
+    def get_accumulate(self, value, op: str = "sum"):
+        """Fetch-and-accumulate (``MPI_Get_accumulate``): applies
+        ``value`` under ``op`` and returns the target's typed value
+        from *before* the op, concrete (flushes this ref's lane)."""
+        from . import runtime as rt
+        old, _ = rt.dart_get_accumulate(self.array.ctx, self.gptr,
+                                        self._coerce(value), op)
+        return old
+
     def flush(self) -> None:
         """Per-target flush (the ``MPI_Win_flush_local(rank, win)``
         analogue): dispatch only this unit's queued ops on the array's
@@ -302,14 +335,34 @@ class GlobalArray:
                                     self.gptr.setunit(self._check_unit(unit)),
                                     self.shape, self.dtype)
 
+    # -- element-wise reductions at the target --------------------------
+    def accumulate(self, unit: int, index, value, op: str = "sum"):
+        """Non-blocking accumulate into a contiguous run of ``unit``'s
+        block: ``ga.accumulate(u, slice(3, 7), v, "sum")`` ≡
+        ``ga.at[u, 3:7].accumulate(v, "sum")`` (pass ``index=None``
+        for the whole block).  Returns the queued Handle."""
+        ref = self[unit] if index is None else self[unit][index]
+        return ref.accumulate(value, op)
+
     # -- typed collectives ----------------------------------------------
     def allreduce(self, op: str = "sum") -> jax.Array:
         """All-reduce the per-member blocks elementwise across the team;
         every member's block is replaced by the result, which is also
-        returned typed."""
+        returned typed.  Shape-stable: element counts bucket to pow2
+        with op-identity padding, so varying-shape loops never
+        recompile after warmup."""
         from . import runtime as rt
         return rt.dart_allreduce(self.ctx, self.gptr, self.shape,
                                  self.dtype, op=op)
+
+    def reduce(self, op: str = "sum", root: int = 0) -> jax.Array:
+        """Root-taking reduce: the reduced value replaces only
+        ``root``'s block; other members keep theirs.  Returns the
+        reduced value."""
+        from . import runtime as rt
+        return rt.dart_reduce(self.ctx, self.gptr, self.shape,
+                              self.dtype, op=op,
+                              root=self._check_unit(root))
 
     def broadcast(self, root: int):
         """Broadcast ``root``'s block to every member.  Returns the

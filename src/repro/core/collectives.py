@@ -238,28 +238,58 @@ _REDUCERS = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min,
              "prod": jnp.prod}
 
 
-def _allreduce_plan(arena_shape, shape, dtype, op: str):
-    """All-reduce keeps exact shapes: the reduced value's shape IS the
-    output shape, so there is no shape-stable bucket for it — but the
-    plan cache still makes its compiles visible/countable.  Never
-    donates: the reduced value aliases nothing and the functional
-    contract lets callers keep the old snapshot."""
+def _reduce_plan(arena_shape, eb: int, dtype, op: str, root: bool,
+                 donate: bool):
+    """Shape-stable reduce/allreduce (the reduction plane's collective
+    half): the element count is bucketed to ``eb`` (pow2, floor 4) and
+    masked element lanes read as the **op identity**
+    (:func:`repro.kernels.segmented_copy.op_identity` — 0/1/±inf by
+    op), so the cross-row reduction of a padded lane is itself the
+    identity and the kernel's output shape is a pure function of the
+    bucket.  Varying (shape, dtype, op) steady-state loops therefore
+    hit a small cached family — the kernel is keyed on ``eb``, never
+    the exact shape; the true byte length travels as a traced scalar
+    and the padded reduced vector is trimmed host-side.  ``root``
+    selects the root-taking reduce (write-back to one row) vs the
+    allreduce (write-back to every row).  Donation is engine-gated
+    like the other collectives: with an engine the arena is
+    holder-owned and donated (the write-back is in-place, no
+    arena-sized copy); on the functional ``engine=None`` path the
+    caller keeps its snapshot."""
     dt = jnp.dtype(dtype)
-    key = ("coll_allreduce", arena_shape, tuple(shape), str(dt), op)
+    _sc.check_flat_addressable(arena_shape)
+    key = ("coll_reduce", arena_shape, eb, str(dt), op, root, donate)
 
     def build():
-        def fn(arena, params):          # params = [off]
-            off = params[0]
-            n = nbytes_of(shape, dt)
-            raw = jax.lax.dynamic_slice(arena, (jnp.int32(0), off),
-                                        (arena.shape[0], n))
-            vals = jax.vmap(lambda r: from_bytes(r, shape, dt))(raw)
-            red = _REDUCERS[op](vals, axis=0)
-            payload = jnp.broadcast_to(to_bytes(red)[None, :],
-                                       (arena.shape[0], n))
-            return jax.lax.dynamic_update_slice(
-                arena, payload, (jnp.int32(0), off)), red
-        return jax.jit(fn)
+        def fn(arena, params):       # params = [off, nbytes, root_row]
+            R, P = arena.shape
+            off, n, root_row = params[0], params[1], params[2]
+            isz = dt.itemsize
+            seg = eb * isz
+            blane = jnp.arange(seg, dtype=jnp.int32)
+            bvalid = blane < n
+            rows = jnp.arange(R, dtype=jnp.int32)[:, None]
+            idx = jnp.where(bvalid[None, :],
+                            rows * P + off + blane[None, :], R * P)
+            raw = jnp.take(arena.reshape(-1), idx, mode="fill",
+                           fill_value=0)                      # (R, seg)
+            vals = jax.vmap(lambda r: from_bytes(r, (eb,), dt))(raw)
+            evalid = jnp.arange(eb, dtype=jnp.int32) * isz < n
+            ident = jnp.asarray(_sc.op_identity(op, dt))
+            vals = jnp.where(evalid[None, :], vals, ident)
+            red = _REDUCERS[op](vals, axis=0)                 # (eb,)
+            out_b = to_bytes(red)                             # (seg,)
+            if root:
+                dst = jnp.where(bvalid, root_row * P + off + blane,
+                                R * P + blane)
+                payload = out_b
+            else:
+                dst = _row_lane_dst(R, P, off, blane, bvalid).reshape(-1)
+                payload = jnp.broadcast_to(out_b, (R, seg)).reshape(-1)
+            arena2 = arena.reshape(-1).at[dst].set(
+                payload, mode="drop", unique_indices=True).reshape(R, P)
+            return arena2, red
+        return jax.jit(fn, donate_argnums=_donate(donate))
 
     return _sc.cached_plan(key, build)
 
@@ -390,20 +420,58 @@ def dart_scatter_typed(state: HeapState, heap: SymmetricHeap, teams_by_slot,
     return new_state, Handle((arena,))
 
 
+def _run_reduce(state, heap, teams_by_slot, gptr, shape, dtype, op,
+                engine, root_unit):
+    dt = jnp.dtype(dtype)
+    shape = tuple(shape)
+    n_elems = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    if root_unit is None:
+        poolid, root_row, off = deref(heap, teams_by_slot, gptr)
+        root_row = 0
+    else:
+        poolid, root_row, off = deref(heap, teams_by_slot,
+                                      gptr.setunit(root_unit))
+    state = _pre_collective(state, poolid, engine)
+    eb = _sc.bucket_pow2(max(n_elems, 1), 4)
+    fn, hit = _reduce_plan(state[poolid].shape, eb, dt, op,
+                           root=root_unit is not None,
+                           donate=engine is not None)
+    _note_plan(engine, hit)
+    arena, red_padded = fn(
+        state[poolid],
+        np.asarray([off, n_elems * dt.itemsize, root_row], np.int32))
+    new_state = copy_state(state)
+    new_state[poolid] = arena
+    # trim the bucket padding host-side (one device→host copy, no
+    # extra jitted launch after the counted dispatch) — padded lanes
+    # hold the op identity, never caller data
+    red = jnp.asarray(
+        np.asarray(red_padded)[:n_elems].reshape(shape))
+    return new_state, red
+
+
 def dart_allreduce(state: HeapState, heap: SymmetricHeap, teams_by_slot,
                    gptr: GlobalPtr, shape, dtype, op: str = "sum",
                    engine=None):
     """All-reduce the typed value at gptr.addr across rows; the result
-    replaces every row's copy.  Returns (new_state, reduced_value)."""
-    poolid, _, off = deref(heap, teams_by_slot, gptr)
-    state = _pre_collective(state, poolid, engine)
-    fn, hit = _allreduce_plan(state[poolid].shape, tuple(shape),
-                              jnp.dtype(dtype), op)
-    _note_plan(engine, hit)
-    arena, red = fn(state[poolid], np.asarray([off], np.int32))
-    new_state = copy_state(state)
-    new_state[poolid] = arena
-    return new_state, red
+    replaces every row's copy.  Returns (new_state, reduced_value).
+
+    Shape-stable: the element count buckets to pow2 with op-identity
+    padding (see :func:`_reduce_plan`), so steady-state loops of
+    varying (shape, dtype, op) hit the plan cache with zero
+    recompiles."""
+    return _run_reduce(state, heap, teams_by_slot, gptr, shape, dtype,
+                       op, engine, root_unit=None)
+
+
+def dart_reduce(state: HeapState, heap: SymmetricHeap, teams_by_slot,
+                gptr: GlobalPtr, shape, dtype, op: str = "sum",
+                root: int = 0, engine=None):
+    """Root-taking reduce: like :func:`dart_allreduce` but the reduced
+    value replaces only ``root``'s row (absolute unit id); every other
+    row keeps its own copy.  Returns (new_state, reduced_value)."""
+    return _run_reduce(state, heap, teams_by_slot, gptr, shape, dtype,
+                       op, engine, root_unit=root)
 
 
 def dart_barrier(state: Optional[HeapState] = None) -> None:

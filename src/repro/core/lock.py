@@ -32,6 +32,7 @@ counters for both placements.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Dict, List, Optional
@@ -113,6 +114,19 @@ class LockService:
             lock.acquisitions += 1
             return True
         return False
+
+    @contextlib.contextmanager
+    def held(self, lock: DartLock, unit: int,
+             timeout: Optional[float] = None):
+        """``with locks.held(lock, unit): ...`` — acquire on entry,
+        release on exit **including on exception**, so a failing
+        critical section can never wedge the queue (successors would
+        otherwise block forever in ``wait_notify``)."""
+        self.acquire(lock, unit, timeout=timeout)
+        try:
+            yield lock
+        finally:
+            self.release(lock, unit)
 
     # -- dart_lock_release ------------------------------------------------
     def release(self, lock: DartLock, unit: int,

@@ -24,6 +24,15 @@ queue** over the symmetric heap:
   bounds-checked at initiation (translation happens once, like the
   paper's dart_put), but no device work is dispatched.  The returned
   :class:`Handle` starts in the ``queued`` state.
+  ``CommEngine.accumulate/get_accumulate`` (the ``MPI_Accumulate`` /
+  ``MPI_Get_accumulate`` analogues — element-wise reductions applied
+  *at the target*) enqueue the same way: same-(op, dtype) runs share
+  one segmented read-modify-write dispatch — overlap included, the
+  ops commute — while mixed-op or accumulate-vs-put overlap splits
+  the run in queue order; fetch runs stay byte-disjoint so every
+  fetched pre-value matches the sequential order (the *reduction
+  plane*; identity-padded descriptors keep it on the same bucketed
+  plan cache).
 * ``CommEngine.flush`` closes the epoch: maximal runs of same-pool
   ops are **coalesced** into one batched jitted dispatch — N queued
   puts become a single XLA launch instead of N.  Same-size ops
@@ -402,6 +411,22 @@ class _PendingGet:
     handle: GetHandle
 
 
+@dataclasses.dataclass(eq=False)
+class _PendingAcc:
+    """A queued element-wise accumulate (``MPI_Accumulate`` /
+    ``MPI_Get_accumulate``): read-modify-write at the target inside
+    the same epoch/flush discipline as puts.  ``fetch`` marks the
+    get-accumulate form, whose handle yields the pre-update value."""
+    poolid: int
+    row: int
+    off: int
+    payload: np.ndarray         # 1-D uint8, host-staged at initiation
+    op: str
+    dtype: str                  # canonical dtype name (part of run key)
+    fetch: bool
+    handle: Handle
+
+
 class CommEngine:
     """Epoch-scoped pending-op queue over a heap-state holder.
 
@@ -485,6 +510,66 @@ class CommEngine:
         self.ops_enqueued += 1
         return h
 
+    def _stage_acc(self, heap: SymmetricHeap, teams_by_slot,
+                   gptr: GlobalPtr, value, op: str):
+        """Shared accumulate initiation: deref + canonicalize + the
+        alignment/bounds checks the RMW kernels rely on."""
+        if op not in _sc.REDUCE_OPS:
+            raise ValueError(f"unknown reduction op {op!r} "
+                             f"(supported: {sorted(_sc.REDUCE_OPS)})")
+        poolid, row, off = deref(heap, teams_by_slot, gptr)
+        arr = np.asarray(value)
+        canon = jax.dtypes.canonicalize_dtype(arr.dtype)
+        if arr.dtype != canon:
+            arr = arr.astype(canon)
+        dt = jnp.dtype(canon)
+        payload = _to_host_bytes(arr)     # same staging rule as puts
+        pool_bytes = heap.pools[poolid].pool_bytes
+        if off % dt.itemsize or pool_bytes % dt.itemsize:
+            raise ValueError(
+                f"accumulate of {dt} needs an element-aligned offset "
+                f"and pool (off={off}, pool_bytes={pool_bytes})")
+        if off + payload.size > pool_bytes:
+            raise ValueError(
+                "accumulate overruns the target allocation's pool")
+        return poolid, row, off, arr, payload, dt
+
+    def accumulate(self, heap: SymmetricHeap, teams_by_slot,
+                   gptr: GlobalPtr, value, op: str = "sum") -> Handle:
+        """Queued element-wise accumulate at the target
+        (``MPI_Accumulate``): enqueues like ``put``; same-op runs
+        coalesce into one segmented read-modify-write dispatch at
+        flush — even overlapping ones (the ops commute), while
+        mixed-op or accumulate-vs-put overlap splits the run in queue
+        order (last-writer-wins preserved run-by-run)."""
+        poolid, row, off, _, payload, dt = self._stage_acc(
+            heap, teams_by_slot, gptr, value, op)
+        h = Handle((), engine=self)
+        h.poolid = poolid
+        h.row = row
+        self._pending.append(_PendingAcc(poolid, row, off, payload, op,
+                                         str(dt), False, h))
+        self.ops_enqueued += 1
+        return h
+
+    def get_accumulate(self, heap: SymmetricHeap, teams_by_slot,
+                       gptr: GlobalPtr, value, op: str = "sum"
+                       ) -> GetHandle:
+        """Queued fetch-and-accumulate (``MPI_Get_accumulate``):
+        ``handle.value()`` flushes and yields the target's value from
+        *before* this op applied.  Byte-disjoint same-op fetches share
+        one fused dispatch; overlap splits the run so every fetched
+        value matches the sequential order."""
+        poolid, row, off, arr, payload, dt = self._stage_acc(
+            heap, teams_by_slot, gptr, value, op)
+        h = GetHandle(arr.shape, dt, engine=self)
+        h.poolid = poolid
+        h.row = row
+        self._pending.append(_PendingAcc(poolid, row, off, payload, op,
+                                         str(dt), True, h))
+        self.ops_enqueued += 1
+        return h
+
     def pending_ops(self, poolid: Optional[int] = None,
                     row: Optional[int] = None) -> int:
         if poolid is None:
@@ -530,6 +615,9 @@ class CommEngine:
                                                     disjoint)
                 for op in run:
                     op.handle._resolve((state[pid],))
+            elif isinstance(run[0], _PendingAcc):
+                state[pid] = self._dispatch_acc_run(state[pid], run,
+                                                    disjoint)
             else:
                 self._dispatch_get_run(state[pid], run)
         self._pending = rest
@@ -575,6 +663,42 @@ class CommEngine:
         self._note_plan(hit)
         return fn(arena, desc, flat)
 
+    def _dispatch_acc_run(self, arena: jax.Array,
+                          run: Sequence["_PendingAcc"],
+                          disjoint: bool = True) -> jax.Array:
+        """One counted dispatch for a same-(op, dtype) accumulate run:
+        identity-padded descriptors + flat payload feed the segmented
+        read-modify-write kernel — vectorized gather-combine-scatter
+        when the run's byte ranges are provably disjoint, the ordered
+        per-descriptor RMW loop otherwise (still one dispatch; the ops
+        commute, so either order is the program-order result).  Fetch
+        runs are byte-disjoint by the run rule and return every op's
+        pre-update window from the same fused dispatch."""
+        self.dispatch_count += 1
+        if len(run) > 1:
+            self.ops_coalesced += len(run)
+        first = run[0]
+        desc, flat, seg = _sc.pack_acc_descriptors(
+            [op.row for op in run], [op.off for op in run],
+            [int(op.payload.size) for op in run],
+            [op.payload for op in run], first.op, first.dtype)
+        fn, hit = _sc.accumulate_plan(
+            arena.shape, desc.shape[0], seg, flat.shape[0],
+            op=first.op, dtype=first.dtype, fetch=first.fetch,
+            ordered=not disjoint,
+            impl=self._pick_impl(desc, seg, int(arena.shape[1])))
+        self._note_plan(hit)
+        if first.fetch:
+            arena, old = fn(arena, desc, flat)
+            batch = _GatherBatch(old)
+            for i, op in enumerate(run):
+                op.handle._resolve_gather(batch, i)
+        else:
+            arena = fn(arena, desc, flat)
+            for op in run:
+                op.handle._resolve((arena,))
+        return arena
+
     def _dispatch_get_run(self, arena: jax.Array,
                           run: Sequence[_PendingGet]) -> None:
         """One counted dispatch for the whole run (uniform AND mixed
@@ -617,11 +741,18 @@ class CommEngine:
 def _kind_key(op) -> Tuple:
     if isinstance(op, _PendingPut):
         return ("put", op.poolid)
+    if isinstance(op, _PendingAcc):
+        # accumulates coalesce only with the SAME (op, dtype, fetch?):
+        # a mixed-op (or mixed-dtype) overlap is not commutative, so it
+        # splits the run and dispatches in queue order — exactly the
+        # last-writer-wins rule puts follow
+        kind = "gacc" if op.fetch else "acc"
+        return (kind, op.poolid, op.op, op.dtype)
     return ("get", op.poolid)
 
 
 def _op_nbytes(op) -> int:
-    if isinstance(op, _PendingPut):
+    if isinstance(op, _PendingPut) or isinstance(op, _PendingAcc):
         return int(op.payload.size)
     return op.nbytes
 
@@ -653,9 +784,14 @@ class _RunMeta:
         self.sizes = {n}
         self.max_n = n
         self.disjoint = True
-        # row -> (starts, ends): merged, sorted, pairwise-disjoint
+        # row -> (starts, ends): merged, sorted, pairwise-disjoint.
+        # Tracked for puts and plain accumulates (the vectorized-vs-
+        # ordered dispatch proof — accumulates never *split* on
+        # overlap, they just demote to the ordered RMW loop) and for
+        # fetch-accumulates (whose run rule *requires* disjointness so
+        # the fused read-all-then-apply-all equals sequential order).
         self.intervals: Dict[int, Tuple[List[int], List[int]]] = {}
-        if self.kind[0] == "put":
+        if self.kind[0] in ("put", "acc", "gacc"):
             self._note(op.row, op.off, op.off + n)
 
     def _note(self, row: int, off: int, end: int) -> None:
@@ -688,6 +824,17 @@ class _RunMeta:
     def can_extend(self, op, n: int) -> bool:
         if _kind_key(op) != self.kind:
             return False
+        if self.kind[0] == "acc":
+            # same-(op, dtype) accumulates commute: any mix of sizes
+            # and overlaps shares ONE dispatch — an overlapping
+            # extension just demotes it to the ordered RMW kernel
+            return True
+        if self.kind[0] == "gacc":
+            # fetch-accumulate: each fetched value must equal what a
+            # sequential execution would read, and the fused kernel
+            # reads every window before applying any op — valid only
+            # while the run stays byte-disjoint; overlap splits it
+            return self._disjoint(op, n)
         if self.sizes == {n}:
             # uniform run: unconditional, exactly the pre-registry rule —
             # an overlapping extension just demotes the dispatch to the
@@ -703,9 +850,11 @@ class _RunMeta:
     def extend(self, op, n: int) -> None:
         self.sizes.add(n)
         self.max_n = max(self.max_n, n)
-        if self.kind[0] == "put":
+        if self.kind[0] in ("put", "acc"):
             if self.disjoint and not self._disjoint(op, n):
                 self.disjoint = False
+            self._note(op.row, op.off, op.off + n)
+        elif self.kind[0] == "gacc":
             self._note(op.row, op.off, op.off + n)
 
 

@@ -264,6 +264,40 @@ def dart_put_blocking(ctx: DartContext, gptr: GlobalPtr, value) -> None:
     h.wait()
 
 
+def dart_accumulate(ctx: DartContext, gptr: GlobalPtr, value,
+                    op: str = "sum"):
+    """Non-blocking element-wise accumulate at the target (the
+    ``MPI_Accumulate`` analogue): enqueue on the engine, return a
+    queued handle.  Consecutive same-``op`` accumulates to one pool
+    coalesce into ONE segmented read-modify-write dispatch at flush —
+    overlapping ranges included, since the ops commute; mixed-op or
+    accumulate-vs-put overlap splits the run in queue order."""
+    return ctx.engine.accumulate(ctx.heap, ctx.teams_by_slot, gptr,
+                                 value, op)
+
+
+def dart_accumulate_blocking(ctx: DartContext, gptr: GlobalPtr, value,
+                             op: str = "sum") -> None:
+    """Blocking accumulate: enqueue + flush + local/remote completion."""
+    h = ctx.engine.accumulate(ctx.heap, ctx.teams_by_slot, gptr, value,
+                              op)
+    h.wait()
+
+
+def dart_get_accumulate(ctx: DartContext, gptr: GlobalPtr, value,
+                        op: str = "sum"):
+    """Fetch-and-accumulate (the ``MPI_Get_accumulate`` analogue):
+    flushes the target's ``(pool, row)`` lane and returns
+    ``(old_value, handle)`` — the target's typed value from *before*
+    this op applied, decoded host-side from the fused dispatch.  For
+    the queued form use ``ctx.engine.get_accumulate`` directly and
+    ``handle.value()`` later."""
+    h = ctx.engine.get_accumulate(ctx.heap, ctx.teams_by_slot, gptr,
+                                  value, op)
+    ctx.engine.flush(h.poolid, h.row)
+    return h.value(), h
+
+
 def dart_get_nb(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
     """Non-blocking get: enqueue; ``handle.value()`` flushes and yields
     the typed result.  Consecutive same-size gets coalesce at flush."""
@@ -361,6 +395,18 @@ def dart_allreduce(ctx: DartContext, gptr: GlobalPtr, shape, dtype,
     ctx.state, red = _coll.dart_allreduce(ctx.state, ctx.heap,
                                           ctx.teams_by_slot, gptr, shape,
                                           dtype, op, engine=ctx.engine)
+    return red
+
+
+def dart_reduce(ctx: DartContext, gptr: GlobalPtr, shape, dtype,
+                op: str = "sum", root: int = 0):
+    """Root-taking reduce: the reduced value replaces only ``root``'s
+    copy (other rows keep their own); returns the reduced value.
+    Shares the allreduce's op-identity-padded bucketed plan family."""
+    ctx.state, red = _coll.dart_reduce(ctx.state, ctx.heap,
+                                       ctx.teams_by_slot, gptr, shape,
+                                       dtype, op, root,
+                                       engine=ctx.engine)
     return red
 
 

@@ -33,10 +33,19 @@ This module removes the shape dependence:
   as ONE vectorized segmented update (``unique_indices`` scatter);
   only overlapping uniform runs keep the sequential ``fori_loop`` so
   last-writer-wins program order is preserved.
+* **Reduction plane** — accumulate runs (``dart_accumulate`` /
+  ``dart_get_accumulate``) ride the same substrate through segmented
+  read-modify-write kernels (:func:`accumulate_plan`): descriptors
+  gain an op column, every payload slot is pre-filled with the op's
+  **identity element** (:func:`op_identity` — masked lanes are no-ops
+  by value as well as by mask), and only the run's ``(k, seg)``
+  windows are ever bitcast to the dtype, never the arena.  Disjoint
+  runs vectorize; overlapping same-op runs keep the ordered RMW loop
+  (one dispatch either way — the ops commute).
 * **Plan cache** — compiled executables are cached process-wide by
   ``(kind, impl, arena shape, buckets, ...)``; the engine counts
   misses (``compile_count``) and hits (``plan_cache_hits``) so tests
-  and ``BENCH_engine/v2`` can *assert* the steady state compiles
+  and ``BENCH_engine/v3`` can *assert* the steady state compiles
   nothing.
 
 ``impl='pallas'`` selects the hand-tiled Pallas kernel (grid over
@@ -61,8 +70,16 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# descriptor columns: desc[i] = (row, off, len, start)
-ROW, OFF, LEN, START = 0, 1, 2, 3
+# descriptor columns: desc[i] = (row, off, len, start[, op])
+# Accumulate descriptors carry a fifth column — the op code — so the
+# packed table is self-describing (telemetry/debugging and the run
+# split rule both read it); the combine function itself is static in
+# the plan key, since XLA must trace it.
+ROW, OFF, LEN, START, OPCODE = 0, 1, 2, 3, 4
+
+#: element-wise reduction ops of the reduction plane (dart_accumulate /
+#: dart_allreduce): name → descriptor op code.
+REDUCE_OPS = {"sum": 0, "prod": 1, "min": 2, "max": 3}
 
 #: smallest segment bucket — tiny ops (1..16 B) share one compiled shape
 SEG_FLOOR = 16
@@ -111,6 +128,86 @@ def pack_descriptors(rows: Sequence[int], offs: Sequence[int],
         flat = np.zeros(max(kb * seg + seg, FLAT_FLOOR), np.uint8)
         for s, p in zip(starts, payloads):
             flat[int(s):int(s) + p.size] = p
+    return desc, flat, seg
+
+
+def op_identity(op: str, dtype) -> np.ndarray:
+    """The identity element of ``op`` over ``dtype`` — the value whose
+    accumulation is a no-op (``x op identity == x``):
+
+    ======  ==================  =====================
+    op      floating            integral
+    ======  ==================  =====================
+    sum     ``0.0``             ``0``
+    prod    ``1.0``             ``1``
+    min     ``+inf``            ``iinfo(dtype).max``
+    max     ``-inf``            ``iinfo(dtype).min``
+    ======  ==================  =====================
+
+    Padding lanes of accumulate payloads and masked element lanes of
+    the bucketed allreduce carry this value, so pow2 bucketing never
+    changes a reduction's result — masked lanes are no-ops *by value*
+    as well as by index mask.
+    """
+    if op not in REDUCE_OPS:
+        raise ValueError(f"unknown reduction op {op!r} "
+                         f"(supported: {sorted(REDUCE_OPS)})")
+    dt = jnp.dtype(dtype)
+    floating = jnp.issubdtype(dt, jnp.floating)
+    if op == "sum":
+        v = 0
+    elif op == "prod":
+        v = 1
+    elif op == "min":
+        v = np.inf if floating else np.iinfo(dt).max
+    else:                                        # max
+        v = -np.inf if floating else np.iinfo(dt).min
+    return np.asarray(v, dt)
+
+
+def identity_bytes(op: str, dtype) -> np.ndarray:
+    """``op``'s identity element as its little-endian byte pattern
+    (``itemsize`` uint8 values) — the fill for accumulate payload
+    staging buffers."""
+    scalar = op_identity(op, dtype)
+    return np.frombuffer(scalar.tobytes(), np.uint8).copy()
+
+
+def pack_acc_descriptors(rows: Sequence[int], offs: Sequence[int],
+                         lens: Sequence[int],
+                         payloads: Sequence[np.ndarray],
+                         op: str, dtype
+                         ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Host-side staging for an accumulate run: k read-modify-write ops
+    → one bucketed ``(k', 5)`` int32 descriptor table (columns
+    ``row, off, len, start, op``) plus one flat uint8 payload buffer.
+
+    Unlike :func:`pack_descriptors` (whose payloads pack densely), each
+    accumulate op owns a full seg-aligned slot (``start = i * seg``)
+    **pre-filled with the op's identity element**
+    (:func:`identity_bytes`): every padded lane — the tail of a short
+    payload and all lanes of ``len=0`` bucket-padding descriptors —
+    decodes to the identity, so combining it is arithmetically a no-op
+    even before the index mask drops it.  The flat staging size is a
+    pure function of the ``(k', seg)`` buckets, keeping warm epochs on
+    the cached plan.
+    """
+    k = len(rows)
+    kb = bucket_pow2(k, K_FLOOR)
+    seg = bucket_pow2(max(lens) if lens else 1, SEG_FLOOR)
+    desc = np.zeros((kb, 5), np.int32)
+    desc[:k, ROW] = rows
+    desc[:k, OFF] = offs
+    desc[:k, LEN] = lens
+    desc[:k, START] = np.arange(k, dtype=np.int64) * seg
+    desc[k:, START] = np.arange(k, kb, dtype=np.int64) * seg
+    desc[:, OPCODE] = REDUCE_OPS[op]
+    # exactly kb*seg (>= FLAT_FLOOR: kb >= 4, seg >= 16): the kernels
+    # reshape the flat buffer to (kb, seg) payload slots
+    ident = identity_bytes(op, dtype)
+    flat = np.tile(ident, kb * seg // ident.size)
+    for i, p in enumerate(payloads):
+        flat[i * seg:i * seg + p.size] = p
     return desc, flat, seg
 
 
@@ -202,6 +299,94 @@ def _ref_gather(arena: jax.Array, desc: jax.Array, *, seg: int
     return jnp.take(arena.reshape(-1), idx, mode="fill", fill_value=0)
 
 
+#: elementwise combine (window ⊕ payload) per reduction op, shared by
+#: the ref and Pallas RMW kernels.
+_ELT_COMBINE = {"sum": jnp.add, "prod": jnp.multiply, "min": jnp.minimum,
+                "max": jnp.maximum}
+
+
+def _bytes_as(raw: jax.Array, dt) -> jax.Array:
+    """Reinterpret a flat uint8 buffer as typed elements (the
+    ``from_bytes`` bitcast, kept local so the kernel layer has no
+    dependency on ``repro.core``)."""
+    dt = jnp.dtype(dt)
+    if dt == jnp.uint8:
+        return raw
+    n = raw.size // dt.itemsize
+    return jax.lax.bitcast_convert_type(raw.reshape(n, dt.itemsize), dt)
+
+
+def _typed_as_bytes(typed: jax.Array) -> jax.Array:
+    if typed.dtype == jnp.uint8:
+        return typed.reshape(-1)
+    return jax.lax.bitcast_convert_type(typed.reshape(-1),
+                                        jnp.uint8).reshape(-1)
+
+
+def _ref_accumulate_vec(arena: jax.Array, desc: jax.Array,
+                        flat: jax.Array, *, seg: int, op: str, dt,
+                        fetch: bool):
+    """Byte-disjoint segmented read-modify-write in ONE vectorized
+    dispatch: gather every op's current byte window, bitcast to the
+    run's dtype, combine with the (identity-padded) payload slots,
+    bitcast back, and scatter the combined bytes.  Only the ``(k,
+    seg)`` windows are ever bitcast — never the arena — so the cost
+    scales with the run, not the pool.  Masked lanes take the familiar
+    route: distinct out-of-range destinations, dropped by the scatter;
+    their payload decodes to the op identity anyway (no-op by value
+    too).  With ``fetch`` the gathered pre-update windows — already in
+    hand — are returned as well (``MPI_Get_accumulate``; the run
+    builder keeps fetch runs byte-disjoint, so read-all-then-apply-all
+    equals the sequential order)."""
+    R, P = arena.shape
+    dt = jnp.dtype(dt)
+    n_cells = R * P
+    valid, lane = _lane_mask(desc, seg)
+    k = desc.shape[0]
+    dst = desc[:, ROW][:, None] * P + desc[:, OFF][:, None] + lane
+    oob = n_cells + jnp.arange(k * seg, dtype=jnp.int32).reshape(k, seg)
+    dst = jnp.where(valid, dst, oob)
+    old = jnp.take(arena.reshape(-1), dst, mode="fill",
+                   fill_value=0)                       # (k, seg) bytes
+    old_t = _bytes_as(old.reshape(-1), dt).reshape(k, seg // dt.itemsize)
+    pay_t = _bytes_as(flat, dt).reshape(k, seg // dt.itemsize)
+    comb = _ELT_COMBINE[op](old_t, pay_t)
+    comb_b = _typed_as_bytes(comb).reshape(k, seg)
+    out = arena.reshape(-1).at[dst.reshape(-1)].set(
+        comb_b.reshape(-1), mode="drop",
+        unique_indices=True).reshape(R, P)
+    return (out, old) if fetch else out
+
+
+def _ref_accumulate_ordered(arena: jax.Array, desc: jax.Array,
+                            flat: jax.Array, *, seg: int, op: str, dt):
+    """Overlap-tolerant accumulate: descriptors read-modify-write
+    strictly in queue order (``fori_loop``), one window at a time —
+    the RMW analogue of :func:`_ref_scatter_ordered`.  (Commutative
+    ops make any order correct; sequential keeps it bitwise equal to
+    the blocking reference even for non-associative float rounding.)"""
+    R, P = arena.shape
+    dt = jnp.dtype(dt)
+    n_cells = R * P
+    eseg = seg // dt.itemsize
+    lane = jnp.arange(seg, dtype=jnp.int32)
+
+    def body(i, a):
+        ln = desc[i, LEN]
+        valid = lane < ln
+        idx = jnp.where(valid, desc[i, ROW] * P + desc[i, OFF] + lane,
+                        n_cells + lane)
+        old_b = jnp.take(a, jnp.where(valid, idx, n_cells),
+                         mode="fill", fill_value=0)
+        old_t = _bytes_as(old_b, dt).reshape(eseg)
+        pay_t = _bytes_as(flat[desc[i, START] + lane], dt).reshape(eseg)
+        comb_b = _typed_as_bytes(_ELT_COMBINE[op](old_t, pay_t))
+        return a.at[idx].set(comb_b, mode="drop", unique_indices=True)
+
+    return jax.lax.fori_loop(0, desc.shape[0], body,
+                             arena.reshape(-1)).reshape(R, P)
+
+
 # --------------------------------------------------------------------------
 # Pallas kernels — grid over descriptors, scalar-prefetched table
 # --------------------------------------------------------------------------
@@ -233,6 +418,59 @@ def _pallas_gather_kernel(desc_ref, arena_ref, o_ref, *, seg: int):
     window = arena_ref[pl.ds(row, 1), pl.ds(off, seg)]
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, seg), 1)
     o_ref[...] = jnp.where(lane < ln, window, jnp.uint8(0))
+
+
+def _pallas_acc_kernel(desc_ref, flat_ref, arena_ref, o_ref, *,
+                       seg: int, op: str, dt):
+    """Per-descriptor read-modify-write: load the byte window, bitcast
+    to the run's dtype, combine with the (identity-padded) payload
+    slot, bitcast back, and store the masked result.  The grid is
+    sequential, so overlapping descriptors apply strictly in order —
+    RMW-safe by construction."""
+    i = pl.program_id(0)
+    row = desc_ref[i, ROW]
+    off = desc_ref[i, OFF]
+    ln = desc_ref[i, LEN]
+    st = desc_ref[i, START]
+    window = o_ref[pl.ds(row, 1), pl.ds(off, seg)]      # (1, seg) uint8
+    pay = flat_ref[pl.ds(st, seg)]                      # (seg,)
+    dt = jnp.dtype(dt)
+    isz = dt.itemsize
+    if isz == 1:
+        wt, pt = window.reshape(seg), pay
+    else:
+        wt = jax.lax.bitcast_convert_type(
+            window.reshape(seg // isz, isz), dt)
+        pt = jax.lax.bitcast_convert_type(pay.reshape(seg // isz, isz),
+                                          dt)
+    comb = _ELT_COMBINE[op](wt, pt)
+    if isz == 1:
+        cb = comb.reshape(1, seg)
+    else:
+        cb = jax.lax.bitcast_convert_type(comb, jnp.uint8).reshape(1, seg)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, seg), 1)
+    o_ref[pl.ds(row, 1), pl.ds(off, seg)] = jnp.where(lane < ln, cb,
+                                                      window)
+
+
+def _pallas_accumulate(arena: jax.Array, desc: jax.Array,
+                       flat: jax.Array, *, seg: int, op: str, dt
+                       ) -> jax.Array:
+    k = desc.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec(flat.shape, lambda i, *_: (0,)),
+                  pl.BlockSpec(arena.shape, lambda i, *_: (0, 0))],
+        out_specs=pl.BlockSpec(arena.shape, lambda i, *_: (0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_pallas_acc_kernel, seg=seg, op=op, dt=dt),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
+        input_output_aliases={2: 0},       # arena (arg after desc, flat)
+        interpret=_interpret_default(),
+    )(desc, flat, arena)
 
 
 def _pallas_scatter(arena: jax.Array, desc: jax.Array, flat: jax.Array,
@@ -325,6 +563,55 @@ def scatter_plan(arena_shape: Tuple[int, int], kb: int, seg: int,
             fn = functools.partial(
                 _ref_scatter_ordered if ordered else _ref_scatter_vec,
                 seg=seg)
+        return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+    return cached_plan(key, build)
+
+
+def accumulate_plan(arena_shape: Tuple[int, int], kb: int, seg: int,
+                    flat_len: int, *, op: str, dtype, fetch: bool,
+                    ordered: bool = False, impl: str = "ref",
+                    donate: bool = True) -> Tuple[Callable, bool]:
+    """fn(arena, desc, flat) -> arena'  (or ``(arena', old_windows)``
+    with ``fetch`` — the ``MPI_Get_accumulate`` form, old values as
+    ``(kb, seg)`` pad-to-bucket uint8 windows read before any of the
+    run applies).
+
+    The combine op and dtype are static in the key (XLA traces the
+    combine); the descriptor's op column keeps the packed table
+    self-describing.  Only the run's ``(k, seg)`` windows are bitcast
+    to the dtype — never the arena — so a dispatch costs O(run), not
+    O(pool).  Mirroring :func:`scatter_plan`: byte-disjoint runs take
+    the vectorized gather-combine-scatter; overlapping runs
+    (``ordered``) keep the sequential per-descriptor RMW loop — still
+    ONE dispatch, and bitwise equal to the blocking order.  The Pallas
+    kernel is a sequential descriptor grid, valid for both.  Fetch
+    runs always take the vectorized ref path (the run builder keeps
+    them byte-disjoint, so read-all-then-apply-all is
+    order-equivalent and the gathered old windows come for free)."""
+    check_flat_addressable(arena_shape)
+    dt = jnp.dtype(dtype)
+    if op not in REDUCE_OPS:
+        raise ValueError(f"unknown reduction op {op!r}")
+    if seg % dt.itemsize or arena_shape[1] % dt.itemsize:
+        raise ValueError(
+            f"accumulate of {dt} needs element-aligned segment/pool "
+            f"bytes (seg={seg}, pool_bytes={arena_shape[1]})")
+    if fetch:
+        impl = "ref"        # fused fetch rides the vectorized ref path
+    key = ("accumulate", impl, arena_shape, kb, seg, flat_len, op,
+           str(dt), fetch, ordered, donate)
+
+    def build():
+        if impl == "pallas":
+            fn = functools.partial(_pallas_accumulate, seg=seg, op=op,
+                                   dt=dt)
+        elif ordered and not fetch:
+            fn = functools.partial(_ref_accumulate_ordered, seg=seg,
+                                   op=op, dt=dt)
+        else:
+            fn = functools.partial(_ref_accumulate_vec, seg=seg, op=op,
+                                   dt=dt, fetch=fetch)
         return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
     return cached_plan(key, build)

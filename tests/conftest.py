@@ -1,0 +1,19 @@
+"""Shared fixtures for the engine-facing test modules.
+
+``engine_impl`` parametrizes a module's ``ctx`` fixture over BOTH
+batched-kernel implementations — ``CommEngine(impl='ref')`` (XLA
+segmented scatter/gather) and ``impl='pallas'`` (the hand-tiled
+descriptor-grid kernels, interpret-mode off TPU) — so every
+engine-facing test runs under both instead of pallas being
+spot-checked ad hoc.  The impl switch must never change semantics
+(runs that fail the Pallas window precondition fall back to ref
+per-dispatch), which is exactly what running the whole module twice
+asserts.
+"""
+
+import pytest
+
+
+@pytest.fixture(params=["ref", "pallas"])
+def engine_impl(request):
+    return request.param

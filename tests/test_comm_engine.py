@@ -17,9 +17,12 @@ from repro.core import onesided as _os
 
 
 @pytest.fixture()
-def ctx():
+def ctx(engine_impl):
+    # engine-impl parametrization (conftest.py): every ctx-based test
+    # in this module runs under both impl='ref' and impl='pallas'
     c = dart_init(n_units=4, config=DartConfig(
         non_collective_pool_bytes=8192, team_pool_bytes=8192))
+    c.engine.impl = engine_impl
     yield c
     dart_exit(c)
 
@@ -261,13 +264,13 @@ def test_engine_profile_machine_readable():
     from benchmarks import put_get
     profile = put_get.engine_profile(repeats=2, quick=True)
     s = profile["series"]
-    assert profile["schema"] == "BENCH_engine/v2"
+    assert profile["schema"] == "BENCH_engine/v3"
     assert s["blocking"]["dispatches"] == profile["n_ops"]
     assert s["coalesced"]["dispatches"] == 1
     assert s["mixed_size_coalesced"]["dispatches"] == 1
     assert s["per_target_flush"]["dispatches_target_only"] == 1
     assert s["per_target_flush"]["ops_left_queued"] == profile["n_ops"] // 2
-    # v2 flush cost model: a warm (plan-cache-hit) flush must beat the
+    # flush cost model: a warm (plan-cache-hit) flush must beat the
     # cold (compile) flush by >= 5x, and the steady-state loop of
     # varying-size epochs must not recompile at all
     fc = profile["flush_cost"]
@@ -275,6 +278,16 @@ def test_engine_profile_machine_readable():
     assert fc["recompiles_steady_state"] == 0
     assert fc["cold_vs_warm_speedup"] >= 5.0
     assert profile["plan_cache"]["plan_cache_hits"] > 0
+    # v3 reduce plane: N accumulates coalesce into ONE dispatch (vs
+    # n_ops blocking), and the varying (shape, dtype, op)
+    # allreduce+accumulate steady-state loop performs zero recompiles
+    # — the assertable form of the shape-stable-allreduce ROADMAP item
+    rp = profile["reduce_plane"]
+    assert rp["acc_dispatches_blocking"] == profile["n_ops"]
+    assert rp["acc_dispatches_coalesced"] == 1
+    assert rp["allreduce_compiles_cold"] >= 1
+    assert rp["allreduce_warm_recompiles"] == 0
+    assert rp["recompiles_steady_state"] == 0
     import json
     json.dumps(profile)                  # machine-readable, no jnp leaks
 

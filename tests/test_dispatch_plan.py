@@ -18,9 +18,12 @@ from repro.kernels import segmented_copy as sc
 
 
 @pytest.fixture()
-def ctx():
+def ctx(engine_impl):
+    # engine-impl parametrization (conftest.py): every ctx-based test
+    # in this module runs under both impl='ref' and impl='pallas'
     c = dart_init(n_units=4, config=DartConfig(
         non_collective_pool_bytes=8192, team_pool_bytes=8192))
+    c.engine.impl = engine_impl
     yield c
     dart_exit(c)
 
@@ -62,6 +65,61 @@ def test_padding_descriptors_do_not_touch_arena():
     assert list(out[1, 30:]) == [255, 254]
     out[1, 30:] = before[1, 30:]
     np.testing.assert_array_equal(out, before)   # nothing else moved
+
+
+def test_pack_acc_descriptors_identity_padded():
+    """Accumulate staging: the descriptor gains the op column, every
+    payload owns a seg-aligned slot, and ALL padding bytes — short-
+    payload tails and whole bucket-padding slots — decode to the op's
+    identity element (true no-ops by value)."""
+    pays = [np.asarray([3.0], np.float32).view(np.uint8),
+            np.asarray([2.0, 4.0], np.float32).view(np.uint8)]
+    desc, flat, seg = sc.pack_acc_descriptors(
+        [0, 1], [32, 64], [4, 8], pays, "prod", jnp.float32)
+    assert desc.shape == (4, 5)                    # k=2 → bucket 4, +op col
+    assert list(desc[:, sc.OPCODE]) == [sc.REDUCE_OPS["prod"]] * 4
+    np.testing.assert_array_equal(desc[:2, sc.LEN], [4, 8])
+    np.testing.assert_array_equal(desc[:, sc.START],
+                                  [0, seg, 2 * seg, 3 * seg])
+    vals = flat.view(np.float32)
+    assert vals[0] == 3.0 and list(vals[seg // 4:seg // 4 + 2]) == [2., 4.]
+    # every byte not covered by a payload is the identity (1.0)
+    mask = np.ones(flat.size, bool)
+    mask[:4] = mask[seg:seg + 8] = False
+    assert np.all(flat.view(np.float32)[mask.reshape(-1, 4).all(1)] == 1.0)
+
+
+def test_op_identity_table():
+    assert sc.op_identity("sum", jnp.float32) == 0.0
+    assert sc.op_identity("prod", jnp.int32) == 1
+    assert sc.op_identity("min", jnp.float32) == np.inf
+    assert sc.op_identity("max", jnp.float32) == -np.inf
+    assert sc.op_identity("min", jnp.int32) == np.iinfo(np.int32).max
+    assert sc.op_identity("max", jnp.uint8) == 0
+    with pytest.raises(ValueError):
+        sc.op_identity("xor", jnp.int32)
+
+
+def test_accumulate_padding_descriptors_do_not_touch_arena():
+    """len=0 accumulate descriptors (bucket padding) must leave every
+    arena byte untouched under both impls — masked lanes are dropped
+    (ref) or keep the window (pallas), and their payload is the
+    identity anyway."""
+    base = np.arange(2 * 64, dtype=np.uint8).reshape(2, 64)
+    desc, flat, seg = sc.pack_acc_descriptors(
+        [1], [32], [8], [np.asarray([5, 5], np.int32).view(np.uint8)],
+        "sum", jnp.int32)
+    for impl in ("ref", "pallas"):
+        fn, _ = sc.accumulate_plan((2, 64), desc.shape[0], seg,
+                                   flat.shape[0], op="sum",
+                                   dtype=jnp.int32, fetch=False,
+                                   impl=impl, donate=False)
+        out = np.asarray(fn(jnp.asarray(base), desc, flat)).copy()
+        got = out[1, 32:40].view(np.int32).copy()
+        expect = base[1, 32:40].view(np.int32) + 5
+        np.testing.assert_array_equal(got, expect)
+        out[1, 32:40] = base[1, 32:40]
+        np.testing.assert_array_equal(out, base)   # nothing else moved
 
 
 # ------------------------------------------------------ retrace behavior ---
@@ -255,7 +313,13 @@ def test_functional_collectives_do_not_donate_snapshot():
         s3, _ = _coll.dart_scatter_typed(
             snap, ctx.heap, ctx.teams_by_slot, g,
             jnp.arange(8, dtype=jnp.int32).reshape(4, 2), engine=None)
-        for new_state in (s1, s2, s3):
+        s4, red = _coll.dart_allreduce(snap, ctx.heap, ctx.teams_by_slot,
+                                       g, (8,), jnp.int32, "sum",
+                                       engine=None)
+        assert np.all(np.asarray(red) == 3)        # only row 0 holds 3s
+        s5, _ = _coll.dart_reduce(snap, ctx.heap, ctx.teams_by_slot, g,
+                                  (8,), jnp.int32, "sum", 0, engine=None)
+        for new_state in (s1, s2, s3, s4, s5):
             assert not new_state[poolid].is_deleted()
         # the snapshot arena was neither deleted nor mutated
         assert not snap[poolid].is_deleted()

@@ -14,9 +14,12 @@ from repro.core.array import _element_run
 
 
 @pytest.fixture()
-def ctx():
+def ctx(engine_impl):
+    # engine-impl parametrization (conftest.py): every ctx-based test
+    # in this module runs under both impl='ref' and impl='pallas'
     c = dart_init(n_units=4, config=DartConfig(
         non_collective_pool_bytes=8192, team_pool_bytes=8192))
+    c.engine.impl = engine_impl
     yield c
     dart_exit(c)
 
