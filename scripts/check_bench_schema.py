@@ -6,9 +6,12 @@ trajectory dashboards diff across PRs; this guard keeps its shape
 stable so those diffs stay meaningful.  Checks the schema id, the
 required series and their dispatch-count invariants, the flush cost
 model (cold vs warm + zero steady-state recompiles — the
-shape-stable-flush acceptance criteria), and — v3 — the reduce_plane
+shape-stable-flush acceptance criteria), — v3 — the reduce_plane
 block (coalesced accumulate = ONE dispatch, zero recompiles over a
-varying (shape, dtype, op) allreduce+accumulate loop).
+varying (shape, dtype, op) allreduce+accumulate loop), and — v4 —
+the overlap block (background-progress flush latency hidden under the
+compute window: progress-on wall time strictly below progress-off,
+still zero steady-state recompiles).
 """
 
 from __future__ import annotations
@@ -20,7 +23,7 @@ import sys
 PATH = pathlib.Path(__file__).resolve().parents[1] / (
     "benchmarks/out/BENCH_engine.json")
 
-SCHEMA = "BENCH_engine/v3"
+SCHEMA = "BENCH_engine/v4"
 SERIES_KEYS = {"dispatches", "ops", "us_per_op", "us_per_call"}
 REQUIRED_SERIES = {"blocking", "coalesced", "per_target_flush",
                    "mixed_size_coalesced"}
@@ -36,6 +39,10 @@ REDUCE_PLANE_KEYS = {"acc_blocking_us_per_op", "acc_coalesced_us_per_op",
                      "allreduce_compiles_cold",
                      "allreduce_warm_recompiles",
                      "recompiles_steady_state"}
+OVERLAP_KEYS = {"n_ops", "nbytes", "compute_window_us", "flush_only_us",
+                "progress_off_us", "progress_on_us", "overlap_speedup",
+                "background_flushes", "watermark_ops",
+                "recompiles_steady_state"}
 PLAN_CACHE_KEYS = {"compile_count", "plan_cache_hits", "size", "builds"}
 
 
@@ -85,6 +92,21 @@ def main() -> None:
     if rp["allreduce_warm_recompiles"] != 0:
         fail("warm varying-shape allreduce recompiled")
 
+    ov = profile.get("overlap", {})
+    if not OVERLAP_KEYS <= ov.keys():
+        fail(f"overlap lacks {sorted(OVERLAP_KEYS - ov.keys())}")
+    if ov["overlap_speedup"] <= 1.0:
+        fail(f"background progress hides no flush latency (speedup "
+             f"{ov['overlap_speedup']}x; acceptance: progress-on wall "
+             "time strictly below progress-off)")
+    if ov["progress_on_us"] >= ov["progress_off_us"]:
+        fail("progress-on wall time not below progress-off")
+    if ov["recompiles_steady_state"] != 0:
+        fail("background-progress flushes recompiled — the daemon's "
+             "coalesced runs left the foreground plan family")
+    if ov["background_flushes"] < 1:
+        fail("progress-on series never flushed in the background")
+
     pc = profile.get("plan_cache", {})
     if not PLAN_CACHE_KEYS <= pc.keys():
         fail(f"plan_cache lacks {sorted(PLAN_CACHE_KEYS - pc.keys())}")
@@ -96,7 +118,9 @@ def main() -> None:
           f"reduce_plane acc {rp['acc_blocking_us_per_op']}us/op -> "
           f"{rp['acc_coalesced_us_per_op']}us/op coalesced, allreduce "
           f"cold {rp['allreduce_cold_us']}us -> warm "
-          f"{rp['allreduce_warm_us']}us, 0 recompiles")
+          f"{rp['allreduce_warm_us']}us, 0 recompiles; overlap "
+          f"{ov['progress_off_us']}us -> {ov['progress_on_us']}us "
+          f"({ov['overlap_speedup']}x, 0 recompiles)")
 
 
 if __name__ == "__main__":

@@ -7,9 +7,13 @@
 # 2. benchmark harness smoke run (--quick): every suite must still run
 #    and emit its artifacts
 # 3. BENCH_engine schema guard: the machine-readable engine trajectory
-#    (benchmarks/out/BENCH_engine.json) must keep the BENCH_engine/v2
-#    shape and its dispatch/flush-cost invariants, so perf diffs stay
-#    comparable across PRs
+#    (benchmarks/out/BENCH_engine.json) must keep the BENCH_engine/v4
+#    shape and its dispatch/flush-cost/overlap invariants, so perf
+#    diffs stay comparable across PRs
+# 4. threaded stress suite, re-run standalone: the progress-plane
+#    differential and the atomics/lock contention tests exercise real
+#    thread interleavings, so an extra pass catches schedules the
+#    tier-1 run happened to miss
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -17,6 +21,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 pytest =="
 python -m pytest -x -q
+
+echo "== threaded stress suite =="
+python -m pytest -x -q tests/test_progress_plane.py tests/test_atomics_stress.py tests/test_core_lock.py
 
 echo "== benchmarks (quick) =="
 python -m benchmarks.run --quick

@@ -32,6 +32,7 @@ from .collectives import (team_all_gather, team_all_to_all, team_barrier,
                           team_reduce_scatter)
 from .atomics import AtomicsProvider, Cell, ThreadedAtomics
 from .lock import FREE, DartLock, LockService
+from .progress import ProgressPlane
 from .shm import (Locality, classify_locality, dart_shm_view,
                   dart_team_memalloc_shared, mint_shm, shm_supported)
 from .atomic_ops import (HeapAtomicsProvider, dart_compare_and_swap,
@@ -70,8 +71,9 @@ __all__ = [
     "SymmetricHeap", "TranslationRecord", "TranslationTable",
     "WindowDestroyedError", "WindowRegistry", "align_up", "copy_state",
     "from_bytes", "nbytes_of", "to_bytes",
-    # one-sided engine + handles
-    "CommEngine", "GetHandle", "Handle", "dart_test", "dart_testall",
+    # one-sided engine + handles + background progress
+    "CommEngine", "GetHandle", "Handle", "ProgressPlane", "dart_test",
+    "dart_testall",
     "dart_wait", "dart_waitall", "deref", "shmem_get", "shmem_get_dynamic",
     "shmem_halo_exchange", "shmem_put",
     # collectives

@@ -17,10 +17,20 @@ remote-DMA + semaphore protocol sketched in core/atomics.py; the
 *data-plane* layout (int32 cells in the symmetric heap, addressed by
 gptr) is identical, which is the point: lock state lives in ordinary
 DART global memory exactly as in the paper (Fig. 6).
+
+Donation safety: the functional put/get below read and replace
+``ctx.state`` directly, and the jitted put kernel *donates* the arena.
+Every raw-state access therefore also holds the engine lock (inside
+the per-context mutex — that lock order, mutex → engine lock, is the
+rule everywhere), so a concurrent flush — foreground or the background
+:class:`~repro.core.progress.ProgressPlane` — can never swap or delete
+the arena mid-read.  This turns the old "single-writer rule for raw
+state reads" from a documented caveat into an enforced invariant.
 """
 
 from __future__ import annotations
 
+import contextlib
 import threading
 
 import jax.numpy as jnp
@@ -41,6 +51,16 @@ def _mutex_for(ctx):
         return _ctx_locks[key]
 
 
+def _engine_lock(ctx):
+    """The engine lock when the ctx has an engine (DartContext), else a
+    no-op — the functional plane is also used with bare state holders
+    in unit tests."""
+    engine = getattr(ctx, "engine", None)
+    if engine is None:
+        return contextlib.nullcontext()
+    return engine.lock
+
+
 def _flush_pending(ctx) -> None:
     # atomics are read-modify-write on heap cells: any queued (not yet
     # dispatched) engine ops must land first or the read is stale
@@ -50,16 +70,19 @@ def _flush_pending(ctx) -> None:
 
 
 def _read_i32(ctx, gptr: GlobalPtr) -> int:
-    _flush_pending(ctx)
-    return int(np.asarray(dart_get_blocking(
-        ctx.state, ctx.heap, ctx.teams_by_slot, gptr, (1,), jnp.int32))[0])
+    with _engine_lock(ctx):
+        _flush_pending(ctx)
+        return int(np.asarray(dart_get_blocking(
+            ctx.state, ctx.heap, ctx.teams_by_slot, gptr, (1,),
+            jnp.int32))[0])
 
 
 def _write_i32(ctx, gptr: GlobalPtr, value: int) -> None:
-    _flush_pending(ctx)
-    ctx.state = dart_put_blocking(
-        ctx.state, ctx.heap, ctx.teams_by_slot, gptr,
-        jnp.asarray([value], jnp.int32))
+    with _engine_lock(ctx):
+        _flush_pending(ctx)
+        ctx.state = dart_put_blocking(
+            ctx.state, ctx.heap, ctx.teams_by_slot, gptr,
+            jnp.asarray([value], jnp.int32))
 
 
 def dart_fetch_and_add(ctx, gptr: GlobalPtr, delta: int) -> int:
@@ -101,6 +124,14 @@ class HeapAtomicsProvider:
         _write_i32(self.ctx, g, init)
         self._cells[name] = g
         return g
+
+    def free_cell(self, cell) -> None:
+        """Return the cell's heap bytes (LockService.destroy_lock)."""
+        from .runtime import dart_memfree
+        for name, g in list(self._cells.items()):
+            if g == cell:
+                del self._cells[name]
+        dart_memfree(self.ctx, cell)
 
     def fetch_and_store(self, cell, value):
         return dart_fetch_and_store(self.ctx, cell, value)

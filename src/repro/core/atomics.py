@@ -68,6 +68,10 @@ class AtomicsProvider(abc.ABC):
     @abc.abstractmethod
     def store(self, cell: Cell, value: int) -> None: ...
 
+    def free_cell(self, cell: Cell) -> None:
+        """Release a cell's backing storage (LockService.destroy_lock).
+        Default no-op for providers without reclaimable cells."""
+
     # zero-byte notification channel (MPI_Send/Recv of size 0, §IV.B.6)
     @abc.abstractmethod
     def notify(self, unit: int, tag: Hashable) -> None: ...

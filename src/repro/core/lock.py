@@ -91,7 +91,14 @@ class LockService:
         return lock
 
     def destroy_lock(self, lock: DartLock) -> None:
+        """dart_team_lock_free: drop the registry entry AND return the
+        tail/next cells to the provider (heap-backed providers reclaim
+        the global-memory bytes; cells leaked here were unreclaimable
+        until the provider grew ``free_cell``)."""
         self._locks.pop(lock.lock_id, None)
+        self.atomics.free_cell(lock.tail)
+        for cell in lock.next_cells.values():
+            self.atomics.free_cell(cell)
 
     # -- dart_lock_acquire ------------------------------------------------
     def acquire(self, lock: DartLock, unit: int,
@@ -130,18 +137,37 @@ class LockService:
 
     # -- dart_lock_release ------------------------------------------------
     def release(self, lock: DartLock, unit: int,
-                spin_sleep: float = 0.0) -> None:
+                spin_sleep: float = 1e-6, max_spin_sleep: float = 1e-3,
+                timeout: Optional[float] = None) -> None:
+        """Release, handing off to the registered successor if any.
+
+        The successor-registration wait uses bounded exponential
+        backoff (``spin_sleep`` doubling up to ``max_spin_sleep``) —
+        the old ``spin_sleep=0.0`` default was a GIL-held busy loop
+        that starved the very successor thread it was waiting on under
+        the threaded provider.  ``timeout`` mirrors ``acquire``: raise
+        ``TimeoutError`` instead of spinning forever on a successor
+        that swapped the tail but died before registering.
+        """
         old = self.atomics.compare_and_swap(lock.tail, unit, FREE)
         if old == unit:
             return                                  # nobody queued behind us
         # A successor swapped the tail before our CAS: it is (or will be)
-        # registered in our 'next' cell.  Spin until the registration
-        # lands, then hand over.
+        # registered in our 'next' cell.  Back off until the
+        # registration lands, then hand over.
         mine = lock.next_cells[unit]
+        deadline = (time.monotonic() + timeout
+                    if timeout is not None else None)
+        sleep = max(spin_sleep, 1e-9)
         succ = self.atomics.load(mine)
         while succ == FREE:
-            if spin_sleep:
-                time.sleep(spin_sleep)
+            if deadline is not None and time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"lock {lock.lock_id}: successor swapped the tail "
+                    f"but never registered in unit {unit}'s next cell "
+                    f"within {timeout}s")
+            time.sleep(sleep)
+            sleep = min(sleep * 2, max_spin_sleep)
             succ = self.atomics.load(mine)
         self.atomics.store(mine, FREE)
         self.atomics.notify(succ, ("lock", lock.lock_id))

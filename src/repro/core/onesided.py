@@ -66,6 +66,23 @@ queue** over the symmetric heap:
   a queued handle triggers the flush itself; ``dart_test`` reports
   False until the op has been dispatched.
 
+**Threading model**: the engine is thread-safe.  ``CommEngine.lock``
+(a reentrant lock) serializes every mutation of the pending queue, the
+instrumentation counters, and — critically — every ``holder.state``
+swap: the batched kernels *donate* the arena, so an unserialized
+``ctx.state`` read racing a flush could observe a deleted buffer.  Any
+code that reads ``holder.state`` outside the engine (the heap atomics
+in :mod:`repro.core.atomic_ops`, the zero-copy view in
+:mod:`repro.core.shm`, the host-plane collectives) takes the same lock.
+N submitter threads may enqueue/flush/wait/test concurrently; handle
+state transitions (``queued → issued → complete`` / ``failed``) happen
+under the lock, so ``dart_test``/``dart_wait``/``dart_waitall`` are
+safe from any thread while a flusher runs — including the background
+:class:`repro.core.progress.ProgressPlane`, which drains queued epochs
+at a byte/op watermark or an idle deadline without any caller
+involvement (the paper's passive-target progress, docs/API.md
+"Threading model & progress").
+
 The engine also carries ``dispatch_count``, a counter of jitted kernel
 launches, so tests and benchmarks can *assert* that a coalesced flush
 issues fewer dispatches than the equivalent blocking sequence.
@@ -97,7 +114,9 @@ import bisect
 import contextlib
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -143,6 +162,33 @@ def _host_decode(raw: np.ndarray, shape: Tuple[int, ...], dtype
 # --------------------------------------------------------------------------
 
 
+def _arr_done(a) -> bool:
+    """is_deleted-or-is_ready, tolerating a flush donating the buffer
+    BETWEEN the two probes (the TOCTOU a concurrent flusher opens up):
+    donated ⇒ a successor consumed it ⇒ complete by program order."""
+    try:
+        return a.is_deleted() or a.is_ready()
+    except Exception as e:  # noqa: BLE001 - narrow on message below
+        if "deleted" in str(e) or "donated" in str(e):
+            return True
+        raise
+
+
+def _block_ready(arrays) -> None:
+    """Per-array ``block_until_ready`` with the same donation-race
+    tolerance as :func:`_arr_done` — a batched
+    ``jax.block_until_ready(list)`` would raise on a buffer donated
+    after the caller's ``is_deleted`` filter ran."""
+    for a in arrays:
+        try:
+            if not a.is_deleted():
+                a.block_until_ready()
+        except Exception as e:  # noqa: BLE001 - narrow on message below
+            if "deleted" in str(e) or "donated" in str(e):
+                continue
+            raise
+
+
 class Handle:
     """A DART communication handle.
 
@@ -172,7 +218,7 @@ class Handle:
             return "failed"
         if not self._issued:
             return "queued"
-        if all(a.is_deleted() or a.is_ready() for a in self.arrays):
+        if all(_arr_done(a) for a in self.arrays):
             return "complete"
         return "issued"
 
@@ -198,7 +244,11 @@ class Handle:
         if not self._issued and self._engine is not None:
             # close only this handle's (pool, row) lane — the
             # MPI_Win_flush_local(rank, win) analogue; other targets
-            # keep accumulating ops for their own coalesced flush
+            # keep accumulating ops for their own coalesced flush.
+            # flush() serializes on the engine lock, so if a concurrent
+            # flusher (another thread, or the background progress
+            # plane) already dispatched this op, ours is a no-op and
+            # the _issued re-check below observes the transition.
             self._engine.flush(getattr(self, "poolid", None),
                                getattr(self, "row", None))
             self._check_failed()
@@ -206,14 +256,13 @@ class Handle:
                 raise RuntimeError(
                     f"queued op ({self._lane_repr()}) was dropped "
                     "before dispatch (engine cleared by dart_exit?)")
-        jax.block_until_ready([a for a in self.arrays
-                               if not a.is_deleted()])
+        _block_ready(self.arrays)
 
     def test(self) -> bool:
         self._check_failed()
         if not self._issued:
             return False
-        return all(a.is_deleted() or a.is_ready() for a in self.arrays)
+        return all(_arr_done(a) for a in self.arrays)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"Handle(state={self.state}, n_arrays={len(self.arrays)})"
@@ -296,28 +345,22 @@ def dart_waitall(handles: Sequence[Handle]) -> None:
                     lanes[key] = None        # unknown lane: whole pool
                 else:
                     lanes[key].add(row)
-    flushed = set()
     for (engine, poolid), rows in lanes.items():
         engine.flush(poolid, rows)
-        flushed.add((engine, poolid))
     for h in handles:
         if not h._issued and h._engine is not None:
+            # The lane scan above is a racy snapshot: a concurrent
+            # flusher (another thread, the progress plane) may have
+            # issued this handle between the scan and here — or may
+            # even have been mid-flush while we scanned, so OUR flush
+            # of its lane found nothing.  Never raise off the stale
+            # scan; wait() re-flushes only the handle's own lane (a
+            # no-op if it was issued meanwhile, serialized by the
+            # engine lock) and raises the lane-named "dropped" error
+            # only when the op is truly gone from a flushed lane.
             h._check_failed()
-            if (h._engine, getattr(h, "poolid", None)) in flushed:
-                # this handle's lane WAS flushed and its op still never
-                # dispatched: it was silently dropped (engine cleared).
-                # Name the op's own lane — a generic error here used to
-                # blame whichever handle happened to come first.
-                raise RuntimeError(
-                    f"queued op ({h._lane_repr()}) was dropped before "
-                    "dispatch (engine cleared by dart_exit?)")
-            # lane not covered by this call's flushes (e.g. the handle
-            # was enqueued on an engine whose lane scan raced a
-            # clear): close it individually — wait() raises the
-            # lane-specific error if the op is truly gone.
             h.wait()
-    jax.block_until_ready([a for h in handles for a in h.arrays
-                           if not a.is_deleted()])
+    _block_ready([a for h in handles for a in h.arrays])
 
 
 def dart_testall(handles: Sequence[Handle]) -> bool:
@@ -400,6 +443,7 @@ class _PendingPut:
     off: int
     payload: np.ndarray         # 1-D uint8, host-staged at initiation
     handle: Handle
+    ts: float = 0.0             # monotonic enqueue time (progress plane)
 
 
 @dataclasses.dataclass(eq=False)
@@ -409,6 +453,7 @@ class _PendingGet:
     off: int
     nbytes: int
     handle: GetHandle
+    ts: float = 0.0
 
 
 @dataclasses.dataclass(eq=False)
@@ -425,6 +470,7 @@ class _PendingAcc:
     dtype: str                  # canonical dtype name (part of run key)
     fetch: bool
     handle: Handle
+    ts: float = 0.0
 
 
 class CommEngine:
@@ -453,11 +499,23 @@ class CommEngine:
     ``'auto'`` = pallas on TPU, ref elsewhere.  Runs whose descriptors
     fail the Pallas window precondition fall back to ref per-dispatch,
     so the choice never changes semantics.
+
+    **Thread safety**: ``lock`` (reentrant) guards ``_pending``, the
+    counters, and the holder-state swap inside ``flush`` — submitters,
+    waiters, and the background progress plane may run concurrently.
+    External readers of ``holder.state`` (heap atomics, shm views,
+    collectives) must take the same lock: the batched kernels donate
+    the arena, so an unserialized raw read can observe a deleted
+    buffer mid-flush.
     """
 
     def __init__(self, holder=None, impl: str = "auto"):
         self._holder = holder
         self._pending: List = []        # program order across pools
+        #: serializes queue mutation, counters, and holder.state swaps
+        #: (reentrant: flush may be re-entered from locked callers)
+        self.lock = threading.RLock()
+        self._on_enqueue: Optional[Callable[[], None]] = None
         self.epoch = 0
         self.dispatch_count = 0
         self.ops_enqueued = 0
@@ -470,6 +528,18 @@ class CommEngine:
 
     def bind(self, holder) -> None:
         self._holder = holder
+
+    def set_progress_notifier(self, cb: Optional[Callable[[], None]]
+                              ) -> None:
+        """Register (or clear) the enqueue callback the progress plane
+        uses to wake its drain thread.  Called OUTSIDE the engine lock
+        so the plane's condition variable never nests inside it."""
+        self._on_enqueue = cb
+
+    def _notify_enqueue(self) -> None:
+        cb = self._on_enqueue
+        if cb is not None:
+            cb()
 
     def _note_plan(self, hit: bool) -> None:
         if hit:
@@ -493,8 +563,11 @@ class CommEngine:
         h = Handle((), engine=self)
         h.poolid = poolid
         h.row = row
-        self._pending.append(_PendingPut(poolid, row, off, payload, h))
-        self.ops_enqueued += 1
+        with self.lock:
+            self._pending.append(_PendingPut(poolid, row, off, payload,
+                                             h, time.monotonic()))
+            self.ops_enqueued += 1
+        self._notify_enqueue()
         return h
 
     def get(self, heap: SymmetricHeap, teams_by_slot, gptr: GlobalPtr,
@@ -506,8 +579,11 @@ class CommEngine:
         h = GetHandle(shape, dtype, engine=self)
         h.poolid = poolid
         h.row = row
-        self._pending.append(_PendingGet(poolid, row, off, n, h))
-        self.ops_enqueued += 1
+        with self.lock:
+            self._pending.append(_PendingGet(poolid, row, off, n, h,
+                                             time.monotonic()))
+            self.ops_enqueued += 1
+        self._notify_enqueue()
         return h
 
     def _stage_acc(self, heap: SymmetricHeap, teams_by_slot,
@@ -547,9 +623,12 @@ class CommEngine:
         h = Handle((), engine=self)
         h.poolid = poolid
         h.row = row
-        self._pending.append(_PendingAcc(poolid, row, off, payload, op,
-                                         str(dt), False, h))
-        self.ops_enqueued += 1
+        with self.lock:
+            self._pending.append(_PendingAcc(poolid, row, off, payload,
+                                             op, str(dt), False, h,
+                                             time.monotonic()))
+            self.ops_enqueued += 1
+        self._notify_enqueue()
         return h
 
     def get_accumulate(self, heap: SymmetricHeap, teams_by_slot,
@@ -565,17 +644,40 @@ class CommEngine:
         h = GetHandle(arr.shape, dt, engine=self)
         h.poolid = poolid
         h.row = row
-        self._pending.append(_PendingAcc(poolid, row, off, payload, op,
-                                         str(dt), True, h))
-        self.ops_enqueued += 1
+        with self.lock:
+            self._pending.append(_PendingAcc(poolid, row, off, payload,
+                                             op, str(dt), True, h,
+                                             time.monotonic()))
+            self.ops_enqueued += 1
+        self._notify_enqueue()
         return h
 
     def pending_ops(self, poolid: Optional[int] = None,
                     row: Optional[int] = None) -> int:
-        if poolid is None:
-            return len(self._pending)
-        return sum(1 for op in self._pending
-                   if op.poolid == poolid and (row is None or op.row == row))
+        with self.lock:
+            if poolid is None:
+                return len(self._pending)
+            return sum(1 for op in self._pending if op.poolid == poolid
+                       and (row is None or op.row == row))
+
+    def lane_stats(self) -> Dict[Tuple[int, int], Tuple[int, int, float]]:
+        """Snapshot of the pending queue grouped by ``(pool, row)``
+        lane: ``{lane: (ops, bytes, oldest_enqueue_ts)}``.  The
+        progress plane's watermark/idle-deadline decisions key off
+        this; ops are in queue order, so the first op seen per lane is
+        its oldest."""
+        with self.lock:
+            stats: Dict[Tuple[int, int], List] = {}
+            for op in self._pending:
+                key = (op.poolid, op.row)
+                n = _op_nbytes(op)
+                s = stats.get(key)
+                if s is None:
+                    stats[key] = [1, n, op.ts]
+                else:
+                    s[0] += 1
+                    s[1] += n
+            return {k: (v[0], v[1], v[2]) for k, v in stats.items()}
 
     # -- flush (epoch close) --------------------------------------------
     def flush(self, poolid: Optional[int] = None,
@@ -592,54 +694,63 @@ class CommEngine:
         distinct pools touch distinct arrays, and ops on distinct rows
         of one pool touch disjoint per-unit partitions, so a per-pool or
         per-target flush cannot reorder visible effects.
-        """
-        if poolid is None:
-            todo, rest = self._pending, []
-        else:
-            rows = (None if row is None else
-                    set(row) if isinstance(row, (set, frozenset, list,
-                                                 tuple)) else {row})
 
-            def _sel(op):
-                return op.poolid == poolid and (rows is None
-                                                or op.row in rows)
-            todo = [op for op in self._pending if _sel(op)]
-            rest = [op for op in self._pending if not _sel(op)]
-        if not todo:
-            return self._holder.state
-        state = copy_state(self._holder.state)
-        for run, disjoint in _coalesced_runs(todo):
-            pid = run[0].poolid
-            if isinstance(run[0], _PendingPut):
-                state[pid] = self._dispatch_put_run(state[pid], run,
-                                                    disjoint)
-                for op in run:
-                    op.handle._resolve((state[pid],))
-            elif isinstance(run[0], _PendingAcc):
-                state[pid] = self._dispatch_acc_run(state[pid], run,
-                                                    disjoint)
+        The whole epoch close — queue selection, dispatch (which
+        donates the arenas), handle resolution, and the holder-state
+        swap — runs under the engine lock, so concurrent flushes
+        serialize and no thread can observe a half-donated state.
+        """
+        with self.lock:
+            if poolid is None:
+                todo, rest = self._pending, []
             else:
-                self._dispatch_get_run(state[pid], run)
-        self._pending = rest
-        self._holder.state = state
-        self.epoch += 1
-        return state
+                rows = (None if row is None else
+                        set(row) if isinstance(row, (set, frozenset,
+                                                     list, tuple))
+                        else {row})
+
+                def _sel(op):
+                    return op.poolid == poolid and (rows is None
+                                                    or op.row in rows)
+                todo = [op for op in self._pending if _sel(op)]
+                rest = [op for op in self._pending if not _sel(op)]
+            if not todo:
+                return self._holder.state
+            state = copy_state(self._holder.state)
+            for run, disjoint in _coalesced_runs(todo):
+                pid = run[0].poolid
+                if isinstance(run[0], _PendingPut):
+                    state[pid] = self._dispatch_put_run(state[pid], run,
+                                                        disjoint)
+                    for op in run:
+                        op.handle._resolve((state[pid],))
+                elif isinstance(run[0], _PendingAcc):
+                    state[pid] = self._dispatch_acc_run(state[pid], run,
+                                                        disjoint)
+                else:
+                    self._dispatch_get_run(state[pid], run)
+            self._pending = rest
+            self._holder.state = state
+            self.epoch += 1
+            return state
 
     def drop_pool(self, poolid: int, reason: str = "") -> int:
         """Discard queued ops targeting ``poolid`` and fail their
         handles (the pool's window is being destroyed, so dispatching —
         or silently dropping — them would be wrong).  Returns the number
         of ops dropped."""
-        dropped = [op for op in self._pending if op.poolid == poolid]
-        if not dropped:
-            return 0
-        self._pending = [op for op in self._pending
-                         if op.poolid != poolid]
-        msg = (f"window destroyed: pool {poolid} was dropped with this "
-               f"op still queued{' (' + reason + ')' if reason else ''}")
-        for op in dropped:
-            op.handle._fail(msg)
-        return len(dropped)
+        with self.lock:
+            dropped = [op for op in self._pending if op.poolid == poolid]
+            if not dropped:
+                return 0
+            self._pending = [op for op in self._pending
+                             if op.poolid != poolid]
+            msg = (f"window destroyed: pool {poolid} was dropped with "
+                   f"this op still queued"
+                   f"{' (' + reason + ')' if reason else ''}")
+            for op in dropped:
+                op.handle._fail(msg)
+            return len(dropped)
 
     def _dispatch_put_run(self, arena: jax.Array,
                           run: Sequence[_PendingPut],
@@ -735,7 +846,8 @@ class CommEngine:
 
     def clear(self) -> None:
         """Drop queued ops without dispatching (dart_exit teardown)."""
-        self._pending = []
+        with self.lock:
+            self._pending = []
 
 
 def _kind_key(op) -> Tuple:

@@ -1,0 +1,168 @@
+"""Background progress plane: a daemon thread draining queued epochs.
+
+The paper's passive-target model (§III) assumes one-sided traffic makes
+progress without the target's involvement.  The queued host plane alone
+does not deliver that: a submitter thread that enqueues puts and then
+sleeps leaves the bytes stranded until some later call crosses a flush
+point.  Zhou & Gracia's asynchronous-progress follow-up (PAPERS.md)
+attacks exactly this gap with a helper thread inside the MPI runtime;
+:class:`ProgressPlane` is our analogue over :class:`CommEngine`.
+
+Design:
+
+* one daemon thread per engine, woken by the engine's enqueue notifier
+  (``CommEngine.set_progress_notifier``) through a condition variable —
+  no polling while the queue is empty;
+* a lane — one ``(poolid, row)`` pair, the unit of
+  ``MPI_Win_flush_local`` in the paper's mapping — is flushed when it
+  crosses ``watermark_bytes`` or ``watermark_ops``, or when its oldest
+  op has sat queued for ``idle_s`` seconds (so small stragglers are
+  never stranded);
+* the sweep calls the ordinary per-target ``engine.flush(pool, row)``
+  path, which serializes on the engine lock with every foreground
+  flush, waiter, and raw-state reader — the plane adds no new
+  synchronization rules, it is just another caller.
+
+Lock ordering: the plane's condition variable is *never* held while
+calling into the engine, and the engine's enqueue notifier is invoked
+*after* the engine lock is released, so ``cond`` and ``engine.lock``
+are never nested in either order.
+
+Lifecycle mirrors ``serve/engine.py``'s loop thread: ``start()`` spawns
+the daemon and registers the notifier; ``stop(drain=True)`` (the
+default) unregisters, joins, and then flushes everything still queued —
+shutdown flushes, it never drops.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import List, Optional
+
+__all__ = ["ProgressPlane"]
+
+
+class ProgressPlane:
+    """Watermark/idle-deadline background flusher for one CommEngine.
+
+    Instrumentation counters (read them from tests/benchmarks):
+
+    * ``flushes`` — total background flush calls issued;
+    * ``watermark_flushes`` / ``idle_flushes`` — split by trigger;
+    * ``errors`` — exceptions raised by background flushes (the thread
+      records and keeps running; handles carry the failure to their
+      waiters through the normal ``_fail`` path).
+    """
+
+    def __init__(self, engine, *, watermark_bytes: int = 1 << 16,
+                 watermark_ops: int = 32, idle_s: float = 0.005,
+                 name: str = "dart-progress"):
+        if watermark_bytes <= 0 or watermark_ops <= 0:
+            raise ValueError("watermarks must be positive")
+        if idle_s <= 0:
+            raise ValueError("idle_s must be positive")
+        self.engine = engine
+        self.watermark_bytes = int(watermark_bytes)
+        self.watermark_ops = int(watermark_ops)
+        self.idle_s = float(idle_s)
+        self.name = name
+        self.flushes = 0
+        self.watermark_flushes = 0
+        self.idle_flushes = 0
+        self.errors: List[BaseException] = []
+        self._cond = threading.Condition()
+        self._wake = False
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle -------------------------------------------------------
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> "ProgressPlane":
+        if self.running:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, name=self.name,
+                                        daemon=True)
+        self.engine.set_progress_notifier(self._on_enqueue)
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True, timeout: float = 5.0) -> None:
+        """Stop the daemon.  With ``drain`` (default) everything still
+        queued is flushed on the caller's thread after the join — queued
+        ops are flushed, not dropped."""
+        self.engine.set_progress_notifier(None)
+        self._stop.set()
+        with self._cond:
+            self._wake = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+            self._thread = None
+        if drain:
+            self.engine.flush()
+
+    # -- engine-facing hook (called with engine lock NOT held) -----------
+
+    def _on_enqueue(self) -> None:
+        with self._cond:
+            self._wake = True
+            self._cond.notify_all()
+
+    # -- daemon ----------------------------------------------------------
+
+    def _next_timeout(self, now: float) -> Optional[float]:
+        """Seconds until the earliest idle deadline, 0.0 if a lane has
+        already crossed a watermark, or None when nothing is queued."""
+        stats = self.engine.lane_stats()
+        if not stats:
+            return None
+        deadline = None
+        for ops, nbytes, oldest in stats.values():
+            if ops >= self.watermark_ops or nbytes >= self.watermark_bytes:
+                return 0.0
+            d = oldest + self.idle_s - now
+            if deadline is None or d < deadline:
+                deadline = d
+        return max(0.0, deadline)
+
+    def _run(self) -> None:
+        import time
+        while not self._stop.is_set():
+            now = time.monotonic()
+            timeout = self._next_timeout(now)
+            if timeout is None or timeout > 0:
+                with self._cond:
+                    if not self._wake and not self._stop.is_set():
+                        self._cond.wait(timeout=timeout)
+                    self._wake = False
+                if self._stop.is_set():
+                    break
+            self._sweep(time.monotonic())
+
+    def _sweep(self, now: float) -> None:
+        for (poolid, row), (ops, nbytes, oldest) in \
+                self.engine.lane_stats().items():
+            by_mark = (ops >= self.watermark_ops
+                       or nbytes >= self.watermark_bytes)
+            by_idle = now - oldest >= self.idle_s
+            if not (by_mark or by_idle):
+                continue
+            try:
+                self.engine.flush(poolid, row)
+            except BaseException as e:  # noqa: BLE001 - keep draining
+                # the op's handle already carries the failure; record
+                # for observability and back off so a persistently
+                # failing lane cannot busy-loop the daemon
+                self.errors.append(e)
+                self._stop.wait(0.01)
+            else:
+                self.flushes += 1
+                if by_mark:
+                    self.watermark_flushes += 1
+                else:
+                    self.idle_flushes += 1

@@ -33,6 +33,7 @@ from .team import (DART_TEAM_ALL, FreeListTeamList, Team, TeamList,
                    TeamPartition)
 from . import onesided as _os
 from . import collectives as _coll
+from . import progress as _prog
 
 
 @dataclasses.dataclass
@@ -42,6 +43,11 @@ class DartConfig:
     teamlist_capacity: int = 256
     teamlist_impl: str = "paper"               # 'paper' | 'freelist' (§VI)
     lock_tail_placement: str = "unit0"         # 'unit0' | 'round_robin' (§VI)
+    # background progress plane defaults (ctx.start_progress();
+    # docs/API.md "Threading model & progress")
+    progress_watermark_bytes: int = 1 << 16
+    progress_watermark_ops: int = 32
+    progress_idle_s: float = 0.005
 
 
 class DartContext:
@@ -67,6 +73,9 @@ class DartContext:
         # dart_get_nb enqueue here; dart_flush / handle.wait() dispatch
         # coalesced batches against self.state.
         self.engine = _os.CommEngine(holder=self)
+        # background progress plane (None until start_progress);
+        # owns the daemon that drains queued lanes at the watermarks.
+        self.progress: Optional["_prog.ProgressPlane"] = None
         self._initialized = False
 
     # -- typed front-end (docs/API.md) ---------------------------------
@@ -86,6 +95,33 @@ class DartContext:
         if gptr is not None:
             poolid, _, _ = _os.deref(self.heap, self.teams_by_slot, gptr)
         return self.engine.epoch_scope(poolid)
+
+    # -- background progress plane (docs/API.md "Threading model") -----
+    def start_progress(self, *, watermark_bytes: Optional[int] = None,
+                       watermark_ops: Optional[int] = None,
+                       idle_s: Optional[float] = None
+                       ) -> "_prog.ProgressPlane":
+        """Start (or return the already-running) background progress
+        plane: a daemon thread that flushes a queued ``(pool, row)``
+        lane when it crosses the byte/op watermark or sits idle past
+        ``idle_s``.  Knobs default from :class:`DartConfig`."""
+        if self.progress is not None and self.progress.running:
+            return self.progress
+        cfg = self.config
+        self.progress = _prog.ProgressPlane(
+            self.engine,
+            watermark_bytes=(cfg.progress_watermark_bytes
+                             if watermark_bytes is None else watermark_bytes),
+            watermark_ops=(cfg.progress_watermark_ops
+                           if watermark_ops is None else watermark_ops),
+            idle_s=cfg.progress_idle_s if idle_s is None else idle_s)
+        return self.progress.start()
+
+    def stop_progress(self, drain: bool = True) -> None:
+        """Stop the progress plane; with ``drain`` (default) everything
+        still queued is flushed — shutdown never drops ops."""
+        if self.progress is not None:
+            self.progress.stop(drain=drain)
 
     @property
     def windows(self):
@@ -150,6 +186,9 @@ def np_prod(shape) -> int:
 
 def dart_exit(ctx: DartContext) -> None:
     """Tear down (paper: ``dart_exit``)."""
+    # stop the progress plane first (drain=True flushes, never drops),
+    # so no background flush races the state teardown below
+    ctx.stop_progress(drain=True)
     ctx.engine.clear()
     ctx.state.clear()
     ctx.teams.clear()
@@ -356,45 +395,61 @@ def dart_flush(ctx: DartContext, gptr: Optional[GlobalPtr] = None,
     ctx.engine.flush(poolid, row if target is not None else None)
 
 
+# The context-bound collective wrappers below hold the engine lock for
+# the whole read-compute-swap of ctx.state: the collectives donate the
+# pool arena, so an unlocked sequence racing a background flush could
+# swap in a state snapshot that misses the flush's writes (or hand the
+# collective a mid-donation arena).  The lock is an RLock, so the
+# nested engine.flush inside _pre_collective re-enters cleanly.
+
 def dart_bcast(ctx: DartContext, root_gptr: GlobalPtr, nbytes: int):
-    ctx.state, h = _coll.dart_bcast(ctx.state, ctx.heap, ctx.teams_by_slot,
-                                    root_gptr, nbytes, engine=ctx.engine)
+    with ctx.engine.lock:
+        ctx.state, h = _coll.dart_bcast(ctx.state, ctx.heap,
+                                        ctx.teams_by_slot, root_gptr,
+                                        nbytes, engine=ctx.engine)
     return h
 
 
 def dart_gather(ctx: DartContext, gptr: GlobalPtr, per_unit_nbytes: int):
-    out, h = _coll.dart_gather(ctx.state, ctx.heap, ctx.teams_by_slot,
-                               gptr, per_unit_nbytes, engine=ctx.engine)
+    with ctx.engine.lock:
+        out, h = _coll.dart_gather(ctx.state, ctx.heap, ctx.teams_by_slot,
+                                   gptr, per_unit_nbytes, engine=ctx.engine)
     return out, h
 
 
 def dart_gather_typed(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
     """Typed gather: every row's value at ``gptr.addr`` → (n_rows, *shape)."""
-    out, h = _coll.dart_gather_typed(ctx.state, ctx.heap, ctx.teams_by_slot,
-                                     gptr, shape, dtype, engine=ctx.engine)
+    with ctx.engine.lock:
+        out, h = _coll.dart_gather_typed(ctx.state, ctx.heap,
+                                         ctx.teams_by_slot, gptr, shape,
+                                         dtype, engine=ctx.engine)
     return out, h
 
 
 def dart_scatter_typed(ctx: DartContext, gptr: GlobalPtr, values):
     """Typed scatter: row i of ``values`` ((n_rows, *shape)) → unit i."""
-    ctx.state, h = _coll.dart_scatter_typed(ctx.state, ctx.heap,
-                                            ctx.teams_by_slot, gptr, values,
-                                            engine=ctx.engine)
+    with ctx.engine.lock:
+        ctx.state, h = _coll.dart_scatter_typed(ctx.state, ctx.heap,
+                                                ctx.teams_by_slot, gptr,
+                                                values, engine=ctx.engine)
     return h
 
 
 def dart_scatter(ctx: DartContext, gptr: GlobalPtr, values):
-    ctx.state, h = _coll.dart_scatter(ctx.state, ctx.heap,
-                                      ctx.teams_by_slot, gptr, values,
-                                      engine=ctx.engine)
+    with ctx.engine.lock:
+        ctx.state, h = _coll.dart_scatter(ctx.state, ctx.heap,
+                                          ctx.teams_by_slot, gptr, values,
+                                          engine=ctx.engine)
     return h
 
 
 def dart_allreduce(ctx: DartContext, gptr: GlobalPtr, shape, dtype,
                    op: str = "sum"):
-    ctx.state, red = _coll.dart_allreduce(ctx.state, ctx.heap,
-                                          ctx.teams_by_slot, gptr, shape,
-                                          dtype, op, engine=ctx.engine)
+    with ctx.engine.lock:
+        ctx.state, red = _coll.dart_allreduce(ctx.state, ctx.heap,
+                                              ctx.teams_by_slot, gptr,
+                                              shape, dtype, op,
+                                              engine=ctx.engine)
     return red
 
 
@@ -403,13 +458,15 @@ def dart_reduce(ctx: DartContext, gptr: GlobalPtr, shape, dtype,
     """Root-taking reduce: the reduced value replaces only ``root``'s
     copy (other rows keep their own); returns the reduced value.
     Shares the allreduce's op-identity-padded bucketed plan family."""
-    ctx.state, red = _coll.dart_reduce(ctx.state, ctx.heap,
-                                       ctx.teams_by_slot, gptr, shape,
-                                       dtype, op, root,
-                                       engine=ctx.engine)
+    with ctx.engine.lock:
+        ctx.state, red = _coll.dart_reduce(ctx.state, ctx.heap,
+                                           ctx.teams_by_slot, gptr, shape,
+                                           dtype, op, root,
+                                           engine=ctx.engine)
     return red
 
 
 def dart_barrier(ctx: DartContext) -> None:
-    ctx.engine.flush()
-    _coll.dart_barrier(ctx.state)
+    with ctx.engine.lock:
+        ctx.engine.flush()
+        _coll.dart_barrier(ctx.state)

@@ -21,6 +21,7 @@ paper's "a lot more efficient for small messages" expectation.
 
 from __future__ import annotations
 
+import contextlib
 import enum
 from typing import Tuple
 
@@ -85,17 +86,23 @@ def dart_shm_view(ctx, gptr: GlobalPtr, shape: Tuple[int, ...],
     # every read path flushes first (ROADMAP completion semantics):
     # queued puts to this target must land before the zero-copy view is
     # taken, or direct callers see stale bytes.  Per-target lane only —
-    # other targets' queued epochs keep accumulating.
+    # other targets' queued epochs keep accumulating.  Flush + raw
+    # ctx.state read + the dlpack capture stay under the engine lock as
+    # ONE unit: a concurrent flush (e.g. the background ProgressPlane)
+    # donates the arena, so an unlocked read could dlpack a buffer
+    # deleted between the flush and the capture.
     engine = getattr(ctx, "engine", None)
-    if engine is not None:
-        engine.flush(poolid, row)
-    arena = ctx.state[poolid]
-    try:
-        host = np.from_dlpack(arena)          # zero-copy on host backends
-    except (TypeError, RuntimeError) as e:
-        raise RuntimeError(
-            "arena is not host-visible; use dart_get_blocking "
-            f"(zero-copy unavailable: {e})") from None
+    guard = engine.lock if engine is not None else contextlib.nullcontext()
+    with guard:
+        if engine is not None:
+            engine.flush(poolid, row)
+        arena = ctx.state[poolid]
+        try:
+            host = np.from_dlpack(arena)      # zero-copy on host backends
+        except (TypeError, RuntimeError) as e:
+            raise RuntimeError(
+                "arena is not host-visible; use dart_get_blocking "
+                f"(zero-copy unavailable: {e})") from None
     n = nbytes_of(shape, dtype)
     flat = host[row, off:off + n]
     view = flat.view(np.dtype(dtype)).reshape(shape)
@@ -115,21 +122,26 @@ def shm_supported(ctx, poolid=None) -> bool:
     """
     # liveness first, cache second: the cache records backend
     # host-visibility, which says nothing about whether the addressed
-    # pool (or any pool, after dart_exit) still exists
-    if not ctx.state:
-        return False            # post-exit: nothing is addressable
-    if poolid is not None and poolid not in ctx.state:
-        return False            # addressed pool is gone
-    cached = getattr(ctx, "_shm_supported", None)
-    if cached is not None:
-        return cached
-    arena = (ctx.state[poolid] if poolid is not None
-             else next(iter(ctx.state.values())))
-    try:
-        np.from_dlpack(arena)
-        ok = True
-    except Exception:   # noqa: BLE001
-        ok = False
+    # pool (or any pool, after dart_exit) still exists.  The probe
+    # dlpacks a live arena, so it holds the engine lock like every
+    # other raw-state reader (donation safety).
+    engine = getattr(ctx, "engine", None)
+    guard = engine.lock if engine is not None else contextlib.nullcontext()
+    with guard:
+        if not ctx.state:
+            return False        # post-exit: nothing is addressable
+        if poolid is not None and poolid not in ctx.state:
+            return False        # addressed pool is gone
+        cached = getattr(ctx, "_shm_supported", None)
+        if cached is not None:
+            return cached
+        arena = (ctx.state[poolid] if poolid is not None
+                 else next(iter(ctx.state.values())))
+        try:
+            np.from_dlpack(arena)
+            ok = True
+        except Exception:   # noqa: BLE001
+            ok = False
     try:
         ctx._shm_supported = ok
     except AttributeError:      # holder without attribute support

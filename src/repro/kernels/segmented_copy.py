@@ -45,7 +45,7 @@ This module removes the shape dependence:
 * **Plan cache** — compiled executables are cached process-wide by
   ``(kind, impl, arena shape, buckets, ...)``; the engine counts
   misses (``compile_count``) and hits (``plan_cache_hits``) so tests
-  and ``BENCH_engine/v3`` can *assert* the steady state compiles
+  and ``BENCH_engine/v4`` can *assert* the steady state compiles
   nothing.
 
 ``impl='pallas'`` selects the hand-tiled Pallas kernel (grid over
@@ -62,6 +62,7 @@ scatter kernel serves ordered runs too.
 from __future__ import annotations
 
 import functools
+import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -518,6 +519,12 @@ def _pallas_gather(arena: jax.Array, desc: jax.Array, *, seg: int
 
 _PLAN_CACHE: Dict[Tuple, Callable] = {}
 _BUILD_COUNT = [0]      # process-total plan builds (≈ XLA compiles)
+# flushes may now run concurrently (submitter threads + the background
+# ProgressPlane), so the cache is guarded: one builder per key, and the
+# hit/build counters stay exact.  build() only wraps a jax.jit (cheap;
+# the XLA compile happens lazily on first call), so holding the lock
+# across it is fine.
+_PLAN_LOCK = threading.Lock()
 
 
 def cached_plan(key: Tuple, build: Callable[[], Callable]
@@ -526,23 +533,26 @@ def cached_plan(key: Tuple, build: Callable[[], Callable]
     ``(fn, hit)``.  A miss runs ``build()`` — which creates a fresh
     ``jax.jit`` wrapper, so exactly one XLA trace+compile follows on
     first call — and records it; hits are the steady state."""
-    fn = _PLAN_CACHE.get(key)
-    if fn is not None:
-        return fn, True
-    fn = build()
-    _PLAN_CACHE[key] = fn
-    _BUILD_COUNT[0] += 1
-    return fn, False
+    with _PLAN_LOCK:
+        fn = _PLAN_CACHE.get(key)
+        if fn is not None:
+            return fn, True
+        fn = build()
+        _PLAN_CACHE[key] = fn
+        _BUILD_COUNT[0] += 1
+        return fn, False
 
 
 def clear_plan_cache() -> None:
     """Drop every cached executable (benchmarks use this to measure a
     true cold flush: rebuilt plans re-trace and re-compile)."""
-    _PLAN_CACHE.clear()
+    with _PLAN_LOCK:
+        _PLAN_CACHE.clear()
 
 
 def plan_cache_stats() -> Dict[str, int]:
-    return {"size": len(_PLAN_CACHE), "builds": _BUILD_COUNT[0]}
+    with _PLAN_LOCK:
+        return {"size": len(_PLAN_CACHE), "builds": _BUILD_COUNT[0]}
 
 
 def scatter_plan(arena_shape: Tuple[int, int], kb: int, seg: int,

@@ -68,6 +68,11 @@ class ServeEngine:
                               non_collective_pool_bytes=1 << 16))
         self.cache_gptr = dart_team_memalloc_aligned(
             self.dart, DART_TEAM_ALL, 1 << 18)
+        # background progress plane: cache-segment puts queued by other
+        # components (prefix-cache writers, migration jobs) drain while
+        # the wave loop sits in jitted prefill/decode — the serving
+        # loop never has to flush for traffic it didn't enqueue.
+        self.dart.start_progress()
 
     # -- client API ------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
@@ -87,6 +92,7 @@ class ServeEngine:
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=5)
+        self.dart.stop_progress(drain=True)
 
     def drain(self) -> int:
         """Process queued requests on the caller thread until empty.

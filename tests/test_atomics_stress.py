@@ -81,9 +81,10 @@ def test_threaded_cas_increment_loop_is_exact(ctx):
 
     def worker(i):
         for _ in range(N_INCR):
-            # atomic load = fetch_and_add(0): a bare _read_i32 outside
-            # the per-context mutex may observe the arena mid-donation
-            # (the documented single-writer rule for raw state reads)
+            # atomic load = fetch_and_add(0) for the RMW ordering; the
+            # old "may observe the arena mid-donation" caveat on bare
+            # _read_i32 is gone — raw state reads now hold the engine
+            # lock (see test_donation_race_closed below)
             old = dart_fetch_and_add(ctx, g, 0)
             while True:
                 seen = dart_compare_and_swap(ctx, g, old, old + 1)
@@ -93,6 +94,45 @@ def test_threaded_cas_increment_loop_is_exact(ctx):
 
     _run_threads(worker)
     assert _read_i32(ctx, g) == N_THREADS * N_INCR
+
+
+def test_donation_race_closed(ctx):
+    """The donation race is CLOSED, not documented: threads hammering
+    fetch_and_add (whose _read_i32/_write_i32 read and replace raw
+    ``ctx.state``) race threads enqueueing puts and flushing (whose
+    jitted dispatch *donates* the arena).  Before the engine lock, the
+    reader could observe a deleted buffer mid-donation; now every raw
+    state access serializes with every flush, so the run is exact and
+    byte-identical to the serial oracle."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import dart_flush, dart_get_blocking, dart_put
+
+    ctr = dart_memalloc(ctx, 4, unit=0)
+    data = dart_memalloc(ctx, 4 * N_THREADS * N_INCR, unit=3)
+
+    def worker(i):
+        if i % 2 == 0:                    # atomics lane: raw state RMWs
+            for _ in range(2 * N_INCR):
+                dart_fetch_and_add(ctx, ctr, 1)
+        else:                             # engine lane: queued puts + flush
+            base = i * N_INCR
+            for k in range(N_INCR):
+                dart_put(ctx, data + 4 * (base + k),
+                         jnp.asarray([base + k], jnp.int32))
+                dart_flush(ctx)
+
+    _run_threads(worker)
+    n_atomics = (N_THREADS + 1) // 2
+    assert _read_i32(ctx, ctr) == n_atomics * 2 * N_INCR
+    got = np.asarray(dart_get_blocking(ctx, data, (N_THREADS * N_INCR,),
+                                       jnp.int32))
+    want = np.zeros(N_THREADS * N_INCR, np.int32)   # the serial oracle
+    for i in range(1, N_THREADS, 2):
+        base = i * N_INCR
+        want[base:base + N_INCR] = np.arange(base, base + N_INCR)
+    np.testing.assert_array_equal(got, want)
 
 
 def test_threaded_mixed_add_deltas(ctx):
@@ -202,6 +242,10 @@ def test_mcs_lock_over_heap_atomics_threaded(ctx):
     _run_threads(worker, n=len(list(units)))
     assert state["ctr"] == 4 * 5
     assert lock.is_free_hint(provider)
+    # destroy returns the tail/next cells' heap bytes (free_cell over
+    # the heap provider = dart_memfree of each gptr-addressed cell)
+    locks.destroy_lock(lock)
+    assert provider._cells == {}
 
 
 def test_lock_released_on_exception(ctx):

@@ -116,3 +116,55 @@ def test_non_member_acquire_raises():
     lock = svc.create_lock(team)
     with pytest.raises(KeyError):
         svc.acquire(lock, 3)
+
+
+def test_release_timeout_on_unregistered_successor():
+    """A successor that swapped the tail but never registers (died
+    between fetch_and_store and the next-cell store) must not spin the
+    releaser forever: with ``timeout`` the release raises instead."""
+    atomics, svc, team = make_service(4)
+    lock = svc.create_lock(team)
+    svc.acquire(lock, 0)
+    # fake a vanished successor: tail no longer == 0, next cell stays FREE
+    atomics.fetch_and_store(lock.tail, 3)
+    t0 = time.monotonic()
+    with pytest.raises(TimeoutError, match="never registered"):
+        svc.release(lock, 0, timeout=0.05)
+    assert time.monotonic() - t0 < 2.0       # bounded, not a busy hang
+
+
+def test_release_backoff_hands_off():
+    """The backoff path (successor registers late) still hands off
+    correctly — the exponential sleep must poll until the registration
+    lands, not give up or miss the notify."""
+    atomics, svc, team = make_service(4)
+    lock = svc.create_lock(team)
+    svc.acquire(lock, 0)
+    got = []
+
+    def late_successor():
+        svc.acquire(lock, 1)                 # queues behind 0
+        got.append(1)
+        svc.release(lock, 1)
+
+    t = threading.Thread(target=late_successor)
+    t.start()
+    while atomics.load(lock.tail) != 1:      # wait for the tail swap
+        time.sleep(0.0005)
+    svc.release(lock, 0, timeout=10)         # backoff until registered
+    t.join(timeout=10)
+    assert got == [1]
+    assert lock.is_free_hint(atomics)
+
+
+def test_destroy_lock_frees_cells():
+    """destroy_lock returns the tail + per-member next cells to the
+    provider (they used to leak: only the registry entry was dropped)."""
+    atomics, svc, team = make_service(4)
+    lock = svc.create_lock(team)
+    names = [lock.tail.name] + [c.name for c in lock.next_cells.values()]
+    assert all(n in atomics._cells for n in names)
+    svc.destroy_lock(lock)
+    assert all(n not in atomics._cells for n in names)
+    # the name space is reusable — a leaked cell would collide here
+    atomics.make_cell(names[0], 0, FREE)
