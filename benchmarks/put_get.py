@@ -618,7 +618,7 @@ def engine_profile(*, repeats: int = 20, quick: bool = False) -> dict:
     dart_waitall(hs)
 
     profile = {
-        "schema": "BENCH_engine/v4",
+        "schema": "BENCH_engine/v5",
         "n_ops": n_ops,
         "nbytes": nbytes,
         "quick": quick,

@@ -11,7 +11,12 @@ block (coalesced accumulate = ONE dispatch, zero recompiles over a
 varying (shape, dtype, op) allreduce+accumulate loop), and — v4 —
 the overlap block (background-progress flush latency hidden under the
 compute window: progress-on wall time strictly below progress-off,
-still zero steady-state recompiles).
+still zero steady-state recompiles), and — v5 — the serving block
+(continuous batching strictly above the synchronous wave in tokens/s
+under the same open-loop Poisson trace, p50/p99 latency reported,
+prefix-cache hits served through one-sided get_nb + per-target flush
+with the dispatch counts to prove it, zero steady-state recompiles in
+the timed pass).
 """
 
 from __future__ import annotations
@@ -23,7 +28,7 @@ import sys
 PATH = pathlib.Path(__file__).resolve().parents[1] / (
     "benchmarks/out/BENCH_engine.json")
 
-SCHEMA = "BENCH_engine/v4"
+SCHEMA = "BENCH_engine/v5"
 SERIES_KEYS = {"dispatches", "ops", "us_per_op", "us_per_call"}
 REQUIRED_SERIES = {"blocking", "coalesced", "per_target_flush",
                    "mixed_size_coalesced"}
@@ -44,6 +49,13 @@ OVERLAP_KEYS = {"n_ops", "nbytes", "compute_window_us", "flush_only_us",
                 "background_flushes", "watermark_ops",
                 "recompiles_steady_state"}
 PLAN_CACHE_KEYS = {"compile_count", "plan_cache_hits", "size", "builds"}
+SERVING_KEYS = {"n_requests", "poisson_rate_rps", "seed", "max_batch",
+                "wave", "continuous", "speedup_tokens_per_s",
+                "prefix_lookups", "prefix_hits", "prefix_hit_rate",
+                "hit_fetch_get_nb_ops", "hit_fetch_flushes",
+                "hit_fetch_dispatches", "prefix_evictions"}
+SERVING_ENGINE_KEYS = {"tokens_per_s", "p50_ms", "p99_ms", "makespan_s",
+                       "tokens", "n_requests"}
 
 
 def fail(msg: str) -> None:
@@ -111,6 +123,33 @@ def main() -> None:
     if not PLAN_CACHE_KEYS <= pc.keys():
         fail(f"plan_cache lacks {sorted(PLAN_CACHE_KEYS - pc.keys())}")
 
+    sv = profile.get("serving", {})
+    if not SERVING_KEYS <= sv.keys():
+        fail(f"serving lacks {sorted(SERVING_KEYS - sv.keys())} "
+             "(run `python -m benchmarks.serve_bench --quick` after "
+             "`python -m benchmarks.run --quick`)")
+    for side in ("wave", "continuous"):
+        if not SERVING_ENGINE_KEYS <= sv[side].keys():
+            fail(f"serving.{side} lacks "
+                 f"{sorted(SERVING_ENGINE_KEYS - sv[side].keys())}")
+    if sv["speedup_tokens_per_s"] <= 1.0:
+        fail(f"continuous batching not above the synchronous wave "
+             f"({sv['speedup_tokens_per_s']}x tokens/s; acceptance: "
+             "strictly > 1.0 under the same open-loop Poisson trace)")
+    if sv["continuous"]["recompiles_steady_state"] != 0:
+        fail("serving timed pass recompiled — the continuous engine's "
+             "fixed-shape decode/prefill-bucket/plan-cache story "
+             "regressed")
+    if sv["prefix_hits"] < 1:
+        fail("serving timed pass saw no prefix-cache hits")
+    if sv["hit_fetch_get_nb_ops"] < 1:
+        fail("prefix hits fetched no blocks via one-sided get_nb")
+    if sv["hit_fetch_flushes"] < 1:
+        fail("prefix-hit fetches issued no per-target flushes")
+    if sv["hit_fetch_dispatches"] < 1:
+        fail("prefix-hit traffic never reached the coalescing engine "
+             "(zero dispatches attributed to hit fetches)")
+
     print(f"BENCH_engine schema OK ({SCHEMA}): "
           f"cold {fc['cold_us_per_op']}us/op -> warm "
           f"{fc['warm_us_per_op']}us/op "
@@ -120,7 +159,11 @@ def main() -> None:
           f"cold {rp['allreduce_cold_us']}us -> warm "
           f"{rp['allreduce_warm_us']}us, 0 recompiles; overlap "
           f"{ov['progress_off_us']}us -> {ov['progress_on_us']}us "
-          f"({ov['overlap_speedup']}x, 0 recompiles)")
+          f"({ov['overlap_speedup']}x, 0 recompiles); serving "
+          f"{sv['wave']['tokens_per_s']} -> "
+          f"{sv['continuous']['tokens_per_s']} tok/s "
+          f"({sv['speedup_tokens_per_s']}x, hit rate "
+          f"{sv['prefix_hit_rate']}, 0 recompiles)")
 
 
 if __name__ == "__main__":

@@ -6,11 +6,14 @@
 # 1. tier-1 pytest suite (ROADMAP "Tier-1 verify")
 # 2. benchmark harness smoke run (--quick): every suite must still run
 #    and emit its artifacts
-# 3. BENCH_engine schema guard: the machine-readable engine trajectory
-#    (benchmarks/out/BENCH_engine.json) must keep the BENCH_engine/v4
-#    shape and its dispatch/flush-cost/overlap invariants, so perf
-#    diffs stay comparable across PRs
-# 4. threaded stress suite, re-run standalone: the progress-plane
+# 3. serving bench smoke run (--quick): the continuous-batching
+#    engine vs the synchronous wave under one open-loop Poisson trace,
+#    merged as the `serving` block into BENCH_engine.json
+# 4. BENCH_engine schema guard: the machine-readable engine trajectory
+#    (benchmarks/out/BENCH_engine.json) must keep the BENCH_engine/v5
+#    shape and its dispatch/flush-cost/overlap/serving invariants, so
+#    perf diffs stay comparable across PRs
+# 5. threaded stress suite, re-run standalone: the progress-plane
 #    differential and the atomics/lock contention tests exercise real
 #    thread interleavings, so an extra pass catches schedules the
 #    tier-1 run happened to miss
@@ -27,6 +30,9 @@ python -m pytest -x -q tests/test_progress_plane.py tests/test_atomics_stress.py
 
 echo "== benchmarks (quick) =="
 python -m benchmarks.run --quick
+
+echo "== serving bench (quick) =="
+python -m benchmarks.serve_bench --quick
 
 echo "== BENCH_engine schema =="
 python scripts/check_bench_schema.py

@@ -208,6 +208,25 @@ class GlobalRef:
         from . import runtime as rt
         rt.dart_flush(self.array.ctx, self.array.gptr, target=self.unit)
 
+    # -- one-sided atomics (paper §IV.B.6, typed) ------------------------
+    def fetch_add(self, delta: int) -> int:
+        """Atomic fetch-and-add on a single-element int32 ref (the
+        typed ``dart_fetch_and_add`` / ``MPI_Fetch_and_op`` analogue);
+        returns the pre-update value.  Atomic with respect to every
+        other heap atomic on the context — the serving plane's
+        refcount primitive.  Flushes queued ops on the heap first, so
+        the read-modify-write never sees a stale cell."""
+        if self.dtype != jnp.int32:
+            raise TypeError(
+                f"fetch_add needs an int32 ref, got {self.dtype}")
+        if int(np.prod(self.shape, dtype=np.int64)) != 1:
+            raise ValueError(
+                f"fetch_add needs a single-element ref, got shape "
+                f"{self.shape}")
+        from . import atomic_ops as _ao
+        return _ao.dart_fetch_and_add(self.array.ctx, self.gptr,
+                                      int(delta))
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return (f"GlobalRef(unit={self.unit}, offset={self.offset}, "
                 f"shape={self.shape}, dtype={self.dtype})")

@@ -45,7 +45,7 @@ This module removes the shape dependence:
 * **Plan cache** — compiled executables are cached process-wide by
   ``(kind, impl, arena shape, buckets, ...)``; the engine counts
   misses (``compile_count``) and hits (``plan_cache_hits``) so tests
-  and ``BENCH_engine/v4`` can *assert* the steady state compiles
+  and ``BENCH_engine/v5`` can *assert* the steady state compiles
   nothing.
 
 ``impl='pallas'`` selects the hand-tiled Pallas kernel (grid over

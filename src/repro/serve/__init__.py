@@ -1,2 +1,7 @@
-from .step import make_decode_step, make_prefill_step
-from .engine import ServeEngine, Request
+from .engine import ContinuousEngine, Request, ServeEngine
+from .kv_blocks import BlockId, KVBlockPool, PoolExhausted, pool_bytes_needed
+from .prefix_cache import (PrefixCacheService, PrefixHit, PrefixStats,
+                           chain_keys, pack_kv_blocks, unpack_kv_blocks)
+from .scheduler import ContinuousScheduler, SeqState
+from .step import (init_batched_cache, make_batched_decode_step,
+                   make_decode_step, make_prefill_step, make_slot_insert)

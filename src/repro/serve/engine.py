@@ -1,20 +1,29 @@
-"""Batched serving engine over the DART PGAS runtime.
+"""Serving engines over the DART PGAS runtime.
 
-A production-shaped single-controller engine:
+Two schedulers share one request surface (:class:`Request`):
 
-* requests arrive on a thread-safe queue (``submit``),
-* the scheduler packs up to ``max_batch`` requests per wave,
-* prefill builds the KV/state cache for the wave, decode steps run
-  until every sequence hits its ``max_new_tokens`` or EOS,
-* the KV cache is registered as a DART collective segment — a
-  team-wide aligned allocation whose per-unit rows are the cache shards
-  (the PGAS picture of disaggregated KV; DESIGN.md §4) — so other
-  components (e.g. a prefix-cache service or a migration job) can
-  address it with global pointers without engine participation.
+* :class:`ServeEngine` — the synchronous *wave* baseline: the
+  scheduler packs up to ``max_batch`` requests per wave, prefills them
+  together, decodes until every wave member is finished (early-exit on
+  all-EOS), and only then looks at the queue again.  Kept as the
+  benchmark baseline the continuous engine is measured against.
 
-The engine is deliberately synchronous per wave (no continuous
-batching) — the PGAS integration, not the scheduler, is the paper's
-story; continuous batching would slot into ``_run_wave``.
+* :class:`ContinuousEngine` — continuous batching over fixed decode
+  slots: new requests are admitted into free slots *while resident
+  sequences keep decoding* (per-slot cache positions via the vmapped
+  decode step — serve/step.py), and retire on EOS or their own
+  ``max_new_tokens`` without stalling the batch.  Its prefix/KV cache
+  is a PGAS-native service: prefill KV state is published block-wise
+  into a :class:`~repro.serve.kv_blocks.KVBlockPool` carved from the
+  DART team window, and repeat prompts restore it with one-sided
+  ``get_nb`` + per-target flush instead of recomputing
+  (serve/prefix_cache.py; docs/API.md "Serving plane").
+
+Shape stability: the continuous decode step is traced ONCE (fixed
+``(max_batch, 1, 1)`` tokens + fixed batched cache), prefill lengths
+bucket to pow2, and the engine counts bucket misses
+(``prefill_shape_misses``) so the serving bench can pin zero
+steady-state recompiles.
 """
 
 from __future__ import annotations
@@ -22,7 +31,8 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Callable, Dict, List, Optional
+import time
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +42,12 @@ from ..core import (DART_TEAM_ALL, DartConfig, DartContext, dart_init,
                     dart_team_memalloc_aligned)
 from ..models import api
 from ..models.config import ModelConfig
-from .step import make_decode_step, make_prefill_step
+from .kv_blocks import KVBlockPool, pool_bytes_needed
+from .prefix_cache import (PrefixCacheService, pack_kv_blocks,
+                           unpack_kv_blocks)
+from .scheduler import ContinuousScheduler, SeqState
+from .step import (init_batched_cache, make_batched_decode_step,
+                   make_decode_step, make_prefill_step, make_slot_insert)
 
 
 @dataclasses.dataclass
@@ -45,9 +60,18 @@ class Request:
     output: Optional[np.ndarray] = None
     done: threading.Event = dataclasses.field(
         default_factory=threading.Event)
+    # wall-clock marks for the serving bench (open-loop latency)
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
 
 
 class ServeEngine:
+    """Synchronous-wave baseline scheduler (see module docstring)."""
+
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_seq: int = 256, pad_id: int = 0):
         self.cfg = cfg
@@ -60,7 +84,15 @@ class ServeEngine:
         self._decode = jax.jit(make_decode_step(cfg))
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        # submit() is documented thread-safe: serving workers share the
+        # engine, so the rid counter increments under a lock (an
+        # unlocked `x += 1` loses ids under concurrent submitters).
+        self._rid_lock = threading.Lock()
         self._next_rid = 0
+        #: decode steps the most recent wave actually ran (early-exit
+        #: makes this < the wave's max ``max_new_tokens`` when every
+        #: member finished on EOS first)
+        self.last_wave_steps = 0
         # PGAS bookkeeping: the cache segment for a full wave
         self.dart: DartContext = dart_init(
             n_units=max_batch,
@@ -77,10 +109,12 @@ class ServeEngine:
     # -- client API ------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
                eos_id: Optional[int] = None) -> Request:
-        req = Request(rid=self._next_rid, prompt=np.asarray(prompt,
-                                                            np.int32),
-                      max_new_tokens=max_new_tokens, eos_id=eos_id)
-        self._next_rid += 1
+        with self._rid_lock:
+            rid = self._next_rid
+            self._next_rid += 1
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      t_submit=time.perf_counter())
         self._q.put(req)
         return req
 
@@ -96,15 +130,16 @@ class ServeEngine:
 
     def drain(self) -> int:
         """Process queued requests on the caller thread until empty.
-        Returns the number of completed requests."""
+        Returns the number of completed requests.  (No ``_q.empty()``
+        pre-check: the take itself is the emptiness test, so a request
+        racing in between check and take can't be half-dropped.)"""
         done = 0
-        while not self._q.empty():
+        while True:
             wave = self._take_wave()
             if not wave:
-                break
+                return done
             self._run_wave(wave)
             done += len(wave)
-        return done
 
     # -- engine internals --------------------------------------------------
     def _loop(self):
@@ -150,12 +185,35 @@ class ServeEngine:
         logits, cache = self._prefill(self.params, batch)
         nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
 
+        # decode with early exit: stop as soon as every wave member is
+        # finished — EOS emitted inside its own max_new_tokens window,
+        # or its window exhausted — instead of always burning the
+        # wave's max
         max_new = max(r.max_new_tokens for r in wave)
         outs = [nxt]
-        for _ in range(max_new - 1):
+        eos_seen = [False] * b
+
+        def _note_eos(step_count: int) -> None:
+            host = np.asarray(outs[-1])[:, 0]
+            for i, r in enumerate(wave):
+                if (r.eos_id is not None and not eos_seen[i]
+                        and step_count <= r.max_new_tokens
+                        and int(host[i]) == int(r.eos_id)):
+                    eos_seen[i] = True
+
+        def _all_done(step_count: int) -> bool:
+            return all(eos_seen[i] or step_count >= r.max_new_tokens
+                       for i, r in enumerate(wave))
+
+        steps = 1
+        _note_eos(steps)
+        while steps < max_new and not _all_done(steps):
             nxt, _, cache = self._decode(self.params, nxt, cache)
             outs.append(nxt)
-        gen = np.asarray(jnp.concatenate(outs, axis=1))   # (b, max_new)
+            steps += 1
+            _note_eos(steps)
+        self.last_wave_steps = steps
+        gen = np.asarray(jnp.concatenate(outs, axis=1))   # (b, steps)
 
         for i, r in enumerate(wave):
             o = gen[i, :r.max_new_tokens]
@@ -164,4 +222,246 @@ class ServeEngine:
                 if hits.size:
                     o = o[:hits[0] + 1]
             r.output = o
+            r.t_done = time.perf_counter()
             r.done.set()
+
+
+class ContinuousEngine:
+    """Continuous-batching engine with the PGAS prefix/KV cache.
+
+    Per decode step: ingest arrivals, admit waiting requests into free
+    slots (prefill or one-sided prefix-cache restore), run ONE fixed-
+    shape vmapped decode step over all ``max_batch`` slots, retire
+    finished sequences, repeat.  See the module docstring.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_seq: int = 256, pad_id: int = 0,
+                 block_tokens: int = 8, n_units: int = 4,
+                 n_cache_blocks: int = 64, prefix_cache: bool = True):
+        if block_tokens & (block_tokens - 1):
+            raise ValueError(f"block_tokens must be a power of two, "
+                             f"got {block_tokens}")
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.pad_id = pad_id
+        self.block_tokens = block_tokens
+        self._q: "queue.Queue[Request]" = queue.Queue()
+        self._rid_lock = threading.Lock()
+        self._next_rid = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.scheduler = ContinuousScheduler(max_batch)
+
+        self._prefill = jax.jit(make_prefill_step(cfg, max_seq))
+        self._decode = jax.jit(make_batched_decode_step(cfg))
+        self._insert = jax.jit(make_slot_insert())
+        self._caches = init_batched_cache(cfg, max_batch, max_seq)
+        self._tokens = jnp.zeros((max_batch, 1, 1), jnp.int32)
+
+        # shape-stability accounting (the serving bench pins zero
+        # steady-state recompiles on these + the DART plan cache)
+        self._prefill_shapes: set = set()
+        self.prefill_shape_misses = 0
+        self.decode_steps = 0
+        self.prefills = 0
+
+        # the PGAS serving plane: KV blocks + prefix directory live in
+        # a DART team window sized for the pool
+        self._cacheable = bool(prefix_cache) and cfg.family in (
+            "dense", "moe")
+        block_elems = (2 * cfg.n_layers * block_tokens
+                       * cfg.n_kv_heads * cfg.head_dim)
+        pool_bytes = (pool_bytes_needed(n_cache_blocks, block_elems,
+                                        n_units, cfg.cdtype)
+                      if self._cacheable else 1 << 16)
+        self.dart: DartContext = dart_init(
+            n_units=n_units,
+            config=DartConfig(team_pool_bytes=pool_bytes,
+                              non_collective_pool_bytes=1 << 16))
+        if self._cacheable:
+            self.kv_pool = KVBlockPool(
+                self.dart, n_blocks=n_cache_blocks,
+                block_elems=block_elems, dtype=cfg.cdtype)
+            self.prefix = PrefixCacheService(
+                self.dart, self.kv_pool, block_tokens=block_tokens)
+        else:
+            self.kv_pool = None
+            self.prefix = None
+        # queued block publishes drain in the background while the
+        # engine sits in jitted prefill/decode
+        self.dart.start_progress()
+
+    # -- client API ------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        """Thread-safe enqueue.  Validates that the prompt's pow2
+        prefill bucket plus the decode budget fits ``max_seq``."""
+        prompt = np.asarray(prompt, np.int32)
+        bucket = self._bucket(len(prompt))
+        if bucket + max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt bucket {bucket} + max_new_tokens "
+                f"{max_new_tokens} exceeds max_seq {self.max_seq}")
+        with self._rid_lock:
+            rid = self._next_rid
+            self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt,
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      t_submit=time.perf_counter())
+        self._q.put(req)
+        return req
+
+    def run_until_idle(self) -> int:
+        """Serve on the caller thread until queue, waiting line, and
+        slots are all empty.  Returns requests completed."""
+        before = self.scheduler.retired
+        while True:
+            self._ingest()
+            self._admit_all()
+            if self.scheduler.n_resident == 0:
+                if self._q.empty() and not self.scheduler.waiting:
+                    return self.scheduler.retired - before
+                continue
+            self._decode_once()
+
+    def run_forever(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=10)
+        self.dart.stop_progress(drain=True)
+
+    # -- stats -----------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        s: Dict[str, object] = {
+            "decode_steps": self.decode_steps,
+            "prefills": self.prefills,
+            "prefill_shape_misses": self.prefill_shape_misses,
+            "admitted": self.scheduler.admitted,
+            "retired": self.scheduler.retired,
+            "engine_dispatches": self.dart.engine.dispatch_count,
+            "engine_plan_compiles": self.dart.engine.compile_count,
+        }
+        if self.prefix is not None:
+            s["prefix"] = self.prefix.stats.snapshot()
+        return s
+
+    # -- engine internals ------------------------------------------------
+    def _loop(self):
+        while not self._stop.is_set():
+            self._ingest(block=True)
+            self._admit_all()
+            if self.scheduler.n_resident:
+                self._decode_once()
+
+    def _ingest(self, block: bool = False) -> None:
+        try:
+            timeout = 0.05 if (block and not self.scheduler.has_work()) \
+                else None
+            if timeout is not None:
+                self.scheduler.enqueue(self._q.get(timeout=timeout))
+            else:
+                self.scheduler.enqueue(self._q.get_nowait())
+        except queue.Empty:
+            return
+        while True:
+            try:
+                self.scheduler.enqueue(self._q.get_nowait())
+            except queue.Empty:
+                return
+
+    def _admit_all(self) -> None:
+        while True:
+            seq = self.scheduler.admit_next()
+            if seq is None:
+                return
+            self._admit(seq)
+
+    def _bucket(self, plen: int) -> int:
+        return max(self.block_tokens, _next_pow2(plen))
+
+    def _padded_prompt(self, prompt: np.ndarray) -> np.ndarray:
+        bucket = self._bucket(len(prompt))
+        padded = np.full(bucket, self.pad_id, np.int32)
+        padded[bucket - len(prompt):] = prompt       # left-pad
+        return padded
+
+    def _prefill_batch(self, padded: np.ndarray) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        batch = {"tokens": jnp.asarray(padded[None])}
+        if cfg.family == "encdec":
+            batch["enc_frames"] = jnp.zeros(
+                (1, cfg.n_audio_frames, cfg.d_model), cfg.cdtype)
+        if cfg.family == "vlm":
+            pp = cfg.n_vision_patches
+            plen = padded.size
+            batch["vision_embeds"] = jnp.zeros((1, pp, cfg.d_model),
+                                               cfg.cdtype)
+            pos = jnp.broadcast_to(jnp.arange(pp + plen)[None],
+                                   (1, pp + plen))
+            batch["position_ids"] = jnp.broadcast_to(pos[None],
+                                                     (3, 1, pp + plen))
+        return batch
+
+    def _admit(self, seq: SeqState) -> None:
+        """Prefill-or-restore one admitted sequence into its slot."""
+        cfg = self.cfg
+        padded = self._padded_prompt(seq.req.prompt)
+        bucket = padded.size
+
+        hit = self.prefix.lookup(padded) if self.prefix else None
+        if hit is not None:
+            # one-sided restore: get_nb per block + per-target flush
+            blocks = hit.fetch()
+            k, v = unpack_kv_blocks(
+                blocks, n_layers=cfg.n_layers, kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, block_tokens=self.block_tokens,
+                max_seq=self.max_seq, dtype=cfg.cdtype)
+            slot_cache = {"pos": jnp.int32(bucket),
+                          "k": jnp.asarray(k), "v": jnp.asarray(v)}
+            nxt = hit.next_token
+            seq.prefix_hit = True
+            seq.on_retire = lambda s, h=hit: h.release()
+        else:
+            key = (1, bucket)
+            if key not in self._prefill_shapes:
+                self._prefill_shapes.add(key)
+                self.prefill_shape_misses += 1
+            logits, slot_cache = self._prefill(
+                self.params, self._prefill_batch(padded))
+            nxt = int(jnp.argmax(logits[0, -1]))
+            self.prefills += 1
+            if self.prefix is not None:
+                self.prefix.insert(
+                    padded,
+                    pack_kv_blocks(slot_cache, bucket, self.block_tokens),
+                    nxt)
+
+        self._caches = self._insert(self._caches, slot_cache,
+                                    jnp.int32(seq.slot))
+        self._tokens = self._tokens.at[seq.slot, 0, 0].set(int(nxt))
+        seq.pos = bucket
+        if self.scheduler.note_token(seq.slot, int(nxt)):
+            self._retire(seq.slot)
+
+    def _decode_once(self) -> None:
+        self._tokens, self._caches = self._decode(
+            self.params, self._tokens, self._caches)
+        self.decode_steps += 1
+        toks = np.asarray(self._tokens)[:, 0, 0]
+        for seq in self.scheduler.residents:
+            if self.scheduler.note_token(seq.slot, int(toks[seq.slot])):
+                self._retire(seq.slot)
+
+    def _retire(self, slot: int) -> None:
+        seq = self.scheduler.retire(slot)    # runs on_retire (unpin)
+        req = seq.req
+        req.output = np.asarray(seq.emitted, np.int32)
+        req.t_done = time.perf_counter()
+        req.done.set()

@@ -1,0 +1,146 @@
+"""Block-granular KV cache pool carved from the DART team window.
+
+The serving plane's cache currency is the *block*: the packed K/V state
+of ``block_tokens`` consecutive positions across every layer, one
+fixed-size element run in a :class:`~repro.core.array.GlobalArray` row.
+Blocks are distributed round-robin across the team's units, so the
+pool is a PGAS-native service: any component holding a
+:class:`BlockId` can mint the block's :class:`~repro.core.gptr.GlobalPtr`
+and read or write it one-sided — queued ``put_nb``/``get_nb`` through
+the CommEngine, coalescing with its neighbours at the next (per-target)
+flush — without the serving loop's participation.
+
+Two planes share the team window:
+
+* **data plane** — ``(rows, block_elems)`` of the cache dtype per unit,
+  allocated ``shm=False`` so every read is a counted one-sided engine
+  op (the serving bench asserts the dispatch trajectory);
+* **refcount plane** — ``(rows,)`` int32 per unit, one cell per block,
+  updated only with ``dart_fetch_and_add`` (via the typed
+  ``GlobalRef.fetch_add``) so pin/unpin is atomic across however many
+  threads serve lookups.
+
+Allocation/free-list bookkeeping is controller-local host metadata;
+the *state* (bytes + refcounts) lives in DART global memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import Deque
+
+import jax.numpy as jnp
+
+from ..core import DART_TEAM_ALL, GlobalPtr, GlobalRef
+from ..core.globmem import ALIGNMENT, align_up
+
+
+class PoolExhausted(RuntimeError):
+    """No free block and (if the caller tried) nothing evictable."""
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class BlockId:
+    """A block's home: ``unit``'s row, block ``index`` inside it."""
+
+    unit: int
+    index: int
+
+
+def pool_bytes_needed(n_blocks: int, block_elems: int, n_units: int,
+                      dtype=jnp.float32) -> int:
+    """Per-member team-pool bytes for a pool of ``n_blocks`` blocks:
+    the data-plane rows plus the refcount rows, each aligned."""
+    rows = (n_blocks + n_units - 1) // n_units
+    data = align_up(rows * block_elems * jnp.dtype(dtype).itemsize)
+    rc = align_up(rows * 4)
+    return data + rc + 2 * ALIGNMENT
+
+
+class KVBlockPool:
+    """Fixed-size pool of GlobalPtr-addressed KV cache blocks."""
+
+    def __init__(self, ctx, *, n_blocks: int, block_elems: int,
+                 dtype=jnp.float32, team: int = DART_TEAM_ALL):
+        self.ctx = ctx
+        self.team = team
+        self.dtype = jnp.dtype(dtype)
+        self.block_elems = int(block_elems)
+        n_units = ctx.teams[team].size()
+        self.rows = (n_blocks + n_units - 1) // n_units
+        self.n_blocks = self.rows * n_units
+        # data plane: shm=False keeps even blocking reads on the counted
+        # one-sided engine path (no zero-copy shortcut hiding traffic)
+        self.ga = ctx.alloc((self.rows, self.block_elems), self.dtype,
+                            team=team, shm=False)
+        # refcount plane: one int32 cell per block, atomics-only
+        self.rc = ctx.alloc((self.rows,), jnp.int32, team=team, shm=False)
+        units = self.ga.units
+        self._freelist: Deque[BlockId] = deque(
+            BlockId(unit=units[b % n_units], index=b // n_units)
+            for b in range(self.n_blocks))
+        self._lock = threading.Lock()
+
+    # -- allocation (controller-local metadata) --------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._freelist)
+
+    def alloc(self) -> BlockId:
+        with self._lock:
+            if not self._freelist:
+                raise PoolExhausted(
+                    f"all {self.n_blocks} KV blocks in use")
+            return self._freelist.popleft()
+
+    def free(self, bid: BlockId) -> None:
+        with self._lock:
+            self._freelist.append(bid)
+
+    # -- addressing ------------------------------------------------------
+    def block_ref(self, bid: BlockId) -> GlobalRef:
+        """Typed ref to the block's element run in its owner's row."""
+        return self.ga.at[bid.unit, bid.index]
+
+    def block_gptr(self, bid: BlockId) -> GlobalPtr:
+        """The substrate-layer 128-bit pointer any component can use to
+        address this block without the pool object."""
+        return self.block_ref(bid).gptr
+
+    # -- data plane (one-sided, engine-queued) ---------------------------
+    def write_nb(self, bid: BlockId, values):
+        """Queue a one-sided put of the whole block; returns the
+        Handle.  Left queued on purpose: neighbouring block writes
+        coalesce into one dispatch at the next flush (foreground or
+        the background progress plane)."""
+        return self.block_ref(bid).put_nb(values)
+
+    def read_nb(self, bid: BlockId):
+        """Queue a one-sided get of the whole block; ``handle.value()``
+        after a per-target flush yields the typed block."""
+        return self.block_ref(bid).get_nb()
+
+    def flush_unit(self, unit: int) -> None:
+        """Per-target flush of one owner's lane (the
+        ``MPI_Win_flush_local(rank, win)`` analogue) — other units'
+        queued epochs keep accumulating."""
+        self.ga.flush(unit)
+
+    # -- refcount plane (one-sided atomics) ------------------------------
+    def rc_ref(self, bid: BlockId) -> GlobalRef:
+        return self.rc.at[bid.unit, bid.index:bid.index + 1]
+
+    def rc_add(self, bid: BlockId, delta: int) -> int:
+        """Atomic ``dart_fetch_and_add`` on the block's refcount cell;
+        returns the pre-update count."""
+        return self.rc_ref(bid).fetch_add(delta)
+
+    def rc_load(self, bid: BlockId) -> int:
+        """Current refcount (an add of 0 — same atomic path)."""
+        return self.rc_add(bid, 0)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"KVBlockPool(blocks={self.n_blocks}, "
+                f"elems={self.block_elems}, free={self.n_free})")

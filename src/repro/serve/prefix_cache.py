@@ -1,0 +1,277 @@
+"""Global prefix/KV cache service over the DART block pool.
+
+The millions-of-users serving story (ROADMAP): popular prompts repeat,
+so their prefill KV state is computed once, published into the PGAS
+block pool, and every later request restores it with one-sided reads —
+no recompute, no engine participation from the block owners.
+
+Protocol (docs/API.md "Serving plane"):
+
+* **keys** — prompts are chunked into ``block_tokens`` runs of the
+  *bucket-padded* token ids; chunk i's key is the blake2b chain hash
+  ``h_i = H(h_{i-1} || chunk_i)``.  The chain makes a block's key name
+  its whole left context (same first chunk + same history ⇒ same K/V
+  bytes, because prefill is deterministic), so blocks are shared
+  between any prompts with a common padded prefix.
+* **lookup** — a *full* hit (every chunk key present, terminal key has
+  a recorded next token) pins each block with a
+  ``dart_fetch_and_add(+1)`` refcount, then ``fetch()`` reads the
+  blocks with queued one-sided ``ga.at[...].get_nb`` and ONE
+  per-target flush per owner unit — the coalescing engine serves the
+  whole prefix in one dispatch per lane.  Partial overlaps fall back
+  to recompute (chunked prefill is future work), so refcounts stay
+  exact: only full hits pin.
+* **insert** — after a miss's prefill, each chunk's packed K/V is
+  queued one-sided (``put_nb``) into a fresh block; the writes stay
+  queued so neighbouring blocks coalesce at the next flush (foreground
+  read, atomic, or the background progress plane).
+* **eviction** — LRU over *unreferenced* blocks (refcount 0), the scan
+  serialized through the runtime's :class:`~repro.core.lock.LockService`
+  MCS lock (the cross-component critical section of paper §IV.B.6);
+  host metadata is additionally guarded by a directory mutex.
+
+The directory itself (key → block id, LRU ticks) is controller
+metadata; the cache *state* — block bytes and refcounts — lives in
+DART global memory, addressed by :class:`~repro.core.gptr.GlobalPtr`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .kv_blocks import BlockId, KVBlockPool, PoolExhausted
+
+
+def chain_keys(tokens: np.ndarray, block_tokens: int) -> List[bytes]:
+    """Chain-hash keys for the padded prompt's ``block_tokens`` chunks.
+
+    ``tokens`` length must be a multiple of ``block_tokens`` (the
+    engine pads prompts to pow2 buckets that are)."""
+    tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    if tokens.ndim != 1 or tokens.size % block_tokens:
+        raise ValueError(
+            f"need a 1-D multiple-of-{block_tokens} token run, got "
+            f"shape {tokens.shape}")
+    keys, prev = [], b"dart-prefix-cache"
+    for c in range(tokens.size // block_tokens):
+        chunk = tokens[c * block_tokens:(c + 1) * block_tokens]
+        prev = hashlib.blake2b(prev + chunk.tobytes(),
+                               digest_size=16).digest()
+        keys.append(prev)
+    return keys
+
+
+def pack_kv_blocks(cache, n_tokens: int, block_tokens: int
+                   ) -> List[np.ndarray]:
+    """Pack a single-sequence prefill cache (leaves ``k``/``v`` of
+    shape ``(L, 1, max_seq, kv, hd)``) into per-chunk flat block
+    payloads: ``[K-chunk || V-chunk]`` raveled, one per chunk."""
+    k = np.asarray(cache["k"])[:, 0]          # (L, max_seq, kv, hd)
+    v = np.asarray(cache["v"])[:, 0]
+    out = []
+    for c in range(n_tokens // block_tokens):
+        sl = slice(c * block_tokens, (c + 1) * block_tokens)
+        out.append(np.stack([k[:, sl], v[:, sl]]).ravel())
+    return out
+
+
+def unpack_kv_blocks(blocks: List[np.ndarray], *, n_layers: int,
+                     kv_heads: int, head_dim: int, block_tokens: int,
+                     max_seq: int, dtype) -> Tuple[np.ndarray, np.ndarray]:
+    """Inverse of :func:`pack_kv_blocks`: rebuild full ``k``/``v``
+    leaves ``(L, 1, max_seq, kv, hd)`` with the blocks' positions
+    filled and the tail zeroed (decode overwrites it)."""
+    k = np.zeros((n_layers, 1, max_seq, kv_heads, head_dim), dtype)
+    v = np.zeros_like(k)
+    for c, flat in enumerate(blocks):
+        pair = np.asarray(flat).reshape(
+            2, n_layers, block_tokens, kv_heads, head_dim)
+        sl = slice(c * block_tokens, (c + 1) * block_tokens)
+        k[:, 0, sl] = pair[0]
+        v[:, 0, sl] = pair[1]
+    return k, v
+
+
+@dataclasses.dataclass
+class _DirEntry:
+    bid: BlockId
+    tick: int
+
+
+@dataclasses.dataclass
+class PrefixStats:
+    lookups: int = 0
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    insert_blocks: int = 0
+    shared_blocks: int = 0
+    insert_skipped: int = 0
+    fetch_get_nb_ops: int = 0
+    fetch_flushes: int = 0
+    fetch_dispatches: int = 0
+    publish_put_nb_ops: int = 0
+
+    def snapshot(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class PrefixHit:
+    """A pinned full-prefix hit: fetch the blocks, then release."""
+
+    def __init__(self, service: "PrefixCacheService",
+                 blocks: List[BlockId], next_token: int, n_tokens: int):
+        self.service = service
+        self.blocks = blocks
+        self.next_token = int(next_token)
+        self.n_tokens = int(n_tokens)
+        self._released = False
+
+    def fetch(self) -> List[np.ndarray]:
+        """One-sided read of every block: queued ``get_nb`` per block,
+        then ONE per-target flush per owner unit; values decode from
+        the coalesced gather."""
+        svc, pool = self.service, self.service.pool
+        engine = pool.ctx.engine
+        with svc._mutex:
+            d0 = engine.dispatch_count
+        handles = [pool.read_nb(bid) for bid in self.blocks]
+        units = sorted({bid.unit for bid in self.blocks})
+        for u in units:
+            pool.flush_unit(u)                 # per-target flush
+        vals = [np.asarray(h.value()) for h in handles]
+        with svc._mutex:
+            svc.stats.fetch_get_nb_ops += len(handles)
+            svc.stats.fetch_flushes += len(units)
+            svc.stats.fetch_dispatches += engine.dispatch_count - d0
+        return vals
+
+    def release(self) -> None:
+        """Unpin (refcount −1 per block); idempotent."""
+        if self._released:
+            return
+        self._released = True
+        for bid in self.blocks:
+            self.service.pool.rc_add(bid, -1)
+
+
+class PrefixCacheService:
+    """Prompt-prefix-hash directory over a :class:`KVBlockPool`."""
+
+    def __init__(self, ctx, pool: KVBlockPool, *, block_tokens: int):
+        self.ctx = ctx
+        self.pool = pool
+        self.block_tokens = int(block_tokens)
+        self.stats = PrefixStats()
+        self._dir: Dict[bytes, _DirEntry] = {}
+        self._next_token: Dict[bytes, int] = {}
+        self._tick = 0
+        self._mutex = threading.Lock()
+        team = ctx.teams[pool.team]
+        # the eviction critical section rides the runtime's MCS lock —
+        # the serialization point other controllers/components share
+        self._evict_lock = ctx.locks.create_lock(team)
+        self._home_unit = team.unit_at(0)
+
+    # -- lookup ----------------------------------------------------------
+    def lookup(self, padded_tokens: np.ndarray) -> Optional[PrefixHit]:
+        """Full-prompt lookup.  On a hit every block is pinned (atomic
+        refcount +1) *before* the caller fetches, so eviction can never
+        reuse a block out from under a resident sequence."""
+        keys = chain_keys(padded_tokens, self.block_tokens)
+        with self._mutex:
+            self.stats.lookups += 1
+            entries = [self._dir.get(k) for k in keys]
+            nxt = self._next_token.get(keys[-1])
+            if any(e is None for e in entries) or nxt is None:
+                self.stats.misses += 1
+                return None
+            # pin under the directory mutex: the evictor also holds it
+            # while it checks refcount==0, so pin-vs-evict serializes
+            for e in entries:
+                self.pool.rc_add(e.bid, +1)
+                self._tick += 1
+                e.tick = self._tick
+            self.stats.hits += 1
+            return PrefixHit(self, [e.bid for e in entries], nxt,
+                             n_tokens=len(keys) * self.block_tokens)
+
+    # -- insert ----------------------------------------------------------
+    def insert(self, padded_tokens: np.ndarray,
+               blocks: List[np.ndarray], next_token: int) -> int:
+        """Publish a miss's prefill: one queued one-sided put per new
+        chunk block (shared chunks are kept, not rewritten).  Returns
+        the number of NEW blocks published.  Exhaustion (nothing
+        evictable) skips the remaining chunks — serving never fails on
+        a cache-full condition."""
+        keys = chain_keys(padded_tokens, self.block_tokens)
+        if len(blocks) != len(keys):
+            raise ValueError(
+                f"{len(blocks)} block payloads for {len(keys)} chunks")
+        published = 0
+        for key, payload in zip(keys, blocks):
+            with self._mutex:
+                ent = self._dir.get(key)
+                if ent is not None:            # shared prefix: keep it
+                    self._tick += 1
+                    ent.tick = self._tick
+                    self.stats.shared_blocks += 1
+                    continue
+            bid = self._alloc_with_evict()
+            if bid is None:
+                with self._mutex:
+                    self.stats.insert_skipped += 1
+                continue
+            self.pool.write_nb(bid, payload)   # queued; coalesces
+            with self._mutex:
+                if key in self._dir:           # racing insert won
+                    self.stats.shared_blocks += 1
+                    self.pool.free(bid)
+                    continue
+                self._tick += 1
+                self._dir[key] = _DirEntry(bid=bid, tick=self._tick)
+                self.stats.insert_blocks += 1
+                self.stats.publish_put_nb_ops += 1
+                published += 1
+        with self._mutex:
+            self._next_token[keys[-1]] = int(next_token)
+        return published
+
+    # -- eviction --------------------------------------------------------
+    def _alloc_with_evict(self) -> Optional[BlockId]:
+        while True:
+            try:
+                return self.pool.alloc()
+            except PoolExhausted:
+                if not self.evict_lru():
+                    return None
+
+    def evict_lru(self) -> bool:
+        """Reclaim the least-recently-used *unreferenced* block.
+        Serialized through the LockService MCS lock (lock order:
+        eviction lock → directory mutex, everywhere)."""
+        with self.ctx.locks.held(self._evict_lock, self._home_unit):
+            # refcount check AND removal both under the directory
+            # mutex: lookup pins under the same mutex, so a block seen
+            # at refcount 0 here cannot be pinned before we free it
+            with self._mutex:
+                victims = sorted(self._dir.items(),
+                                 key=lambda kv: kv[1].tick)
+                for key, ent in victims:
+                    if self.pool.rc_load(ent.bid) != 0:
+                        continue               # pinned by a resident
+                    del self._dir[key]
+                    self._next_token.pop(key, None)
+                    self.stats.evictions += 1
+                    self.pool.free(ent.bid)
+                    return True
+                return False
+
+    def __len__(self) -> int:
+        with self._mutex:
+            return len(self._dir)

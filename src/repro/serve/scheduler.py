@@ -1,0 +1,144 @@
+"""Continuous-batching scheduler: fixed decode slots, per-step churn.
+
+The synchronous wave loop packed a batch, decoded it to the wave's max
+``max_new_tokens``, and only then looked at the queue again — arrivals
+during a wave waited, and retired rows kept burning decode slots.  This
+scheduler replaces the wave with *slots*:
+
+* the engine owns ``max_batch`` decode slots of a fixed-shape batched
+  cache (shape-stable: the decode step never retraces);
+* ``admit`` binds a waiting request to a free slot (the engine prefills
+  only that slot — resident slots keep decoding);
+* ``note_token`` records one decoded token per resident slot per step
+  and reports retirement: EOS (the early-exit path that the wave engine
+  only had wave-globally) or the request's own ``max_new_tokens``;
+* ``retire`` frees the slot immediately, so the next step can admit a
+  waiting request into it without stalling the batch.
+
+Pure bookkeeping — no JAX, no DART.  The engine drives it; the PGAS
+planes (KV block pool, prefix-cache service) hang off the per-sequence
+record via ``on_retire`` callbacks (releasing pinned cache blocks is
+the canonical one).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, List, Optional
+
+
+@dataclasses.dataclass
+class SeqState:
+    """One resident sequence: a request bound to a decode slot."""
+
+    req: object                      # serve.engine.Request (duck-typed)
+    slot: int
+    pos: int = 0                     # decode position (cache pos)
+    emitted: List[int] = dataclasses.field(default_factory=list)
+    eos_seen: bool = False
+    prefix_hit: bool = False
+    on_retire: Optional[Callable[["SeqState"], None]] = None
+
+    @property
+    def done(self) -> bool:
+        return (self.eos_seen
+                or len(self.emitted) >= self.req.max_new_tokens)
+
+
+class ContinuousScheduler:
+    """Admit/evict bookkeeping over ``max_batch`` fixed decode slots."""
+
+    def __init__(self, max_batch: int):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = max_batch
+        self.waiting: Deque[object] = deque()
+        self.slots: List[Optional[SeqState]] = [None] * max_batch
+        self._free: Deque[int] = deque(range(max_batch))
+        # counters for the serving bench
+        self.admitted = 0
+        self.retired = 0
+
+    # -- queue side ------------------------------------------------------
+    def enqueue(self, req) -> None:
+        """FIFO-append a request to the waiting line."""
+        self.waiting.append(req)
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def residents(self) -> List[SeqState]:
+        return [s for s in self.slots if s is not None]
+
+    @property
+    def n_resident(self) -> int:
+        return self.max_batch - len(self._free)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or self.n_resident > 0
+
+    # -- admit -----------------------------------------------------------
+    def admit_next(self) -> Optional[SeqState]:
+        """Bind the oldest waiting request to a free slot.
+
+        Returns the new :class:`SeqState` (the engine prefills it), or
+        ``None`` when there is nothing waiting or no slot is free —
+        resident sequences are never preempted.
+        """
+        if not self.waiting or not self._free:
+            return None
+        req = self.waiting.popleft()
+        slot = self._free.popleft()
+        assert self.slots[slot] is None, f"slot {slot} double-assigned"
+        seq = SeqState(req=req, slot=slot)
+        self.slots[slot] = seq
+        self.admitted += 1
+        return seq
+
+    # -- per-step accounting ---------------------------------------------
+    def note_token(self, slot: int, token: int) -> bool:
+        """Record one decoded token for the resident in ``slot``.
+
+        Returns True when the sequence is finished — EOS emitted (the
+        token is kept, matching the wave engine's inclusive truncation)
+        or its own ``max_new_tokens`` reached — and should be retired.
+        """
+        seq = self.slots[slot]
+        if seq is None:
+            raise KeyError(f"slot {slot} has no resident sequence")
+        if seq.done:
+            raise RuntimeError(
+                f"slot {slot} already finished; retire it first")
+        seq.emitted.append(int(token))
+        seq.pos += 1
+        if (seq.req.eos_id is not None
+                and int(token) == int(seq.req.eos_id)):
+            seq.eos_seen = True
+        return seq.done
+
+    # -- retire ----------------------------------------------------------
+    def retire(self, slot: int) -> SeqState:
+        """Free ``slot`` and return its sequence (caller finalizes the
+        request).  Runs the sequence's ``on_retire`` hook (block-cache
+        release) before the slot becomes reusable."""
+        seq = self.slots[slot]
+        if seq is None:
+            raise KeyError(f"slot {slot} has no resident sequence")
+        if seq.on_retire is not None:
+            seq.on_retire(seq)
+        self.slots[slot] = None
+        self._free.append(slot)
+        self.retired += 1
+        return seq
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"ContinuousScheduler(resident={self.n_resident}/"
+                f"{self.max_batch}, waiting={self.n_waiting})")

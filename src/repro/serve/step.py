@@ -2,6 +2,16 @@
 one token.  The decode cache lives in the DART symmetric-heap picture:
 a per-unit partition of a team-wide aligned allocation (DESIGN.md §4) —
 operationally it is a donated pytree sharded by the cache rules.
+
+Two decode shapes:
+
+* :func:`make_decode_step` — the wave engine's shared-position batch
+  step (one scalar ``pos`` for the whole wave);
+* :func:`make_batched_decode_step` — the continuous engine's per-slot
+  step: ``vmap`` over ``max_batch`` independent single-sequence caches,
+  so every slot carries its own position (admits at different times
+  decode side by side) while the traced shape stays FIXED — the
+  serving loop never retraces after warmup.
 """
 
 from __future__ import annotations
@@ -31,3 +41,51 @@ def make_decode_step(cfg: ModelConfig, sample: str = "greedy",
             raise ValueError(sample)
         return nxt[:, None], logits, cache
     return decode_step
+
+
+def make_batched_decode_step(cfg: ModelConfig, sample: str = "greedy"):
+    """Per-slot decode for the continuous engine.
+
+    ``tokens`` is ``(max_batch, 1, 1)`` int32 and ``caches`` is the
+    per-slot cache pytree — every leaf of ``api.init_cache(cfg, 1,
+    max_seq)`` gains a leading slot axis, including the scalar ``pos``
+    (→ ``(max_batch,)``), which is what gives each slot its own decode
+    position.  Returns ``(next_tokens (max_batch, 1, 1), new caches)``.
+    Free slots decode garbage at fixed cost; the scheduler ignores
+    their tokens — the price of a shape-stable step.
+    """
+    if sample != "greedy":
+        raise ValueError(sample)
+
+    def one(params, tok, cache):
+        logits, cache = api.forward_decode(cfg, params, tok, cache)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    def step(params, tokens, caches):
+        return jax.vmap(one, in_axes=(None, 0, 0))(params, tokens, caches)
+
+    return step
+
+
+def make_slot_insert():
+    """Write one sequence's cache (leaves of ``init_cache(cfg, 1, ...)``)
+    into slot ``slot`` of the batched cache pytree.  ``slot`` is a
+    traced scalar, so one compile covers every slot index."""
+
+    def insert(caches, slot_cache, slot):
+        def put(batched, leaf):
+            leaf = leaf[None].astype(batched.dtype)
+            start = (slot,) + (0,) * (batched.ndim - 1)
+            return jax.lax.dynamic_update_slice(batched, leaf, start)
+        return jax.tree.map(put, caches, slot_cache)
+
+    return insert
+
+
+def init_batched_cache(cfg: ModelConfig, max_batch: int, max_seq: int):
+    """Zeroed per-slot cache pytree: each leaf of the single-sequence
+    cache with a leading ``max_batch`` slot axis."""
+    one = api.init_cache(cfg, 1, max_seq)
+    return jax.tree.map(
+        lambda l: jnp.zeros((max_batch,) + l.shape, l.dtype), one)

@@ -37,6 +37,8 @@ def test_halo_exchange():
 def test_serve_batch():
     out = run_example("serve_batch.py")
     assert "completed 10 requests" in out
+    assert "continuous pass completed 10 requests" in out
+    assert "10 prefix hits" in out
     assert out.strip().endswith("OK")
 
 

@@ -1,0 +1,443 @@
+"""Continuous-batching serve plane: scheduler invariants, the PGAS
+KV-block pool, the prefix-cache service (incl. refcount exactness under
+concurrency and LRU eviction), and the continuous engine end to end."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import DartConfig, dart_init
+from repro.serve import (BlockId, ContinuousScheduler, KVBlockPool,
+                         PoolExhausted, PrefixCacheService,
+                         chain_keys, pack_kv_blocks, pool_bytes_needed,
+                         unpack_kv_blocks)
+
+
+class _Req:
+    def __init__(self, rid, max_new_tokens=4, eos_id=None):
+        self.rid = rid
+        self.max_new_tokens = max_new_tokens
+        self.eos_id = eos_id
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_admit_fifo_until_slots_full():
+    s = ContinuousScheduler(max_batch=2)
+    for i in range(3):
+        s.enqueue(_Req(i))
+    a = s.admit_next()
+    b = s.admit_next()
+    assert (a.req.rid, b.req.rid) == (0, 1)        # FIFO
+    assert {a.slot, b.slot} == {0, 1}
+    assert s.admit_next() is None                  # no free slot
+    assert s.n_waiting == 1 and s.n_resident == 2 and s.n_free == 0
+
+
+def test_scheduler_retire_on_budget_frees_slot_for_waiting():
+    s = ContinuousScheduler(max_batch=1)
+    s.enqueue(_Req(0, max_new_tokens=2))
+    s.enqueue(_Req(1, max_new_tokens=1))
+    seq = s.admit_next()
+    assert not s.note_token(seq.slot, 7)
+    assert s.note_token(seq.slot, 8)               # budget reached
+    retired = s.retire(seq.slot)
+    assert retired.emitted == [7, 8]
+    nxt = s.admit_next()                           # slot immediately reusable
+    assert nxt is not None and nxt.req.rid == 1 and nxt.slot == seq.slot
+    assert s.admitted == 2 and s.retired == 1
+
+
+def test_scheduler_eos_retires_early_and_keeps_token():
+    s = ContinuousScheduler(max_batch=1)
+    s.enqueue(_Req(0, max_new_tokens=10, eos_id=99))
+    seq = s.admit_next()
+    assert not s.note_token(seq.slot, 5)
+    assert s.note_token(seq.slot, 99)              # EOS
+    assert seq.eos_seen and seq.emitted == [5, 99]
+    with pytest.raises(RuntimeError):
+        s.note_token(seq.slot, 1)                  # finished: retire first
+
+
+def test_scheduler_retire_runs_hook_and_empty_slot_raises():
+    s = ContinuousScheduler(max_batch=1)
+    s.enqueue(_Req(0, max_new_tokens=1))
+    seq = s.admit_next()
+    released = []
+    seq.on_retire = lambda sq: released.append(sq.slot)
+    s.note_token(seq.slot, 1)
+    s.retire(seq.slot)
+    assert released == [seq.slot]
+    with pytest.raises(KeyError):
+        s.retire(seq.slot)
+    with pytest.raises(KeyError):
+        s.note_token(seq.slot, 1)
+
+
+# ---------------------------------------------------------------------------
+# KV block pool
+# ---------------------------------------------------------------------------
+
+N_UNITS = 2
+BLOCK_ELEMS = 8
+N_BLOCKS = 6
+
+
+@pytest.fixture()
+def ctx():
+    import jax.numpy as jnp
+    pool_bytes = pool_bytes_needed(64, BLOCK_ELEMS, N_UNITS, jnp.float32)
+    return dart_init(n_units=N_UNITS,
+                     config=DartConfig(team_pool_bytes=pool_bytes,
+                                       non_collective_pool_bytes=1 << 14))
+
+
+@pytest.fixture()
+def pool(ctx):
+    return KVBlockPool(ctx, n_blocks=N_BLOCKS, block_elems=BLOCK_ELEMS)
+
+
+def test_pool_round_robin_and_exhaustion(pool):
+    bids = [pool.alloc() for _ in range(pool.n_blocks)]
+    assert len(set(bids)) == pool.n_blocks
+    per_unit = {u: sum(1 for b in bids if b.unit == u)
+                for u in {b.unit for b in bids}}
+    assert len(per_unit) == N_UNITS                # spread across units
+    assert max(per_unit.values()) - min(per_unit.values()) <= 1
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    pool.free(bids[0])
+    assert pool.alloc() == bids[0]
+
+
+def test_pool_one_sided_roundtrip_with_per_target_flush(pool):
+    rng = np.random.RandomState(3)
+    bids = [pool.alloc() for _ in range(4)]
+    payloads = {b: rng.randn(BLOCK_ELEMS).astype(np.float32)
+                for b in bids}
+    for b, p in payloads.items():
+        pool.write_nb(b, p)                        # queued puts
+    handles = {b: pool.read_nb(b) for b in bids}
+    for u in sorted({b.unit for b in bids}):
+        pool.flush_unit(u)                         # per-target flush
+    for b in bids:
+        np.testing.assert_array_equal(
+            np.asarray(handles[b].value()), payloads[b])
+
+
+def test_pool_block_gptr_addresses_owner_row(pool):
+    bid = BlockId(unit=pool.ga.units[-1], index=1)
+    gp = pool.block_gptr(bid)
+    assert gp.unitid == bid.unit
+    assert gp == pool.block_ref(bid).gptr
+
+
+def test_pool_refcounts_are_atomic_fetch_add(pool):
+    bid = pool.alloc()
+    assert pool.rc_load(bid) == 0
+    assert pool.rc_add(bid, +1) == 0               # returns pre-value
+    assert pool.rc_add(bid, +1) == 1
+    assert pool.rc_load(bid) == 2
+    pool.rc_add(bid, -2)
+    assert pool.rc_load(bid) == 0
+
+
+# ---------------------------------------------------------------------------
+# prefix keys + block packing
+# ---------------------------------------------------------------------------
+
+def test_chain_keys_name_their_whole_left_context():
+    a = np.arange(16, dtype=np.int32)
+    b = a.copy(); b[12] = 999                      # diverge in chunk 3
+    ka, kb = chain_keys(a, 4), chain_keys(b, 4)
+    assert ka[:3] == kb[:3]                        # shared prefix shares keys
+    assert ka[3] != kb[3]                          # divergence changes the key
+    c = a.copy(); c[0] = 999                       # diverge in chunk 0
+    kc = chain_keys(c, 4)
+    assert all(x != y for x, y in zip(ka, kc))     # chained: all downstream differ
+    with pytest.raises(ValueError):
+        chain_keys(np.arange(6, dtype=np.int32), 4)
+
+
+def test_pack_unpack_kv_blocks_roundtrip():
+    L, kv, hd, bt, max_seq, n_tok = 3, 2, 4, 4, 16, 8
+    rng = np.random.RandomState(0)
+    cache = {"k": rng.randn(L, 1, max_seq, kv, hd).astype(np.float32),
+             "v": rng.randn(L, 1, max_seq, kv, hd).astype(np.float32)}
+    blocks = pack_kv_blocks(cache, n_tok, bt)
+    assert len(blocks) == n_tok // bt
+    assert all(b.size == 2 * L * bt * kv * hd for b in blocks)
+    k, v = unpack_kv_blocks(blocks, n_layers=L, kv_heads=kv, head_dim=hd,
+                            block_tokens=bt, max_seq=max_seq,
+                            dtype=np.float32)
+    np.testing.assert_array_equal(k[:, :, :n_tok], cache["k"][:, :, :n_tok])
+    np.testing.assert_array_equal(v[:, :, :n_tok], cache["v"][:, :, :n_tok])
+    assert not k[:, :, n_tok:].any() and not v[:, :, n_tok:].any()
+
+
+# ---------------------------------------------------------------------------
+# prefix cache service (synthetic payloads — no model)
+# ---------------------------------------------------------------------------
+
+BT = 4          # block_tokens for the service tests
+
+
+def _svc(ctx, n_blocks):
+    pool = KVBlockPool(ctx, n_blocks=n_blocks, block_elems=BLOCK_ELEMS)
+    return PrefixCacheService(ctx, pool, block_tokens=BT), pool
+
+
+def _prompt(*vals):
+    return np.asarray(vals, np.int32)
+
+
+def _payloads(n, seed):
+    rng = np.random.RandomState(seed)
+    return [rng.randn(BLOCK_ELEMS).astype(np.float32) for _ in range(n)]
+
+
+def test_prefix_insert_then_lookup_roundtrips_blocks(ctx):
+    svc, pool = _svc(ctx, 8)
+    toks = _prompt(*range(8))                      # 2 chunks
+    pays = _payloads(2, seed=1)
+    assert svc.lookup(toks) is None                # cold miss
+    assert svc.insert(toks, pays, next_token=42) == 2
+    hit = svc.lookup(toks)
+    assert hit is not None and hit.next_token == 42
+    vals = hit.fetch()
+    for got, want in zip(vals, pays):
+        np.testing.assert_array_equal(got, want)
+    assert all(pool.rc_load(b) == 1 for b in hit.blocks)   # pinned
+    hit.release()
+    hit.release()                                  # idempotent
+    assert all(pool.rc_load(b) == 0 for b in hit.blocks)
+    assert svc.stats.hits == 1 and svc.stats.misses == 1
+
+
+def test_prefix_shared_chunks_not_republished(ctx):
+    svc, pool = _svc(ctx, 8)
+    a = _prompt(*range(8))
+    b = np.concatenate([a[:4], _prompt(90, 91, 92, 93)])   # shares chunk 0
+    svc.insert(a, _payloads(2, seed=2), next_token=1)
+    published = svc.insert(b, _payloads(2, seed=3), next_token=2)
+    assert published == 1                          # chunk 0 reused
+    assert svc.stats.shared_blocks == 1
+    assert len(svc) == 3
+    # partial overlap is NOT a hit: b's full chain must be present
+    c = np.concatenate([a[:4], _prompt(70, 71, 72, 73)])
+    assert svc.lookup(c) is None
+
+
+def test_prefix_refcounts_exact_under_concurrent_lookups(ctx):
+    svc, pool = _svc(ctx, 8)
+    toks = _prompt(*range(8))
+    svc.insert(toks, _payloads(2, seed=4), next_token=7)
+    n_threads, iters, errs = 6, 12, []
+
+    def worker():
+        try:
+            for _ in range(iters):
+                hit = svc.lookup(toks)
+                assert hit is not None
+                hit.fetch()
+                hit.release()
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs
+    assert svc.stats.hits == n_threads * iters
+    ent_bids = [e.bid for e in svc._dir.values()]
+    assert all(pool.rc_load(b) == 0 for b in ent_bids)     # exact: all unpinned
+
+
+def test_prefix_lru_eviction_reclaims_oldest_unreferenced(ctx):
+    svc, pool = _svc(ctx, 2)                       # room for 2 blocks
+    a, b, c = (_prompt(*range(i, i + 4)) for i in (0, 10, 20))
+    svc.insert(a, _payloads(1, seed=5), next_token=1)
+    svc.insert(b, _payloads(1, seed=6), next_token=2)
+    assert pool.n_free == 0
+    hb = svc.lookup(b)                             # refresh + pin b
+    hb.release()                                   # unpinned, but recent
+    svc.insert(c, _payloads(1, seed=7), next_token=3)      # evicts LRU = a
+    assert svc.stats.evictions == 1
+    assert svc.lookup(a) is None                   # a gone
+    assert svc.lookup(c) is not None               # c resident
+    assert svc.stats.insert_skipped == 0
+
+
+def test_prefix_pinned_blocks_never_evicted(ctx):
+    svc, pool = _svc(ctx, 2)
+    a, b = _prompt(*range(4)), _prompt(*range(10, 14))
+    svc.insert(a, _payloads(1, seed=8), next_token=1)
+    svc.insert(b, _payloads(1, seed=9), next_token=2)
+    ha = svc.lookup(a)                             # pin a (LRU after b refresh)
+    svc.lookup(b).release()                        # b most recent, unpinned
+    # full pool + a pinned: the evictor must take b (newer but free),
+    # never the pinned LRU block
+    svc.insert(_prompt(*range(20, 24)), _payloads(1, seed=10), next_token=3)
+    assert svc.lookup(a) is not None               # a survived (pinned)
+    assert svc.lookup(b) is None                   # b was the victim
+    ha.release()
+    # everything pinned -> nothing evictable -> insert skipped, no crash
+    hits = [svc.lookup(p) for p in (a, _prompt(*range(20, 24)))]
+    assert all(h is not None for h in hits)
+    assert svc.insert(_prompt(*range(30, 34)), _payloads(1, seed=11),
+                      next_token=4) == 0
+    assert svc.stats.insert_skipped == 1
+    for h in hits:
+        h.release()
+
+
+# ---------------------------------------------------------------------------
+# continuous engine (end to end, real model)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.models.config import reduced_for_smoke
+    from repro.serve import ContinuousEngine
+
+    cfg = reduced_for_smoke(get_config("llama3-8b"))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return ContinuousEngine(cfg, params, max_batch=3, max_seq=64,
+                            block_tokens=8, n_cache_blocks=32)
+
+
+def test_continuous_serves_more_requests_than_slots(engine):
+    rng = np.random.RandomState(0)
+    reqs = [engine.submit(rng.randint(1, 100, size=rng.randint(3, 9))
+                          .astype(np.int32), max_new_tokens=n)
+            for n in (5, 3, 7, 4, 6, 2, 5)]
+    assert engine.run_until_idle() == 7
+    for r in reqs:
+        assert r.done.is_set()
+        assert r.output.shape == (r.max_new_tokens,)
+    assert engine.scheduler.n_resident == 0
+    assert engine.scheduler.retired >= 7
+
+
+def test_continuous_greedy_matches_manual_decode(engine):
+    """Engine output == manual prefill+decode over the bucket-padded
+    prompt (left-pad to pow2 is the engine's shape-stability contract)."""
+    import jax.numpy as jnp
+
+    from repro.models import api
+
+    cfg = engine.cfg
+    prompt = np.arange(1, 7, dtype=np.int32)
+    req = engine.submit(prompt, max_new_tokens=4)
+    engine.run_until_idle()
+
+    padded = engine._padded_prompt(prompt)
+    assert padded.size == 8 and padded[:2].tolist() == [0, 0]
+    batch = {"tokens": jnp.asarray(padded[None])}
+    logits, cache = api.forward_prefill(cfg, engine.params, batch,
+                                        engine.max_seq)
+    toks = []
+    nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    toks.append(int(nxt[0, 0]))
+    for _ in range(3):
+        logits, cache = api.forward_decode(cfg, engine.params, nxt, cache)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        toks.append(int(nxt[0, 0]))
+    np.testing.assert_array_equal(req.output, toks)
+
+
+def test_continuous_eos_truncates_and_frees_slot_early(engine):
+    prompt = np.arange(1, 5, dtype=np.int32)
+    r0 = engine.submit(prompt, max_new_tokens=6)
+    engine.run_until_idle()
+    eos = int(r0.output[0])
+    steps0 = engine.decode_steps
+    r1 = engine.submit(prompt, max_new_tokens=6, eos_id=eos)
+    engine.run_until_idle()
+    assert r1.output.tolist() == [eos]
+    # EOS on the prefill token: the sequence retired without a single
+    # decode step burned on it
+    assert engine.decode_steps == steps0
+
+
+def test_continuous_prefix_hit_serves_identical_tokens_without_prefill(engine):
+    rng = np.random.RandomState(7)
+    prompt = rng.randint(1, 100, size=11).astype(np.int32)
+    r0 = engine.submit(prompt, max_new_tokens=5)
+    engine.run_until_idle()
+    hits0, prefills0 = engine.prefix.stats.hits, engine.prefills
+    r1 = engine.submit(prompt, max_new_tokens=5)
+    engine.run_until_idle()
+    assert engine.prefix.stats.hits == hits0 + 1
+    assert engine.prefills == prefills0            # no recompute
+    np.testing.assert_array_equal(r0.output, r1.output)
+
+
+def test_continuous_prefix_blocks_byte_identical_to_recompute(engine):
+    """The KV bytes restored from the global block pool == a fresh
+    prefill of the same padded prompt (the recompute oracle)."""
+    import jax.numpy as jnp
+
+    from repro.models import api
+
+    cfg = engine.cfg
+    rng = np.random.RandomState(11)
+    prompt = rng.randint(1, 100, size=13).astype(np.int32)
+    engine.submit(prompt, max_new_tokens=2)
+    engine.run_until_idle()
+
+    padded = engine._padded_prompt(prompt)
+    hit = engine.prefix.lookup(padded)
+    assert hit is not None
+    k, v = unpack_kv_blocks(
+        hit.fetch(), n_layers=cfg.n_layers, kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, block_tokens=engine.block_tokens,
+        max_seq=engine.max_seq, dtype=cfg.cdtype)
+    hit.release()
+
+    _, oracle = api.forward_prefill(cfg, engine.params,
+                                    {"tokens": jnp.asarray(padded[None])},
+                                    engine.max_seq)
+    n = padded.size
+    np.testing.assert_array_equal(k[:, :, :n],
+                                  np.asarray(oracle["k"])[:, :, :n])
+    np.testing.assert_array_equal(v[:, :, :n],
+                                  np.asarray(oracle["v"])[:, :, :n])
+
+
+def test_continuous_steady_state_never_retraces(engine):
+    """After warmup, repeat traffic adds no prefill buckets, no decode
+    retraces, and no DART plan compiles."""
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(1, 100, size=n).astype(np.int32)
+               for n in (4, 6, 9, 13)]
+    for p in prompts:                              # warmup pass
+        engine.submit(p, max_new_tokens=3)
+    engine.run_until_idle()
+
+    misses0 = engine.prefill_shape_misses
+    jit0 = (engine._prefill._cache_size() + engine._decode._cache_size()
+            + engine._insert._cache_size())
+    plans0 = engine.dart.engine.compile_count
+    for p in prompts:                              # steady state
+        engine.submit(p, max_new_tokens=3)
+    engine.run_until_idle()
+    assert engine.prefill_shape_misses == misses0
+    assert (engine._prefill._cache_size() + engine._decode._cache_size()
+            + engine._insert._cache_size()) == jit0
+    assert engine.dart.engine.compile_count == plans0
+
+
+def test_continuous_submit_rejects_overflowing_budget(engine):
+    prompt = np.arange(1, 40, dtype=np.int32)      # bucket 64
+    with pytest.raises(ValueError):
+        engine.submit(prompt, max_new_tokens=10)   # 64 + 10 > max_seq 64

@@ -60,3 +60,43 @@ def test_engine_eos_truncation(engine):
     r1 = engine.submit(prompt, max_new_tokens=6, eos_id=eos)
     engine.drain()
     assert r1.output.tolist() == [eos]
+
+
+def test_engine_wave_early_exits_when_all_rows_hit_eos(engine):
+    """The decode loop stops once every wave member is finished, not
+    at the wave's max ``max_new_tokens``."""
+    prompt = np.arange(1, 5, dtype=np.int32)
+    r0 = engine.submit(prompt, max_new_tokens=8)
+    engine.drain()
+    assert engine.last_wave_steps == 8             # no EOS: full budget
+    eos = int(r0.output[0])
+    for _ in range(engine.max_batch):              # whole wave EOSes at once
+        engine.submit(prompt, max_new_tokens=8, eos_id=eos)
+    engine.drain()
+    assert engine.last_wave_steps == 1
+    # mixed wave: the longest *live* row bounds the steps
+    engine.submit(prompt, max_new_tokens=8, eos_id=eos)
+    r = engine.submit(prompt, max_new_tokens=3)
+    engine.drain()
+    assert engine.last_wave_steps == 3
+    assert r.output.shape == (3,)
+
+
+def test_engine_submit_rids_unique_under_concurrency(engine):
+    import threading
+
+    rids, lock = [], threading.Lock()
+
+    def worker():
+        mine = [engine.submit(np.arange(1, 4, dtype=np.int32),
+                              max_new_tokens=1).rid for _ in range(50)]
+        with lock:
+            rids.extend(mine)
+
+    ts = [threading.Thread(target=worker) for _ in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(set(rids)) == len(rids) == 400
+    engine.drain()                                 # leave the queue clean
