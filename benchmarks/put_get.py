@@ -617,8 +617,104 @@ def engine_profile(*, repeats: int = 20, quick: bool = False) -> dict:
     rt.dart_flush(ctx)
     dart_waitall(hs)
 
+    # --- strided transfer IR (schema v6) -----------------------------
+    # One strided run = ONE descriptor at every layer (ISSUE 8): a
+    # matrix column of N elements moves as a single dispatch, and its
+    # µs/op must stay within ~2x of the contiguous row path (it was
+    # ~Nx when strided access exploded into per-element descriptors).
+    # Stride/count are descriptor DATA, so a varying-stride loop at
+    # fixed (seg, count) buckets recompiles NOTHING after warmup.
+    rows = cols = 32 if quick else 64
+    # shm=False: both series ride the counted one-sided engine path
+    # (the zero-copy SHM view would make the contiguous baseline a
+    # host memcpy and the ratio meaningless)
+    sga = ctx.alloc((rows, cols), jnp.float32, shm=False)
+    sga[1].put(jnp.zeros((rows, cols), jnp.float32))
+    rt.dart_flush(ctx)
+    rowv = jnp.arange(cols, dtype=jnp.float32)
+    colv = jnp.arange(rows, dtype=jnp.float32)
+
+    def contig_put():
+        sga.at[1, 0].put_nb(rowv)
+        rt.dart_flush(ctx)
+
+    def strided_put():
+        sga.at[1, :, 0].put_nb(colv)
+        rt.dart_flush(ctx)
+
+    def contig_get():
+        sga.at[1, 0].get()
+
+    def strided_get():
+        sga.at[1, :, 0].get()
+
+    for warm in (contig_put, strided_put, contig_get, strided_get):
+        warm()
+    d0 = ctx.engine.dispatch_count
+    strided_put()
+    sput_dispatches = ctx.engine.dispatch_count - d0
+    d0 = ctx.engine.dispatch_count
+    strided_get()
+    sget_dispatches = ctx.engine.dispatch_count - d0
+    t_cput = time_call(contig_put, repeats=repeats)
+    t_sput = time_call(strided_put, repeats=repeats)
+    t_cget = time_call(contig_get, repeats=repeats)
+    t_sget = time_call(strided_get, repeats=repeats)
+
+    def varying_stride_loop():
+        # same seg (1 elem) and count (rows) buckets, stride varies:
+        # plan keys never change, only descriptor data does
+        for c in (0, 1, 3, cols - 1):
+            sga.at[1, :, c].put_nb(colv)
+            rt.dart_flush(ctx)
+            sga.at[1, :, c].get()
+
+    varying_stride_loop()                     # warm every geometry
+    c0 = ctx.engine.compile_count
+    varying_stride_loop()
+    strided = {
+        "elems": rows,
+        "contiguous_put_us_per_op": round(t_cput.mean_us / cols, 3),
+        "strided_put_us_per_op": round(t_sput.mean_us / rows, 3),
+        "contiguous_get_us_per_op": round(t_cget.mean_us / cols, 3),
+        "strided_get_us_per_op": round(t_sget.mean_us / rows, 3),
+        "put_vs_contiguous_ratio": round(
+            (t_sput.mean_us / rows) / max(t_cput.mean_us / cols, 1e-9), 3),
+        "get_vs_contiguous_ratio": round(
+            (t_sget.mean_us / rows) / max(t_cget.mean_us / cols, 1e-9), 3),
+        "dispatches_per_strided_put": sput_dispatches,
+        "dispatches_per_strided_get": sget_dispatches,
+        "recompiles_steady_state": ctx.engine.compile_count - c0,
+    }
+
+    # --- narray (schema v6): DASH-style container over the strided IR
+    from repro.core import NArray, TileDist
+    gr = gc = 4                               # N_UNITS = 16 unit grid
+    na = NArray(ctx, (rows, cols), jnp.float32,
+                dist=TileDist((gr, gc)), shm=False)
+    na.from_numpy(np.zeros((rows, cols), np.float32))
+    rt.dart_flush(ctx)
+
+    def narray_col():
+        na.get_col(1)
+
+    narray_col()
+    d0 = ctx.engine.dispatch_count
+    narray_col()
+    col_dispatches = ctx.engine.dispatch_count - d0
+    t_col = time_call(narray_col, repeats=repeats)
+    t_red = time_call(lambda: na.reduce("sum"), repeats=repeats)
+    narray = {
+        "dist": f"tiled({gr}x{gc})",
+        "col_elems": rows,
+        "get_col_us_per_elem": round(t_col.mean_us / rows, 3),
+        "get_col_dispatches": col_dispatches,   # one per owning tile
+        "owning_tiles": gr,
+        "reduce_us": round(t_red.mean_us, 3),
+    }
+
     profile = {
-        "schema": "BENCH_engine/v5",
+        "schema": "BENCH_engine/v6",
         "n_ops": n_ops,
         "nbytes": nbytes,
         "quick": quick,
@@ -626,6 +722,8 @@ def engine_profile(*, repeats: int = 20, quick: bool = False) -> dict:
         "flush_cost": flush_cost,
         "reduce_plane": reduce_plane,
         "overlap": overlap,
+        "strided": strided,
+        "narray": narray,
         "plan_cache": {
             "compile_count": ctx.engine.compile_count,
             "plan_cache_hits": ctx.engine.plan_cache_hits,

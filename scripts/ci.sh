@@ -10,8 +10,9 @@
 #    engine vs the synchronous wave under one open-loop Poisson trace,
 #    merged as the `serving` block into BENCH_engine.json
 # 4. BENCH_engine schema guard: the machine-readable engine trajectory
-#    (benchmarks/out/BENCH_engine.json) must keep the BENCH_engine/v5
-#    shape and its dispatch/flush-cost/overlap/serving invariants, so
+#    (benchmarks/out/BENCH_engine.json) must keep the BENCH_engine/v6
+#    shape and its dispatch/flush-cost/overlap/serving/strided/narray
+#    invariants (incl. the varying-stride zero-recompile pin), so
 #    perf diffs stay comparable across PRs
 # 5. threaded stress suite, re-run standalone: the progress-plane
 #    differential and the atomics/lock contention tests exercise real

@@ -49,6 +49,8 @@ from .runtime import (DartConfig, DartContext, dart_accumulate,
                       dart_team_memalloc_aligned, dart_team_memfree,
                       dart_team_myid, dart_team_size, dart_team_split)
 from .array import GlobalArray, GlobalRef
+from .narray import (BlockCyclicDist, BlockedDist, CyclicDist, NArray,
+                     TileDist, narray_copy)
 
 # Curated public surface (no dir()-scraping: scraping re-exported the
 # submodule names bound by the imports above, leaking e.g. ``gptr`` and
@@ -56,6 +58,9 @@ from .array import GlobalArray, GlobalRef
 __all__ = [
     # typed front-end
     "GlobalArray", "GlobalRef",
+    # DASH-style distributed containers
+    "NArray", "BlockedDist", "CyclicDist", "BlockCyclicDist", "TileDist",
+    "narray_copy",
     # global pointers
     "ADDR_MAX", "DART_GPTR_NULL", "FLAG_COLLECTIVE", "FLAG_SHM",
     "NON_COLLECTIVE_SEG", "GlobalPtr",

@@ -10,9 +10,12 @@ DASH does over DART.  :class:`GlobalArray` is that layer:
   one collective symmetric allocation, one block of ``shape`` elements
   of ``dtype`` per team member, byte layout never exposed;
 * addressed NumPy-style: ``ga[unit]`` is a typed :class:`GlobalRef`
-  view of that member's block, ``ga.at[unit, 3:7]`` a contiguous
-  element run inside it, each supporting ``.put/.get`` (blocking) and
-  ``.put_nb/.get_nb`` (engine-queued, coalescing at flush);
+  view of that member's block, ``ga.at[unit, 3:7]`` an element run
+  inside it — including strided and multi-dimensional selections like
+  ``ga.at[unit, :, 2]`` (a column) or ``ga.at[unit, ::4]``, which
+  lower onto ONE strided engine descriptor — each supporting
+  ``.put/.get`` (blocking) and ``.put_nb/.get_nb`` (engine-queued,
+  coalescing at flush);
 * collective ops are typed too: ``ga.allreduce("sum")``,
   ``ga.broadcast(root)``, ``ga.gather()``, ``ga.scatter(values)``;
 * ``ga.local`` reads this controller's portion through the
@@ -44,91 +47,145 @@ Index = Union[int, slice, Tuple[Union[int, slice], ...]]
 
 
 def _element_run(shape: Tuple[int, ...], index: Index
-                 ) -> Tuple[int, Tuple[int, ...]]:
-    """Translate a NumPy-style index on ``shape`` (row-major) into a
-    *contiguous* element run: ``(element_offset, out_shape)``.
+                 ) -> Tuple[int, Tuple[int, ...], int, int, int]:
+    """Translate a NumPy-style index on ``shape`` (row-major) into ONE
+    strided element run:
+    ``(element_offset, out_shape, seg_elems, stride_elems, count)`` —
+    ``count`` segments of ``seg_elems`` consecutive elements placed
+    ``stride_elems`` apart.  A contiguous selection is the degenerate
+    case ``(seg_elems == prod(out_shape), stride 0, count 1)``.
 
-    Contiguity rule: leading integer indices, then at most one step-1
-    slice, then only full slices — anything else (strided slice,
-    integer/partial slice after a slice) would address a gather, which
-    the byte substrate does not express as one run.
+    Addressability rule: after collapsing every contiguous tail
+    (integer axes, size-1 slices, and slices that continue the dense
+    run), at most ONE strided level may remain — that's what a single
+    engine descriptor expresses.  Two or more broken levels (e.g. a
+    strided slice over rows *and* a partial slice over columns of a
+    3-D block) would need one descriptor per outer segment; index the
+    outer level per-iteration instead.  Negative-step slices raise
+    ``ValueError`` — silently reversing bytes on the wire is the kind
+    of misaddressing this front-end exists to prevent.  A step larger
+    than the axis extent just selects the first element (count 1), and
+    an empty slice yields a zero-element run (no data moves).
     """
     if not isinstance(index, tuple):
         index = (index,)
     if len(index) > len(shape):
         raise IndexError(f"too many indices for shape {shape}")
-    strides = [1] * len(shape)
+    elem_strides = [1] * len(shape)
     for ax in range(len(shape) - 2, -1, -1):
-        strides[ax] = strides[ax + 1] * shape[ax + 1]
+        elem_strides[ax] = elem_strides[ax + 1] * shape[ax + 1]
     offset = 0
     out_shape = []
-    sliced = False
+    # (n, pitch) per non-trivial axis: n selected elements, pitch
+    # element-stride between consecutive ones (= step * axis stride)
+    levels = []
     for ax, idx in enumerate(index):
         extent = shape[ax]
         if isinstance(idx, (int, np.integer)):
-            if sliced:
-                raise IndexError(
-                    "integer index after a slice is non-contiguous")
             i = int(idx)
             if i < 0:
                 i += extent
             if not (0 <= i < extent):
                 raise IndexError(
                     f"index {idx} out of range for axis {ax} (size {extent})")
-            offset += i * strides[ax]
+            offset += i * elem_strides[ax]
         elif isinstance(idx, slice):
+            if idx.step is not None and idx.step < 0:
+                raise ValueError(
+                    f"negative-step slice {idx!r} on axis {ax}: "
+                    "reversed runs are not addressable as one-sided "
+                    "transfers (read forward and reverse locally)")
             start, stop, step = idx.indices(extent)
-            if step != 1:
-                raise IndexError("only step-1 slices address a "
-                                 "contiguous run")
-            if sliced:
-                if (start, stop) != (0, extent):
-                    raise IndexError(
-                        "partial slice after a slice is non-contiguous")
-                out_shape.append(extent)
-            else:
-                offset += start * strides[ax]
-                out_shape.append(max(stop - start, 0))
-                # ANY slice (full or partial) starts the run's tail: a
-                # later integer or partial slice would select a column /
-                # strided block, which is not one contiguous run.
-                sliced = True
+            n = max(0, -(-(stop - start) // step))
+            offset += start * elem_strides[ax]
+            out_shape.append(n)
+            if n != 1:
+                levels.append((n, step * elem_strides[ax]))
         else:
             raise TypeError(f"unsupported index {idx!r}")
-    out_shape.extend(shape[len(index):])
-    return offset, tuple(out_shape)
+    for ax in range(len(index), len(shape)):
+        out_shape.append(shape[ax])
+        if shape[ax] != 1:
+            levels.append((shape[ax], elem_strides[ax]))
+    if 0 in out_shape:
+        # empty selection: a zero-element contiguous run — callers
+        # skip the wire entirely (no descriptor, no dispatch)
+        return offset, tuple(out_shape), 0, 0, 1
+    # collapse the dense tail: innermost levels whose pitch continues
+    # the contiguous block merge into one segment of seg elements
+    seg = 1
+    while levels and levels[-1][1] == seg:
+        seg *= levels.pop()[0]
+    if not levels:
+        return offset, tuple(out_shape), seg, 0, 1
+    if len(levels) > 1:
+        raise IndexError(
+            f"index {index!r} on shape {shape} addresses "
+            f"{len(levels)} strided levels; one engine descriptor "
+            "carries a single (stride, count) — index the outer "
+            "level per-iteration instead")
+    n, pitch = levels[0]
+    return offset, tuple(out_shape), seg, pitch, n
 
 
 class GlobalRef:
-    """A typed reference to one contiguous element run on one unit.
+    """A typed reference to one (possibly strided) element run on one
+    unit.
 
-    Immutable and cheap: holds (array, unit, element offset, shape).
-    Data ops translate to engine ops on the underlying byte pointer —
-    the translation the raw API forces every caller to hand-roll.
+    Immutable and cheap: holds (array, unit, element offset, shape)
+    plus the run geometry ``(seg, stride, count)`` — ``count``
+    segments of ``seg`` consecutive elements, ``stride`` elements
+    apart (contiguous refs are ``count == 1``).  A matrix column, a
+    tile halo, or a block-cyclic slice is therefore ONE ref lowering
+    onto ONE engine descriptor, never one op per element.  Data ops
+    translate to engine ops on the underlying byte pointer — the
+    translation the raw API forces every caller to hand-roll.
     """
 
-    __slots__ = ("array", "unit", "offset", "shape")
+    __slots__ = ("array", "unit", "offset", "shape", "seg", "stride",
+                 "count")
 
     def __init__(self, array: "GlobalArray", unit: int, offset: int,
-                 shape: Tuple[int, ...]):
+                 shape: Tuple[int, ...], seg: Optional[int] = None,
+                 stride: int = 0, count: int = 1):
         self.array = array
         self.unit = unit
         self.offset = offset
         self.shape = shape
+        self.seg = (int(np.prod(shape, dtype=np.int64)) if seg is None
+                    else seg)
+        self.stride = stride
+        self.count = count
 
     @property
     def dtype(self):
         return self.array.dtype
 
     @property
+    def size(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64))
+
+    @property
     def gptr(self) -> GlobalPtr:
-        """The substrate-layer byte pointer this ref denotes."""
+        """The substrate-layer byte pointer this ref denotes (its
+        first segment's first element)."""
         return (self.array.gptr.setunit(self.unit)
                 .incaddr(self.offset * self.array.itemsize))
 
+    def _byte_geom(self) -> dict:
+        """The engine kwargs of this run: stride in BYTES, count."""
+        return {"stride": self.stride * self.array.itemsize,
+                "count": self.count}
+
     def __getitem__(self, index: Index) -> "GlobalRef":
-        off, shp = _element_run(self.shape, index)
-        return GlobalRef(self.array, self.unit, self.offset + off, shp)
+        if self.count != 1:
+            raise IndexError(
+                "cannot re-index a strided GlobalRef (one descriptor "
+                "carries one (stride, count) level); index the parent "
+                "block instead")
+        off, shp, seg, stride, count = _element_run(self.shape, index)
+        return GlobalRef(self.array, self.unit, self.offset + off, shp,
+                         seg, stride, count)
 
     def _coerce(self, value) -> jax.Array:
         v = jnp.asarray(value, dtype=self.dtype)
@@ -142,30 +199,58 @@ class GlobalRef:
             f"value of shape {v.shape} does not fit ref of shape "
             f"{self.shape}")
 
+    def _empty_handle(self):
+        """A born-complete Handle for zero-element refs: nothing moves,
+        nothing dispatches."""
+        from .onesided import Handle
+        return Handle(())
+
+    def _empty_get_handle(self):
+        from .onesided import GetHandle
+        h = GetHandle(self.shape, self.dtype, engine=None)
+        h._value = jnp.zeros(self.shape, self.dtype)
+        return h
+
     # -- data plane (lowers onto the CommEngine, never around it) --------
     def put(self, value) -> None:
         """Blocking put (enqueue + flush + completion)."""
         from . import runtime as rt
-        rt.dart_put_blocking(self.array.ctx, self.gptr, self._coerce(value))
+        if self.size == 0:
+            return
+        rt.dart_put_blocking(self.array.ctx, self.gptr,
+                             self._coerce(value), **self._byte_geom())
 
     def put_nb(self, value):
         """Non-blocking put: queued on the engine; coalesces with its
         neighbours at the next epoch close.  Returns the Handle."""
         from . import runtime as rt
-        return rt.dart_put(self.array.ctx, self.gptr, self._coerce(value))
+        if self.size == 0:
+            return self._empty_handle()
+        return rt.dart_put(self.array.ctx, self.gptr,
+                           self._coerce(value), **self._byte_geom())
 
     def get(self) -> jax.Array:
-        """Blocking get, locality-routed (zero-copy on SHM_LOCAL)."""
+        """Blocking get, locality-routed (zero-copy on SHM_LOCAL) for
+        contiguous refs; strided refs gather through the engine's one
+        coalesced descriptor."""
         from . import runtime as rt
-        return rt.dart_get_blocking(self.array.ctx, self.gptr, self.shape,
-                                    self.dtype)
+        if self.size == 0:
+            return jnp.zeros(self.shape, self.dtype)
+        if self.count == 1:
+            return rt.dart_get_blocking(self.array.ctx, self.gptr,
+                                        self.shape, self.dtype)
+        val, _ = rt.dart_get(self.array.ctx, self.gptr, self.shape,
+                             self.dtype, **self._byte_geom())
+        return val
 
     def get_nb(self):
         """Non-blocking get: queued; ``handle.value()`` flushes and
         yields the typed result."""
         from . import runtime as rt
+        if self.size == 0:
+            return self._empty_get_handle()
         return rt.dart_get_nb(self.array.ctx, self.gptr, self.shape,
-                              self.dtype)
+                              self.dtype, **self._byte_geom())
 
     # -- element-wise reductions at the target (the reduction plane) ----
     def accumulate(self, value, op: str = "sum"):
@@ -175,8 +260,11 @@ class GlobalRef:
         dispatch at the next epoch close — overlapping runs included
         (the ops commute).  Returns the Handle."""
         from . import runtime as rt
+        if self.size == 0:
+            return self._empty_handle()
         return rt.dart_accumulate(self.array.ctx, self.gptr,
-                                  self._coerce(value), op)
+                                  self._coerce(value), op,
+                                  **self._byte_geom())
 
     def add(self, value):
         """``ref.add(v)`` ≡ ``ref.accumulate(v, "sum")``."""
@@ -196,8 +284,11 @@ class GlobalRef:
         ``value`` under ``op`` and returns the target's typed value
         from *before* the op, concrete (flushes this ref's lane)."""
         from . import runtime as rt
+        if self.size == 0:
+            return jnp.zeros(self.shape, self.dtype)
         old, _ = rt.dart_get_accumulate(self.array.ctx, self.gptr,
-                                        self._coerce(value), op)
+                                        self._coerce(value), op,
+                                        **self._byte_geom())
         return old
 
     def flush(self) -> None:
@@ -228,8 +319,11 @@ class GlobalRef:
                                       int(delta))
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        geom = ("" if self.count == 1 else
+                f", seg={self.seg}, stride={self.stride}, "
+                f"count={self.count}")
         return (f"GlobalRef(unit={self.unit}, offset={self.offset}, "
-                f"shape={self.shape}, dtype={self.dtype})")
+                f"shape={self.shape}, dtype={self.dtype}{geom})")
 
 
 class _AtIndexer:

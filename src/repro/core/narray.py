@@ -1,0 +1,425 @@
+"""DASH-style distributed N-dimensional arrays over the GlobalArray substrate.
+
+The DASH papers (PAPERS.md: 1610.01482, 1609.09333) layer multi-dimensional
+distributed containers and an STL-flavoured algorithm set on top of exactly
+the one-sided substrate this repo reproduces.  :class:`NArray` is that layer:
+a global-shape array whose elements are spread over the team's symmetric
+blocks by a *distribution pattern*, with
+
+- **blocked**     — axis-0 row blocks, one contiguous slab per unit
+- **cyclic**      — element ``g`` lives on unit ``g % n`` (flat, 1-D)
+- **blockcyclic** — blocks of ``b`` elements dealt round-robin (flat, 1-D)
+- **tiled**       — 2-D tiles over a ``gr x gc`` unit grid
+
+and a first algorithm set (``copy`` / ``transform`` / ``min_element`` /
+``reduce``) whose per-unit accesses are routed **local vs one-sided** by
+:func:`repro.core.shm.classify_locality` — host-visible SHM blocks are read
+zero-copy, everything else goes through the jitted engine path.  Cross-tile
+column access (``get_col`` / halo reads in the stencil example) lowers onto
+the strided descriptor IR, so a whole tile column is ONE engine dispatch.
+
+Element addressing is by *global flat index* (row-major over the global
+shape); every pattern answers ``owner(g) -> (unit, local_flat)`` and its
+inverse ``global_index_map(u)``, and padding slots (uneven division) carry
+global index ``-1`` so algorithms can mask them out.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .team import DART_TEAM_ALL
+
+__all__ = [
+    "NArray",
+    "BlockedDist",
+    "CyclicDist",
+    "BlockCyclicDist",
+    "TileDist",
+    "narray_copy",
+]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# distribution patterns
+# ---------------------------------------------------------------------------
+
+class _Dist:
+    """Pattern base: maps global flat indices <-> (unit slot, local slot).
+
+    ``bind(shape, n)`` is called once by :class:`NArray` and returns the
+    per-unit *local block shape* handed to the GlobalArray allocator.
+    ``owner(g)`` maps a global flat index to ``(unit_slot, local_flat)``.
+    ``global_index_map(u)`` returns an int64 array of the local block's
+    shape holding each slot's global flat index, or ``-1`` for padding.
+    """
+
+    name = "dist"
+
+    def bind(self, shape: Tuple[int, ...], n: int) -> Tuple[int, ...]:
+        raise NotImplementedError
+
+    def owner(self, g: int) -> Tuple[int, int]:
+        raise NotImplementedError
+
+    def global_index_map(self, u: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return self.name
+
+
+class BlockedDist(_Dist):
+    """Axis-0 blocks: unit ``u`` owns rows ``[u*rpb, (u+1)*rpb)``."""
+
+    name = "blocked"
+
+    def bind(self, shape, n):
+        if not shape:
+            raise ValueError("blocked distribution needs >= 1 axis")
+        self.shape, self.n = shape, n
+        self.rows = shape[0]
+        self.row_elems = int(np.prod(shape[1:], dtype=np.int64)) if shape[1:] else 1
+        self.rpb = _ceil_div(self.rows, n)
+        return (self.rpb,) + tuple(shape[1:])
+
+    def owner(self, g):
+        row, rem = divmod(g, self.row_elems)
+        u, lrow = divmod(row, self.rpb)
+        return u, lrow * self.row_elems + rem
+
+    def global_index_map(self, u):
+        rows = np.arange(u * self.rpb, (u + 1) * self.rpb, dtype=np.int64)
+        gmap = rows[:, None] * self.row_elems + np.arange(
+            self.row_elems, dtype=np.int64)[None, :]
+        gmap[rows >= self.rows, :] = -1
+        return gmap.reshape((self.rpb,) + tuple(self.shape[1:]))
+
+
+class CyclicDist(_Dist):
+    """Element ``g`` lives on unit ``g % n`` at local slot ``g // n``."""
+
+    name = "cyclic"
+
+    def bind(self, shape, n):
+        if len(shape) != 1:
+            raise ValueError("cyclic distribution is 1-D (flatten first)")
+        self.total, self.n = shape[0], n
+        self.epu = _ceil_div(max(self.total, 1), n)
+        return (self.epu,)
+
+    def owner(self, g):
+        return g % self.n, g // self.n
+
+    def global_index_map(self, u):
+        gmap = np.arange(self.epu, dtype=np.int64) * self.n + u
+        gmap[gmap >= self.total] = -1
+        return gmap
+
+
+class BlockCyclicDist(_Dist):
+    """Blocks of ``b`` elements dealt round-robin over the team."""
+
+    name = "blockcyclic"
+
+    def __init__(self, b: int):
+        if b < 1:
+            raise ValueError("block size must be >= 1")
+        self.b = int(b)
+
+    def bind(self, shape, n):
+        if len(shape) != 1:
+            raise ValueError("blockcyclic distribution is 1-D (flatten first)")
+        self.total, self.n = shape[0], n
+        self.nblocks = _ceil_div(max(self.total, 1), self.b)
+        self.bpu = _ceil_div(self.nblocks, n)
+        self.epu = self.bpu * self.b
+        return (self.epu,)
+
+    def owner(self, g):
+        blk, rem = divmod(g, self.b)
+        return blk % self.n, (blk // self.n) * self.b + rem
+
+    def global_index_map(self, u):
+        lblk = np.arange(self.bpu, dtype=np.int64)
+        blk = lblk * self.n + u                       # owned global block ids
+        base = blk[:, None] * self.b + np.arange(self.b, dtype=np.int64)[None, :]
+        base[blk >= self.nblocks, :] = -1
+        gmap = base.reshape(-1)
+        gmap[gmap >= self.total] = -1
+        return gmap
+
+    def describe(self):
+        return f"blockcyclic({self.b})"
+
+
+class TileDist(_Dist):
+    """2-D tiles over a ``gr x gc`` unit grid (``gr*gc == team size``)."""
+
+    name = "tiled"
+
+    def __init__(self, grid: Tuple[int, int]):
+        self.gr, self.gc = int(grid[0]), int(grid[1])
+        if self.gr < 1 or self.gc < 1:
+            raise ValueError("tile grid must be positive")
+
+    def bind(self, shape, n):
+        if len(shape) != 2:
+            raise ValueError("tiled distribution is 2-D")
+        if self.gr * self.gc != n:
+            raise ValueError(
+                f"tile grid {self.gr}x{self.gc} != team size {n}")
+        self.R, self.C = shape
+        self.tr = _ceil_div(self.R, self.gr)
+        self.tc = _ceil_div(self.C, self.gc)
+        return (self.tr, self.tc)
+
+    def owner(self, g):
+        r, c = divmod(g, self.C)
+        ti, lr = divmod(r, self.tr)
+        tj, lc = divmod(c, self.tc)
+        return ti * self.gc + tj, lr * self.tc + lc
+
+    def tile_of(self, u: int) -> Tuple[int, int]:
+        return divmod(u, self.gc)
+
+    def global_index_map(self, u):
+        ti, tj = self.tile_of(u)
+        rows = np.arange(ti * self.tr, (ti + 1) * self.tr, dtype=np.int64)
+        cols = np.arange(tj * self.tc, (tj + 1) * self.tc, dtype=np.int64)
+        gmap = rows[:, None] * self.C + cols[None, :]
+        gmap[rows >= self.R, :] = -1
+        gmap[:, cols >= self.C] = -1
+        return gmap
+
+    def describe(self):
+        return f"tiled({self.gr}x{self.gc})"
+
+
+# ---------------------------------------------------------------------------
+# the container
+# ---------------------------------------------------------------------------
+
+class NArray:
+    """A distributed N-d array: global ``shape`` spread over the team by
+    ``dist`` (a :class:`_Dist` instance, or the strings ``"blocked"`` /
+    ``"cyclic"``), backed by one :class:`GlobalArray` whose per-unit block
+    is the pattern's local block.
+    """
+
+    def __init__(self, ctx, shape: Sequence[int], dtype,
+                 dist="blocked", team: int = DART_TEAM_ALL, shm: bool = True):
+        if isinstance(dist, str):
+            dist = {"blocked": BlockedDist, "cyclic": CyclicDist}[dist]()
+        self.ctx = ctx
+        self.shape = tuple(int(s) for s in shape)
+        self.total = int(np.prod(self.shape, dtype=np.int64)) if self.shape else 1
+        self.dtype = jnp.dtype(dtype)
+        self.dist = dist
+        self.ga = ctx.alloc(dist.bind(self.shape, self._team_size(ctx, team)),
+                            self.dtype, team=team, shm=shm)
+        # local-vs-one-sided routing decisions taken by the algorithms
+        self.route_stats = {"local": 0, "onesided": 0}
+
+    @staticmethod
+    def _team_size(ctx, team):
+        return ctx.teams[team].size()
+
+    # -- identity --------------------------------------------------------
+    @property
+    def units(self) -> Tuple[int, ...]:
+        return self.ga.units
+
+    @property
+    def local_shape(self) -> Tuple[int, ...]:
+        return self.ga.shape
+
+    def free(self) -> None:
+        self.ga.free()
+
+    def __repr__(self):
+        return (f"NArray(shape={self.shape}, dtype={self.dtype.name}, "
+                f"dist={self.dist.describe()}, units={len(self.units)})")
+
+    # -- locality-routed block reads ------------------------------------
+    def _read_block(self, u: int) -> jax.Array:
+        """Read unit ``u``'s whole local block, counting the route the
+        locality classifier picks (zero-copy SHM view vs one-sided get)."""
+        from .shm import Locality, classify_locality
+        g = self.ga.gptr.setunit(u)
+        route = classify_locality(self.ctx, g)
+        self.route_stats[
+            "local" if route is Locality.SHM_LOCAL else "onesided"] += 1
+        return self.ga.local_view(u)
+
+    def _unit_slot(self, slot: int) -> int:
+        return self.units[slot]
+
+    # -- element access --------------------------------------------------
+    def _flat(self, index) -> int:
+        if isinstance(index, tuple):
+            if len(index) != len(self.shape):
+                raise IndexError(
+                    f"index {index} does not address all {len(self.shape)} axes")
+            g = 0
+            for ax, (i, s) in enumerate(zip(index, self.shape)):
+                i = int(i)
+                if not 0 <= i < s:
+                    raise IndexError(f"index {i} out of range for axis {ax}")
+                g = g * s + i
+            return g
+        g = int(index)
+        if not 0 <= g < self.total:
+            raise IndexError(f"flat index {g} out of range ({self.total})")
+        return g
+
+    def __getitem__(self, index):
+        """Scalar read by global (tuple or flat) index, locality-routed."""
+        u, loc = self.dist.owner(self._flat(index))
+        return self._read_block(self._unit_slot(u)).reshape(-1)[loc]
+
+    def __setitem__(self, index, value) -> None:
+        """Scalar write by global index (one-sided put, flushed)."""
+        u, loc = self.dist.owner(self._flat(index))
+        ref = self.ga.at[self._unit_slot(u), loc] if len(
+            self.local_shape) == 1 else self.ga.at[
+                (self._unit_slot(u),) + np.unravel_index(loc, self.local_shape)]
+        ref.put(jnp.asarray(value, self.dtype).reshape(ref.shape))
+
+    # -- whole-array movement -------------------------------------------
+    def from_numpy(self, arr) -> None:
+        """Scatter a host array of the global shape into every block."""
+        arr = np.asarray(arr, self.dtype)
+        if arr.shape != self.shape:
+            raise ValueError(f"shape {arr.shape} != global {self.shape}")
+        flat = arr.reshape(-1)
+        for slot, u in enumerate(self.units):
+            gmap = self.dist.global_index_map(slot)
+            blk = np.zeros(self.local_shape, self.dtype)
+            mask = gmap >= 0
+            blk[mask] = flat[gmap[mask]]
+            self.ga[u].put(jnp.asarray(blk))
+
+    def to_numpy(self) -> np.ndarray:
+        """Assemble the global array (locality-routed per-unit reads)."""
+        out = np.zeros(self.total, dtype=self.dtype)
+        for slot, u in enumerate(self.units):
+            gmap = self.dist.global_index_map(slot)
+            blk = np.asarray(self._read_block(u))
+            mask = gmap >= 0
+            out[gmap[mask]] = blk[mask]
+        return out.reshape(self.shape)
+
+    def fill(self, value) -> None:
+        for u in self.units:
+            self.ga[u].put(jnp.full(self.local_shape, value, self.dtype))
+
+    # -- strided cross-block access (tiled) ------------------------------
+    def get_col(self, j: int) -> np.ndarray:
+        """Global column ``j`` of a tiled 2-D NArray.
+
+        Each owning tile contributes ONE strided gather
+        (``ga.at[u, :, lc]`` -> seg=1 elem, stride=tile cols, count=tile
+        rows) instead of ``tr`` scalar gets — the strided descriptor IR
+        showcase this container exists for.
+        """
+        if not isinstance(self.dist, TileDist):
+            raise TypeError("get_col needs a tiled distribution")
+        d = self.dist
+        if not 0 <= j < d.C:
+            raise IndexError(f"column {j} out of range ({d.C})")
+        tj, lc = divmod(j, d.tc)
+        out = np.zeros(d.R, dtype=self.dtype)
+        handles = []
+        for ti in range(d.gr):
+            u = self._unit_slot(ti * d.gc + tj)
+            handles.append((ti, self.ga.at[u, :, lc].get_nb()))
+        for ti, h in handles:
+            col = np.asarray(h.value()).reshape(-1)
+            r0 = ti * d.tr
+            n = min(d.tr, d.R - r0)
+            out[r0:r0 + n] = col[:n]
+        return out
+
+    # -- DASH algorithm set ----------------------------------------------
+    def transform(self, fn: Callable[[jax.Array], jax.Array],
+                  out: Optional["NArray"] = None) -> "NArray":
+        """Elementwise ``out[i] = fn(self[i])`` (dash::transform).
+
+        Reads route local-vs-one-sided via the classifier; writes are
+        one-sided puts into ``out`` (defaults to in-place).
+        """
+        out = out or self
+        if out.shape != self.shape or not isinstance(
+                out.dist, type(self.dist)):
+            raise ValueError("transform needs a same-shape, same-dist out")
+        for u in self.units:
+            blk = self._read_block(u)
+            out.ga[u].put(jnp.asarray(fn(blk), out.dtype).reshape(
+                out.local_shape))
+        return out
+
+    def min_element(self) -> Tuple[int, jax.Array]:
+        """Global ``(flat_index, value)`` of the minimum (dash::min_element).
+
+        Per-unit blocks are scanned with padding slots masked to +inf;
+        ties resolve to the lowest global index.
+        """
+        best_g, best_v = -1, None
+        for slot, u in enumerate(self.units):
+            gmap = self.dist.global_index_map(slot).reshape(-1)
+            blk = np.asarray(self._read_block(u)).reshape(-1)
+            valid = gmap >= 0
+            if not valid.any():
+                continue
+            vals = np.where(valid, blk, np.inf)
+            order = np.lexsort((np.where(valid, gmap, np.iinfo(np.int64).max),
+                                vals))
+            i = order[0]
+            v = blk[i]
+            if best_g < 0 or v < best_v or (v == best_v and gmap[i] < best_g):
+                best_g, best_v = int(gmap[i]), v
+        return best_g, jnp.asarray(best_v, self.dtype)
+
+    def reduce(self, op: str = "sum"):
+        """Reduce every element to a scalar (dash::reduce / accumulate)."""
+        combine = {"sum": np.add, "prod": np.multiply,
+                   "min": np.minimum, "max": np.maximum}[op]
+        acc = None
+        for slot, u in enumerate(self.units):
+            gmap = self.dist.global_index_map(slot)
+            blk = np.asarray(self._read_block(u))
+            vals = blk[gmap >= 0]
+            if vals.size == 0:
+                continue
+            part = combine.reduce(vals)
+            acc = part if acc is None else combine(acc, part)
+        return jnp.asarray(acc, self.dtype)
+
+    def sum(self):
+        return self.reduce("sum")
+
+
+def narray_copy(src: NArray, dst: NArray) -> NArray:
+    """dash::copy — copy ``src`` into ``dst`` (same global shape; any
+    distribution pair).  Same-pattern copies move whole blocks; mixed
+    patterns redistribute through the assembled global array."""
+    if src.shape != dst.shape:
+        raise ValueError(f"shape {src.shape} != {dst.shape}")
+    same = (type(src.dist) is type(dst.dist)
+            and src.local_shape == dst.local_shape
+            and src.units == dst.units)
+    if same:
+        for u in src.units:
+            dst.ga[u].put(src._read_block(u).astype(dst.dtype))
+    else:
+        dst.from_numpy(src.to_numpy().astype(dst.dtype))
+    return dst

@@ -444,6 +444,8 @@ class _PendingPut:
     payload: np.ndarray         # 1-D uint8, host-staged at initiation
     handle: Handle
     ts: float = 0.0             # monotonic enqueue time (progress plane)
+    stride: int = 0             # byte distance between strided segments
+    count: int = 1              # segments (1 = contiguous)
 
 
 @dataclasses.dataclass(eq=False)
@@ -454,6 +456,8 @@ class _PendingGet:
     nbytes: int
     handle: GetHandle
     ts: float = 0.0
+    stride: int = 0
+    count: int = 1
 
 
 @dataclasses.dataclass(eq=False)
@@ -471,6 +475,42 @@ class _PendingAcc:
     fetch: bool
     handle: Handle
     ts: float = 0.0
+    stride: int = 0
+    count: int = 1
+
+
+def _check_strided(off: int, total: int, stride: int, count: int,
+                   pool_bytes: int, what: str) -> Tuple[int, int, int]:
+    """Validate a (possibly strided) op's geometry at initiation and
+    return ``(seg_len, stride, count)`` normalized so contiguous ops
+    are always ``(total, 0, 1)``.
+
+    ``total`` bytes split into ``count`` equal segments placed
+    ``stride`` bytes apart.  ``stride >= seg_len`` is required for
+    ``count > 1``: segments of one op may never self-overlap, which is
+    what licenses the vectorized unique-index scatter to treat every
+    lane of a descriptor as a distinct arena byte."""
+    count = int(count)
+    stride = int(stride)
+    if count < 1:
+        raise ValueError(f"{what}: count must be >= 1, got {count}")
+    if total % count:
+        raise ValueError(
+            f"{what}: {total} payload bytes do not split into {count} "
+            "equal segments")
+    seg_len = total // count
+    if count == 1:
+        stride = 0          # canonical contiguous form
+    else:
+        if stride < seg_len:
+            raise ValueError(
+                f"{what}: stride ({stride} B) must be >= the segment "
+                f"length ({seg_len} B) — overlapping segments of one "
+                "op are not addressable")
+    span = off + (count - 1) * stride + seg_len if total else off
+    if span > pool_bytes:
+        raise ValueError(f"{what} overruns the target allocation's pool")
+    return seg_len, stride, count
 
 
 class CommEngine:
@@ -555,39 +595,59 @@ class CommEngine:
 
     # -- enqueue (initiation) -------------------------------------------
     def put(self, heap: SymmetricHeap, teams_by_slot, gptr: GlobalPtr,
-            value) -> Handle:
+            value, *, stride: int = 0, count: int = 1) -> Handle:
+        """Queue a put of the value's bytes at the target.  With
+        ``count > 1`` the payload splits into ``count`` equal segments
+        landing ``stride`` bytes apart (a strided run — ONE descriptor,
+        ONE dispatch share, never one op per segment)."""
         poolid, row, off = deref(heap, teams_by_slot, gptr)
         payload = _to_host_bytes(value)
-        if off + payload.size > heap.pools[poolid].pool_bytes:
-            raise ValueError("put overruns the target allocation's pool")
+        stride, count = self._check_geom(
+            "put", heap, poolid, off, int(payload.size), stride, count)
         h = Handle((), engine=self)
         h.poolid = poolid
         h.row = row
         with self.lock:
             self._pending.append(_PendingPut(poolid, row, off, payload,
-                                             h, time.monotonic()))
+                                             h, time.monotonic(),
+                                             stride=stride, count=count))
             self.ops_enqueued += 1
         self._notify_enqueue()
         return h
 
     def get(self, heap: SymmetricHeap, teams_by_slot, gptr: GlobalPtr,
-            shape: Tuple[int, ...], dtype) -> GetHandle:
+            shape: Tuple[int, ...], dtype, *, stride: int = 0,
+            count: int = 1) -> GetHandle:
+        """Queue a get of ``shape``/``dtype`` from the target; with
+        ``count > 1`` the bytes are gathered from ``count`` equal
+        segments ``stride`` bytes apart and returned densely packed in
+        the requested shape."""
         poolid, row, off = deref(heap, teams_by_slot, gptr)
         n = nbytes_of(shape, dtype)
-        if off + n > heap.pools[poolid].pool_bytes:
-            raise ValueError("get overruns the target allocation's pool")
+        stride, count = self._check_geom(
+            "get", heap, poolid, off, n, stride, count)
         h = GetHandle(shape, dtype, engine=self)
         h.poolid = poolid
         h.row = row
         with self.lock:
             self._pending.append(_PendingGet(poolid, row, off, n, h,
-                                             time.monotonic()))
+                                             time.monotonic(),
+                                             stride=stride, count=count))
             self.ops_enqueued += 1
         self._notify_enqueue()
         return h
 
+    def _check_geom(self, what: str, heap: SymmetricHeap, poolid: int,
+                    off: int, total: int, stride: int, count: int
+                    ) -> Tuple[int, int]:
+        _, stride, count = _check_strided(
+            off, total, stride, count, heap.pools[poolid].pool_bytes,
+            what)
+        return stride, count
+
     def _stage_acc(self, heap: SymmetricHeap, teams_by_slot,
-                   gptr: GlobalPtr, value, op: str):
+                   gptr: GlobalPtr, value, op: str, stride: int,
+                   count: int):
         """Shared accumulate initiation: deref + canonicalize + the
         alignment/bounds checks the RMW kernels rely on."""
         if op not in _sc.REDUCE_OPS:
@@ -605,49 +665,57 @@ class CommEngine:
             raise ValueError(
                 f"accumulate of {dt} needs an element-aligned offset "
                 f"and pool (off={off}, pool_bytes={pool_bytes})")
-        if off + payload.size > pool_bytes:
+        seg_len, stride, count = _check_strided(
+            off, int(payload.size), stride, count, pool_bytes,
+            "accumulate")
+        if seg_len % dt.itemsize or stride % dt.itemsize:
             raise ValueError(
-                "accumulate overruns the target allocation's pool")
-        return poolid, row, off, arr, payload, dt
+                f"strided accumulate of {dt} needs element-aligned "
+                f"segment length and stride (seg={seg_len}, "
+                f"stride={stride})")
+        return poolid, row, off, arr, payload, dt, stride, count
 
     def accumulate(self, heap: SymmetricHeap, teams_by_slot,
-                   gptr: GlobalPtr, value, op: str = "sum") -> Handle:
+                   gptr: GlobalPtr, value, op: str = "sum", *,
+                   stride: int = 0, count: int = 1) -> Handle:
         """Queued element-wise accumulate at the target
         (``MPI_Accumulate``): enqueues like ``put``; same-op runs
         coalesce into one segmented read-modify-write dispatch at
         flush — even overlapping ones (the ops commute), while
         mixed-op or accumulate-vs-put overlap splits the run in queue
         order (last-writer-wins preserved run-by-run)."""
-        poolid, row, off, _, payload, dt = self._stage_acc(
-            heap, teams_by_slot, gptr, value, op)
+        poolid, row, off, _, payload, dt, stride, count = self._stage_acc(
+            heap, teams_by_slot, gptr, value, op, stride, count)
         h = Handle((), engine=self)
         h.poolid = poolid
         h.row = row
         with self.lock:
             self._pending.append(_PendingAcc(poolid, row, off, payload,
                                              op, str(dt), False, h,
-                                             time.monotonic()))
+                                             time.monotonic(),
+                                             stride=stride, count=count))
             self.ops_enqueued += 1
         self._notify_enqueue()
         return h
 
     def get_accumulate(self, heap: SymmetricHeap, teams_by_slot,
-                       gptr: GlobalPtr, value, op: str = "sum"
-                       ) -> GetHandle:
+                       gptr: GlobalPtr, value, op: str = "sum", *,
+                       stride: int = 0, count: int = 1) -> GetHandle:
         """Queued fetch-and-accumulate (``MPI_Get_accumulate``):
         ``handle.value()`` flushes and yields the target's value from
         *before* this op applied.  Byte-disjoint same-op fetches share
         one fused dispatch; overlap splits the run so every fetched
         value matches the sequential order."""
-        poolid, row, off, arr, payload, dt = self._stage_acc(
-            heap, teams_by_slot, gptr, value, op)
+        poolid, row, off, arr, payload, dt, stride, count = self._stage_acc(
+            heap, teams_by_slot, gptr, value, op, stride, count)
         h = GetHandle(arr.shape, dt, engine=self)
         h.poolid = poolid
         h.row = row
         with self.lock:
             self._pending.append(_PendingAcc(poolid, row, off, payload,
                                              op, str(dt), True, h,
-                                             time.monotonic()))
+                                             time.monotonic(),
+                                             stride=stride, count=count))
             self.ops_enqueued += 1
         self._notify_enqueue()
         return h
@@ -765,12 +833,16 @@ class CommEngine:
             self.ops_coalesced += len(run)
         desc, flat, seg = _sc.pack_descriptors(
             [op.row for op in run], [op.off for op in run],
-            [int(op.payload.size) for op in run],
-            [op.payload for op in run])
+            [int(op.payload.size) // op.count for op in run],
+            [op.payload for op in run],
+            strides=[op.stride for op in run],
+            counts=[op.count for op in run])
+        impl = self._pick_impl(desc, seg, int(arena.shape[1]))
+        sseg, cb = (_sc.strided_buckets(desc, seg)
+                    if impl == "pallas" else (None, None))
         fn, hit = _sc.scatter_plan(
             arena.shape, desc.shape[0], seg, flat.shape[0],
-            ordered=not disjoint,
-            impl=self._pick_impl(desc, seg, int(arena.shape[1])))
+            ordered=not disjoint, impl=impl, sseg=sseg, cb=cb)
         self._note_plan(hit)
         return fn(arena, desc, flat)
 
@@ -791,13 +863,18 @@ class CommEngine:
         first = run[0]
         desc, flat, seg = _sc.pack_acc_descriptors(
             [op.row for op in run], [op.off for op in run],
-            [int(op.payload.size) for op in run],
-            [op.payload for op in run], first.op, first.dtype)
+            [int(op.payload.size) // op.count for op in run],
+            [op.payload for op in run], first.op, first.dtype,
+            strides=[op.stride for op in run],
+            counts=[op.count for op in run])
+        # strided RMW rides the ref kernels only: the Pallas accumulate
+        # keeps its exact kb*seg identity-slot layout (contiguous runs)
+        impl = ("ref" if any(op.count > 1 for op in run)
+                else self._pick_impl(desc, seg, int(arena.shape[1])))
         fn, hit = _sc.accumulate_plan(
             arena.shape, desc.shape[0], seg, flat.shape[0],
             op=first.op, dtype=first.dtype, fetch=first.fetch,
-            ordered=not disjoint,
-            impl=self._pick_impl(desc, seg, int(arena.shape[1])))
+            ordered=not disjoint, impl=impl)
         self._note_plan(hit)
         if first.fetch:
             arena, old = fn(arena, desc, flat)
@@ -823,10 +900,15 @@ class CommEngine:
             self.ops_coalesced += len(run)
         desc, _, seg = _sc.pack_descriptors(
             [op.row for op in run], [op.off for op in run],
-            [op.nbytes for op in run])
+            [op.nbytes // op.count for op in run],
+            strides=[op.stride for op in run],
+            counts=[op.count for op in run])
+        impl = self._pick_impl(desc, seg, int(arena.shape[1]))
+        sseg, cb = (_sc.strided_buckets(desc, seg)
+                    if impl == "pallas" else (None, None))
         fn, hit = _sc.gather_plan(
-            arena.shape, desc.shape[0], seg,
-            impl=self._pick_impl(desc, seg, int(arena.shape[1])))
+            arena.shape, desc.shape[0], seg, impl=impl, sseg=sseg,
+            cb=cb)
         self._note_plan(hit)
         batch = _GatherBatch(fn(arena, desc))
         for i, op in enumerate(run):
@@ -869,6 +951,20 @@ def _op_nbytes(op) -> int:
     return op.nbytes
 
 
+def _op_span(op) -> int:
+    """Bytes of the op's *covering interval* ``[off, off + span)`` —
+    for a strided op this includes the gaps between segments
+    (``(count-1)*stride + seg_len``), a deliberately conservative
+    overlap proxy: two interleaved strided ops whose bytes never
+    collide still read as overlapping, which only demotes the run to
+    the ordered kernel (or splits it) — always correct, never unsafe.
+    Contiguous ops: span == nbytes, the historical rule unchanged."""
+    n = _op_nbytes(op)
+    if op.count <= 1:
+        return n
+    return (op.count - 1) * op.stride + n // op.count
+
+
 class _RunMeta:
     """Bookkeeping for the run currently being grown: payload sizes,
     per-row byte intervals, and whether every recorded write range is
@@ -904,7 +1000,7 @@ class _RunMeta:
         # the fused read-all-then-apply-all equals sequential order).
         self.intervals: Dict[int, Tuple[List[int], List[int]]] = {}
         if self.kind[0] in ("put", "acc", "gacc"):
-            self._note(op.row, op.off, op.off + n)
+            self._note(op.row, op.off, op.off + _op_span(op))
 
     def _note(self, row: int, off: int, end: int) -> None:
         starts, ends = self.intervals.setdefault(row, ([], []))
@@ -927,7 +1023,7 @@ class _RunMeta:
         if row_ivs is None:
             return True
         starts, ends = row_ivs
-        end = op.off + n
+        end = op.off + _op_span(op)
         i = bisect.bisect_right(starts, op.off)
         if i > 0 and ends[i - 1] > op.off:
             return False
@@ -965,9 +1061,9 @@ class _RunMeta:
         if self.kind[0] in ("put", "acc"):
             if self.disjoint and not self._disjoint(op, n):
                 self.disjoint = False
-            self._note(op.row, op.off, op.off + n)
+            self._note(op.row, op.off, op.off + _op_span(op))
         elif self.kind[0] == "gacc":
-            self._note(op.row, op.off, op.off + n)
+            self._note(op.row, op.off, op.off + _op_span(op))
 
 
 def _coalesced_runs(ops: Sequence) -> List[Tuple[List, bool]]:

@@ -292,19 +292,27 @@ def dart_team_memfree(ctx: DartContext, teamid: int,
 # a blocking op on the same pool, coalescing queued ops into batched
 # jitted kernels (see onesided.py module docstring).
 
-def dart_put(ctx: DartContext, gptr: GlobalPtr, value):
-    """Non-blocking put: enqueue on the engine, return a queued handle."""
-    return ctx.engine.put(ctx.heap, ctx.teams_by_slot, gptr, value)
+def dart_put(ctx: DartContext, gptr: GlobalPtr, value, *,
+             stride: int = 0, count: int = 1):
+    """Non-blocking put: enqueue on the engine, return a queued handle.
+    ``count > 1`` splits the payload into ``count`` equal segments
+    landing ``stride`` bytes apart (one strided descriptor, one
+    coalesced dispatch share — see docs/API.md "Strided transfers")."""
+    return ctx.engine.put(ctx.heap, ctx.teams_by_slot, gptr, value,
+                          stride=stride, count=count)
 
 
-def dart_put_blocking(ctx: DartContext, gptr: GlobalPtr, value) -> None:
+def dart_put_blocking(ctx: DartContext, gptr: GlobalPtr, value, *,
+                      stride: int = 0, count: int = 1) -> None:
     """Blocking put: enqueue + flush + local/remote completion."""
-    h = ctx.engine.put(ctx.heap, ctx.teams_by_slot, gptr, value)
+    h = ctx.engine.put(ctx.heap, ctx.teams_by_slot, gptr, value,
+                       stride=stride, count=count)
     h.wait()
 
 
 def dart_accumulate(ctx: DartContext, gptr: GlobalPtr, value,
-                    op: str = "sum"):
+                    op: str = "sum", *, stride: int = 0,
+                    count: int = 1):
     """Non-blocking element-wise accumulate at the target (the
     ``MPI_Accumulate`` analogue): enqueue on the engine, return a
     queued handle.  Consecutive same-``op`` accumulates to one pool
@@ -312,19 +320,21 @@ def dart_accumulate(ctx: DartContext, gptr: GlobalPtr, value,
     overlapping ranges included, since the ops commute; mixed-op or
     accumulate-vs-put overlap splits the run in queue order."""
     return ctx.engine.accumulate(ctx.heap, ctx.teams_by_slot, gptr,
-                                 value, op)
+                                 value, op, stride=stride, count=count)
 
 
 def dart_accumulate_blocking(ctx: DartContext, gptr: GlobalPtr, value,
-                             op: str = "sum") -> None:
+                             op: str = "sum", *, stride: int = 0,
+                             count: int = 1) -> None:
     """Blocking accumulate: enqueue + flush + local/remote completion."""
     h = ctx.engine.accumulate(ctx.heap, ctx.teams_by_slot, gptr, value,
-                              op)
+                              op, stride=stride, count=count)
     h.wait()
 
 
 def dart_get_accumulate(ctx: DartContext, gptr: GlobalPtr, value,
-                        op: str = "sum"):
+                        op: str = "sum", *, stride: int = 0,
+                        count: int = 1):
     """Fetch-and-accumulate (the ``MPI_Get_accumulate`` analogue):
     flushes the target's ``(pool, row)`` lane and returns
     ``(old_value, handle)`` — the target's typed value from *before*
@@ -332,18 +342,23 @@ def dart_get_accumulate(ctx: DartContext, gptr: GlobalPtr, value,
     the queued form use ``ctx.engine.get_accumulate`` directly and
     ``handle.value()`` later."""
     h = ctx.engine.get_accumulate(ctx.heap, ctx.teams_by_slot, gptr,
-                                  value, op)
+                                  value, op, stride=stride, count=count)
     ctx.engine.flush(h.poolid, h.row)
     return h.value(), h
 
 
-def dart_get_nb(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
+def dart_get_nb(ctx: DartContext, gptr: GlobalPtr, shape, dtype, *,
+                stride: int = 0, count: int = 1):
     """Non-blocking get: enqueue; ``handle.value()`` flushes and yields
-    the typed result.  Consecutive same-size gets coalesce at flush."""
-    return ctx.engine.get(ctx.heap, ctx.teams_by_slot, gptr, shape, dtype)
+    the typed result.  Consecutive same-size gets coalesce at flush.
+    ``count > 1`` gathers ``count`` equal segments ``stride`` bytes
+    apart, returned densely packed in the requested shape."""
+    return ctx.engine.get(ctx.heap, ctx.teams_by_slot, gptr, shape,
+                          dtype, stride=stride, count=count)
 
 
-def dart_get(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
+def dart_get(ctx: DartContext, gptr: GlobalPtr, shape, dtype, *,
+             stride: int = 0, count: int = 1):
     """Issue-immediately get: returns (value, handle).
 
     Flushes the target's ``(pool, row)`` lane (queued puts to that unit
@@ -353,7 +368,8 @@ def dart_get(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
     shape-stable flush path — docs/API.md "Flush cost model"), so it
     is concrete by the time this returns.
     """
-    h = ctx.engine.get(ctx.heap, ctx.teams_by_slot, gptr, shape, dtype)
+    h = ctx.engine.get(ctx.heap, ctx.teams_by_slot, gptr, shape,
+                       dtype, stride=stride, count=count)
     ctx.engine.flush(h.poolid, h.row)
     return h.value(), h
 

@@ -15,19 +15,27 @@ This module removes the shape dependence:
   fixed family of compiled kernels therefore serves *all* epochs; a
   steady-state loop of varying-size epochs performs zero recompiles
   after warmup.
-* **Packed descriptors** — ``rows/offs/lens/starts`` travel as ONE
-  ``(k, 4)`` int32 array (:func:`pack_descriptors`), and every payload
-  byte travels as ONE flat uint8 buffer assembled host-side into a
-  bucketed staging array: two host→device transfers per flush instead
-  of 3–5 tiny ones plus a per-op eager ``jnp.concatenate`` chain.
+* **Packed descriptors** — ``rows/offs/lens/starts/strides/counts``
+  travel as ONE ``(k, 6)`` int32 array (:func:`pack_descriptors`), and
+  every payload byte travels as ONE flat uint8 buffer assembled
+  host-side into a bucketed staging array: two host→device transfers
+  per flush instead of 3–5 tiny ones plus a per-op eager
+  ``jnp.concatenate`` chain.  A descriptor names a *strided run* —
+  ``count`` segments of ``len`` bytes, ``stride`` bytes apart — so a
+  matrix column or tile halo is ONE descriptor, not one per element;
+  contiguous ops are the ``stride=0, count=1`` degenerate case.
 * **Flat-index addressing** — kernels address the arena as a flat byte
-  string: op *i* touches positions ``row*P + off + lane`` for
-  ``lane < len``; masked lanes are routed to distinct out-of-range
-  indices and dropped (scatter, ``mode='drop'``) or filled with zeros
-  (gather, ``mode='fill'``).  Because only valid lanes produce
-  in-range indices, padding never clamps, smears across rows, or needs
-  pool headroom — the bounds check at initiation is the only range
-  requirement.
+  string: op *i* touches positions
+  ``row*P + off + (lane//len)*stride + lane%len`` for
+  ``lane < len*count`` (payloads stay dense in lane order); masked
+  lanes are routed to distinct out-of-range indices and dropped
+  (scatter, ``mode='drop'``) or filled with zeros (gather,
+  ``mode='fill'``).  Because only valid lanes produce in-range
+  indices, padding never clamps, smears across rows, or needs pool
+  headroom — the bounds check at initiation is the only range
+  requirement.  One formula serves contiguous and strided ops alike,
+  so stride/count live in the traced descriptor *data*, never the plan
+  key: a varying-stride loop performs zero recompiles.
 * **Vectorized vs ordered** — runs whose byte ranges are provably
   disjoint (``_RunMeta`` tracks this while the run is grown) dispatch
   as ONE vectorized segmented update (``unique_indices`` scatter);
@@ -45,18 +53,21 @@ This module removes the shape dependence:
 * **Plan cache** — compiled executables are cached process-wide by
   ``(kind, impl, arena shape, buckets, ...)``; the engine counts
   misses (``compile_count``) and hits (``plan_cache_hits``) so tests
-  and ``BENCH_engine/v5`` can *assert* the steady state compiles
+  and ``BENCH_engine/v6`` can *assert* the steady state compiles
   nothing.
 
 ``impl='pallas'`` selects the hand-tiled Pallas kernel (grid over
 descriptors, scalar-prefetched descriptor table; interpret-mode off
 TPU), mirroring the ``impl`` switch in :mod:`repro.kernels.ops`.  The
 Pallas path stages pad-to-bucket windows through VMEM and therefore
-requires ``off + seg <= pool_bytes`` for every descriptor;
-:func:`pallas_ok` checks this host-side and callers fall back to the
-XLA (``'ref'``) kernels when it fails, so semantics never depend on
-the impl choice.  TPU grids execute sequentially, so the one Pallas
-scatter kernel serves ordered runs too.
+requires ``off + (count-1)*stride + sseg <= pool_bytes`` for every
+descriptor (``sseg`` = the per-segment bucket of
+:func:`strided_buckets`); :func:`pallas_ok` checks this host-side and
+callers fall back to the XLA (``'ref'``) kernels when it fails, so
+semantics never depend on the impl choice.  TPU grids execute
+sequentially, so the one Pallas scatter kernel serves ordered runs
+too; strided runs widen its grid to ``(k, cb)`` — one step per
+(descriptor, segment).
 """
 
 from __future__ import annotations
@@ -71,12 +82,19 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# descriptor columns: desc[i] = (row, off, len, start[, op])
-# Accumulate descriptors carry a fifth column — the op code — so the
-# packed table is self-describing (telemetry/debugging and the run
-# split rule both read it); the combine function itself is static in
-# the plan key, since XLA must trace it.
-ROW, OFF, LEN, START, OPCODE = 0, 1, 2, 3, 4
+# descriptor columns: desc[i] = (row, off, len, start, stride, count[, op])
+# One descriptor now names a *strided run*: ``count`` segments of
+# ``len`` bytes each, the j-th segment landing at ``off + j*stride``.
+# A contiguous op is the degenerate case ``stride=0, count=1`` (so
+# every pre-existing plan shape is unchanged); padding rows are
+# all-zero (``count=0`` ⇒ zero valid lanes).  Accumulate descriptors
+# carry a seventh column — the op code — so the packed table is
+# self-describing (telemetry/debugging and the run split rule both
+# read it); the combine function itself is static in the plan key,
+# since XLA must trace it.
+ROW, OFF, LEN, START, STRIDE, COUNT, OPCODE = 0, 1, 2, 3, 4, 5, 6
+DESC_COLS = 6           # put/get descriptor width
+ACC_DESC_COLS = 7       # accumulate descriptor width (adds OPCODE)
 
 #: element-wise reduction ops of the reduction plane (dart_accumulate /
 #: dart_allreduce): name → descriptor op code.
@@ -99,27 +117,45 @@ def bucket_pow2(n: int, floor: int = 1) -> int:
 
 def pack_descriptors(rows: Sequence[int], offs: Sequence[int],
                      lens: Sequence[int],
-                     payloads: Optional[Sequence[np.ndarray]] = None
+                     payloads: Optional[Sequence[np.ndarray]] = None,
+                     strides: Optional[Sequence[int]] = None,
+                     counts: Optional[Sequence[int]] = None
                      ) -> Tuple[np.ndarray, Optional[np.ndarray], int]:
-    """Host-side staging: k ops → one bucketed ``(k', 4)`` int32
-    descriptor table (k' = pow2 bucket of k, padded with ``len=0``
+    """Host-side staging: k ops → one bucketed ``(k', 6)`` int32
+    descriptor table (k' = pow2 bucket of k, padded with all-zero
     no-ops) and, for puts, one bucketed flat uint8 payload buffer.
 
-    ``starts`` index into the flat buffer; the buffer carries a
-    trailing ``seg`` bytes of zero margin so a pad-to-bucket window
-    read starting at any valid ``start`` stays in range (the Pallas
-    path relies on this; the XLA path is range-safe regardless).
-    Returns ``(desc, flat, seg)`` with ``flat is None`` for gathers.
+    ``lens`` are **per-segment** bytes; op *i* moves
+    ``lens[i] * counts[i]`` bytes in total (``counts`` defaults to all
+    ones, ``strides`` to all zeros — the contiguous degenerate case,
+    which packs byte-for-byte like the historical ``(k, 4)`` format).
+    The segment-size bucket covers the *total* bytes of the largest
+    op, so a strided run's dense payload/window footprint fits one
+    descriptor row.  ``starts`` index into the flat buffer, where
+    payloads pack densely (segment j of op i at
+    ``start + j*len``); the buffer carries a trailing ``seg`` bytes of
+    zero margin so a pad-to-bucket window read starting at any valid
+    ``start`` stays in range (the Pallas path relies on this; the XLA
+    path is range-safe regardless).  Returns ``(desc, flat, seg)``
+    with ``flat is None`` for gathers.
     """
     k = len(rows)
     kb = bucket_pow2(k, K_FLOOR)
-    seg = bucket_pow2(max(lens) if lens else 1, SEG_FLOOR)
-    desc = np.zeros((kb, 4), np.int32)
+    lens = np.asarray(lens, np.int64)
+    counts = (np.ones(k, np.int64) if counts is None
+              else np.asarray(counts, np.int64))
+    strides = (np.zeros(k, np.int64) if strides is None
+               else np.asarray(strides, np.int64))
+    totals = lens * counts
+    seg = bucket_pow2(int(totals.max()) if k else 1, SEG_FLOOR)
+    desc = np.zeros((kb, DESC_COLS), np.int32)
     desc[:k, ROW] = rows
     desc[:k, OFF] = offs
     desc[:k, LEN] = lens
+    desc[:k, STRIDE] = strides
+    desc[:k, COUNT] = counts
     starts = np.zeros(k, np.int64)
-    np.cumsum(lens[:-1], out=starts[1:])
+    np.cumsum(totals[:-1], out=starts[1:])
     desc[:k, START] = starts
     flat = None
     if payloads is not None:
@@ -177,29 +213,41 @@ def identity_bytes(op: str, dtype) -> np.ndarray:
 def pack_acc_descriptors(rows: Sequence[int], offs: Sequence[int],
                          lens: Sequence[int],
                          payloads: Sequence[np.ndarray],
-                         op: str, dtype
+                         op: str, dtype,
+                         strides: Optional[Sequence[int]] = None,
+                         counts: Optional[Sequence[int]] = None
                          ) -> Tuple[np.ndarray, np.ndarray, int]:
     """Host-side staging for an accumulate run: k read-modify-write ops
-    → one bucketed ``(k', 5)`` int32 descriptor table (columns
-    ``row, off, len, start, op``) plus one flat uint8 payload buffer.
+    → one bucketed ``(k', 7)`` int32 descriptor table (columns
+    ``row, off, len, start, stride, count, op``; ``lens`` per-segment,
+    as in :func:`pack_descriptors`) plus one flat uint8 payload buffer.
 
     Unlike :func:`pack_descriptors` (whose payloads pack densely), each
     accumulate op owns a full seg-aligned slot (``start = i * seg``)
     **pre-filled with the op's identity element**
     (:func:`identity_bytes`): every padded lane — the tail of a short
-    payload and all lanes of ``len=0`` bucket-padding descriptors —
-    decodes to the identity, so combining it is arithmetically a no-op
-    even before the index mask drops it.  The flat staging size is a
-    pure function of the ``(k', seg)`` buckets, keeping warm epochs on
-    the cached plan.
+    payload and all lanes of bucket-padding descriptors — decodes to
+    the identity, so combining it is arithmetically a no-op even
+    before the index mask drops it.  A strided op's payload packs
+    densely *within* its slot (``len*count`` bytes, then identity
+    fill).  The flat staging size is a pure function of the
+    ``(k', seg)`` buckets, keeping warm epochs on the cached plan.
     """
     k = len(rows)
     kb = bucket_pow2(k, K_FLOOR)
-    seg = bucket_pow2(max(lens) if lens else 1, SEG_FLOOR)
-    desc = np.zeros((kb, 5), np.int32)
+    lens = np.asarray(lens, np.int64)
+    counts = (np.ones(k, np.int64) if counts is None
+              else np.asarray(counts, np.int64))
+    strides = (np.zeros(k, np.int64) if strides is None
+               else np.asarray(strides, np.int64))
+    totals = lens * counts
+    seg = bucket_pow2(int(totals.max()) if k else 1, SEG_FLOOR)
+    desc = np.zeros((kb, ACC_DESC_COLS), np.int32)
     desc[:k, ROW] = rows
     desc[:k, OFF] = offs
     desc[:k, LEN] = lens
+    desc[:k, STRIDE] = strides
+    desc[:k, COUNT] = counts
     desc[:k, START] = np.arange(k, dtype=np.int64) * seg
     desc[k:, START] = np.arange(k, kb, dtype=np.int64) * seg
     desc[:, OPCODE] = REDUCE_OPS[op]
@@ -227,10 +275,27 @@ def check_flat_addressable(arena_shape: Tuple[int, int]) -> None:
             "ROADMAP: int64-lane variant for >1 GiB heaps)")
 
 
+def strided_buckets(desc: np.ndarray, seg: int) -> Tuple[int, int]:
+    """``(sseg, cb)`` buckets for the 2-D Pallas grid: the per-segment
+    window bytes (pow2 of the largest ``LEN``) and the segment-count
+    grid extent (pow2 of the largest ``COUNT``).  For an all-contiguous
+    run this is exactly ``(seg, 1)`` — every total IS its segment — so
+    contiguous Pallas plans stay in their historical shape family."""
+    lens = desc[:, LEN]
+    counts = desc[:, COUNT]
+    sseg = bucket_pow2(int(lens.max()) if lens.size else 1, SEG_FLOOR)
+    cb = bucket_pow2(int(counts.max()) if counts.size else 1, 1)
+    return min(sseg, seg), cb
+
+
 def pallas_ok(desc: np.ndarray, seg: int, pool_bytes: int) -> bool:
-    """True iff every descriptor's padded window fits the pool — the
-    precondition for the VMEM-windowed Pallas kernels."""
-    return bool(np.all(desc[:, OFF] + seg <= pool_bytes))
+    """True iff every descriptor's padded windows fit the pool — the
+    precondition for the VMEM-windowed Pallas kernels.  A strided
+    descriptor's last segment window starts at
+    ``off + (count-1)*stride`` and spans ``sseg`` padded bytes."""
+    sseg, _ = strided_buckets(desc, seg)
+    last = desc[:, OFF] + np.maximum(desc[:, COUNT] - 1, 0) * desc[:, STRIDE]
+    return bool(np.all(last + sseg <= pool_bytes))
 
 
 # --------------------------------------------------------------------------
@@ -239,12 +304,29 @@ def pallas_ok(desc: np.ndarray, seg: int, pool_bytes: int) -> bool:
 
 
 def _lane_mask(desc: jax.Array, seg: int) -> Tuple[jax.Array, jax.Array]:
-    """(k, seg) lane grid + validity mask (``lane < len``) for a
+    """(k, seg) lane grid + validity mask (``lane < len*count``) for a
     descriptor table; callers turn invalid lanes into out-of-range
-    flat indices (dropped by scatters, zero-filled by gathers)."""
+    flat indices (dropped by scatters, zero-filled by gathers).  Lane
+    space is *dense*: lane ``j*len + r`` is byte ``r`` of segment
+    ``j`` — payloads and gather windows pack without gaps."""
     lane = jnp.arange(seg, dtype=jnp.int32)[None, :]
-    valid = lane < desc[:, LEN][:, None]
+    valid = lane < (desc[:, LEN] * desc[:, COUNT])[:, None]
     return valid, lane
+
+
+def _strided_dst(desc: jax.Array, lane: jax.Array, P) -> jax.Array:
+    """Flat arena byte index per dense lane:
+    ``row*P + off + (lane // len)*stride + lane % len``.  The
+    contiguous degenerate case (``stride=0, count=1``) reduces to the
+    historical ``row*P + off + lane`` for every valid lane — ONE
+    formula serves both, so varying stride/count mixes never leave the
+    plan's shape family.  ``len`` is clamped to 1 so padding rows
+    divide safely; their (garbage) indices are masked off by callers
+    before use."""
+    safe_len = jnp.maximum(desc[:, LEN], 1)[:, None]
+    return (desc[:, ROW][:, None] * P + desc[:, OFF][:, None]
+            + (lane // safe_len) * desc[:, STRIDE][:, None]
+            + lane % safe_len)
 
 
 def _ref_scatter_vec(arena: jax.Array, desc: jax.Array, flat: jax.Array,
@@ -255,7 +337,7 @@ def _ref_scatter_vec(arena: jax.Array, desc: jax.Array, flat: jax.Array,
     n_cells = R * P
     valid, lane = _lane_mask(desc, seg)
     k = desc.shape[0]
-    dst = desc[:, ROW][:, None] * P + desc[:, OFF][:, None] + lane
+    dst = _strided_dst(desc, lane, P)
     oob = n_cells + jnp.arange(k * seg, dtype=jnp.int32).reshape(k, seg)
     dst = jnp.where(valid, dst, oob)
     src_idx = jnp.where(valid, desc[:, START][:, None] + lane,
@@ -275,10 +357,11 @@ def _ref_scatter_ordered(arena: jax.Array, desc: jax.Array,
     lane = jnp.arange(seg, dtype=jnp.int32)
 
     def body(i, a):
-        ln = desc[i, LEN]
-        valid = lane < ln
-        dst = jnp.where(valid, desc[i, ROW] * P + desc[i, OFF] + lane,
-                        n_cells + lane)
+        safe_len = jnp.maximum(desc[i, LEN], 1)
+        valid = lane < desc[i, LEN] * desc[i, COUNT]
+        dst = (desc[i, ROW] * P + desc[i, OFF]
+               + (lane // safe_len) * desc[i, STRIDE] + lane % safe_len)
+        dst = jnp.where(valid, dst, n_cells + lane)
         src = jnp.take(flat, jnp.where(valid, desc[i, START] + lane,
                                        flat.shape[0]),
                        mode="fill", fill_value=0)
@@ -294,9 +377,7 @@ def _ref_gather(arena: jax.Array, desc: jax.Array, *, seg: int
     dispatch; masked lanes read as zero."""
     R, P = arena.shape
     valid, lane = _lane_mask(desc, seg)
-    idx = jnp.where(valid,
-                    desc[:, ROW][:, None] * P + desc[:, OFF][:, None] + lane,
-                    R * P)
+    idx = jnp.where(valid, _strided_dst(desc, lane, P), R * P)
     return jnp.take(arena.reshape(-1), idx, mode="fill", fill_value=0)
 
 
@@ -344,7 +425,7 @@ def _ref_accumulate_vec(arena: jax.Array, desc: jax.Array,
     n_cells = R * P
     valid, lane = _lane_mask(desc, seg)
     k = desc.shape[0]
-    dst = desc[:, ROW][:, None] * P + desc[:, OFF][:, None] + lane
+    dst = _strided_dst(desc, lane, P)
     oob = n_cells + jnp.arange(k * seg, dtype=jnp.int32).reshape(k, seg)
     dst = jnp.where(valid, dst, oob)
     old = jnp.take(arena.reshape(-1), dst, mode="fill",
@@ -373,10 +454,11 @@ def _ref_accumulate_ordered(arena: jax.Array, desc: jax.Array,
     lane = jnp.arange(seg, dtype=jnp.int32)
 
     def body(i, a):
-        ln = desc[i, LEN]
-        valid = lane < ln
-        idx = jnp.where(valid, desc[i, ROW] * P + desc[i, OFF] + lane,
-                        n_cells + lane)
+        safe_len = jnp.maximum(desc[i, LEN], 1)
+        valid = lane < desc[i, LEN] * desc[i, COUNT]
+        idx = (desc[i, ROW] * P + desc[i, OFF]
+               + (lane // safe_len) * desc[i, STRIDE] + lane % safe_len)
+        idx = jnp.where(valid, idx, n_cells + lane)
         old_b = jnp.take(a, jnp.where(valid, idx, n_cells),
                          mode="fill", fill_value=0)
         old_t = _bytes_as(old_b, dt).reshape(eseg)
@@ -398,27 +480,50 @@ def _interpret_default() -> bool:
 
 
 def _pallas_scatter_kernel(desc_ref, flat_ref, arena_ref, o_ref, *,
-                           seg: int):
+                           sseg: int):
+    """Grid step (i, c): segment ``c`` of descriptor ``i``.  Inactive
+    steps (``c >= count`` or a padding row) clamp their window to
+    ``(0, 0)`` and their flat read to ``0``, mask every lane, and
+    write the window back unchanged — safe because the TPU grid is
+    sequential, so the read observes all prior writes."""
     i = pl.program_id(0)
-    row = desc_ref[i, ROW]
-    off = desc_ref[i, OFF]
+    c = pl.program_id(1)
     ln = desc_ref[i, LEN]
-    st = desc_ref[i, START]
-    seg_bytes = flat_ref[pl.ds(st, seg)]
-    window = o_ref[pl.ds(row, 1), pl.ds(off, seg)]
-    lane = jax.lax.broadcasted_iota(jnp.int32, (1, seg), 1)
-    o_ref[pl.ds(row, 1), pl.ds(off, seg)] = jnp.where(
-        lane < ln, seg_bytes[None, :], window)
+    cnt = desc_ref[i, COUNT]
+    active = (c < cnt) & (ln > 0)
+    row = jnp.where(active, desc_ref[i, ROW], 0)
+    off = jnp.where(active, desc_ref[i, OFF] + c * desc_ref[i, STRIDE], 0)
+    st = jnp.where(active, desc_ref[i, START] + c * ln, 0)
+    seg_bytes = flat_ref[pl.ds(st, sseg)]
+    window = o_ref[pl.ds(row, 1), pl.ds(off, sseg)]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, sseg), 1)
+    mask = active & (lane < ln)
+    o_ref[pl.ds(row, 1), pl.ds(off, sseg)] = jnp.where(
+        mask, seg_bytes[None, :], window)
 
 
-def _pallas_gather_kernel(desc_ref, arena_ref, o_ref, *, seg: int):
+def _pallas_gather_kernel(desc_ref, arena_ref, o_ref, *, sseg: int):
+    """Grid step (i, c): read segment ``c`` of descriptor ``i`` from
+    the arena and pack it densely at ``c*len`` of output row ``i``
+    (zero-initialised on the row's first step)."""
     i = pl.program_id(0)
-    row = desc_ref[i, ROW]
-    off = desc_ref[i, OFF]
+    c = pl.program_id(1)
     ln = desc_ref[i, LEN]
-    window = arena_ref[pl.ds(row, 1), pl.ds(off, seg)]
-    lane = jax.lax.broadcasted_iota(jnp.int32, (1, seg), 1)
-    o_ref[...] = jnp.where(lane < ln, window, jnp.uint8(0))
+    cnt = desc_ref[i, COUNT]
+    active = (c < cnt) & (ln > 0)
+    row = jnp.where(active, desc_ref[i, ROW], 0)
+    off = jnp.where(active, desc_ref[i, OFF] + c * desc_ref[i, STRIDE], 0)
+    wr = jnp.where(active, c * ln, 0)
+
+    @pl.when(c == 0)
+    def _zero_row():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    window = arena_ref[pl.ds(row, 1), pl.ds(off, sseg)]
+    cur = o_ref[pl.ds(0, 1), pl.ds(wr, sseg)]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, sseg), 1)
+    mask = active & (lane < ln)
+    o_ref[pl.ds(0, 1), pl.ds(wr, sseg)] = jnp.where(mask, window, cur)
 
 
 def _pallas_acc_kernel(desc_ref, flat_ref, arena_ref, o_ref, *,
@@ -475,20 +580,22 @@ def _pallas_accumulate(arena: jax.Array, desc: jax.Array,
 
 
 def _pallas_scatter(arena: jax.Array, desc: jax.Array, flat: jax.Array,
-                    *, seg: int) -> jax.Array:
-    """Segmented scatter, one grid step per descriptor.  The grid is
-    sequential on TPU (and in interpret mode), so this kernel is valid
-    for ordered (overlapping) runs as well as disjoint ones."""
+                    *, seg: int, sseg: int, cb: int) -> jax.Array:
+    """Segmented scatter over a 2-D ``(descriptor, segment)`` grid.
+    The grid is sequential on TPU (and in interpret mode), so this
+    kernel is valid for ordered (overlapping) runs as well as disjoint
+    ones.  A contiguous run has ``cb == 1, sseg == seg`` — exactly the
+    historical one-step-per-descriptor shape."""
     k = desc.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(k,),
-        in_specs=[pl.BlockSpec(flat.shape, lambda i, *_: (0,)),
-                  pl.BlockSpec(arena.shape, lambda i, *_: (0, 0))],
-        out_specs=pl.BlockSpec(arena.shape, lambda i, *_: (0, 0)),
+        grid=(k, cb),
+        in_specs=[pl.BlockSpec(flat.shape, lambda i, c, *_: (0,)),
+                  pl.BlockSpec(arena.shape, lambda i, c, *_: (0, 0))],
+        out_specs=pl.BlockSpec(arena.shape, lambda i, c, *_: (0, 0)),
     )
     return pl.pallas_call(
-        functools.partial(_pallas_scatter_kernel, seg=seg),
+        functools.partial(_pallas_scatter_kernel, sseg=sseg),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(arena.shape, arena.dtype),
         input_output_aliases={2: 0},       # arena (arg after desc, flat)
@@ -496,19 +603,26 @@ def _pallas_scatter(arena: jax.Array, desc: jax.Array, flat: jax.Array,
     )(desc, flat, arena)
 
 
-def _pallas_gather(arena: jax.Array, desc: jax.Array, *, seg: int
-                   ) -> jax.Array:
+def _pallas_gather(arena: jax.Array, desc: jax.Array, *, seg: int,
+                   sseg: int, cb: int) -> jax.Array:
+    """Segmented gather over a 2-D ``(descriptor, segment)`` grid.
+    Output rows are ``seg`` wide for contiguous runs (``cb == 1`` —
+    byte-identical to the historical layout) and ``seg + sseg`` wide
+    otherwise: the last dense segment write (at ``(count-1)*len``) may
+    overrun ``seg`` by up to ``sseg - len`` padded bytes, and the host
+    decode only reads the first ``nbytes`` of each row anyway."""
     k = desc.shape[0]
+    seg_out = seg if cb == 1 else seg + sseg
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(k,),
-        in_specs=[pl.BlockSpec(arena.shape, lambda i, *_: (0, 0))],
-        out_specs=pl.BlockSpec((1, seg), lambda i, *_: (i, 0)),
+        grid=(k, cb),
+        in_specs=[pl.BlockSpec(arena.shape, lambda i, c, *_: (0, 0))],
+        out_specs=pl.BlockSpec((1, seg_out), lambda i, c, *_: (i, 0)),
     )
     return pl.pallas_call(
-        functools.partial(_pallas_gather_kernel, seg=seg),
+        functools.partial(_pallas_gather_kernel, sseg=sseg),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((k, seg), jnp.uint8),
+        out_shape=jax.ShapeDtypeStruct((k, seg_out), jnp.uint8),
         interpret=_interpret_default(),
     )(desc, arena)
 
@@ -557,18 +671,29 @@ def plan_cache_stats() -> Dict[str, int]:
 
 def scatter_plan(arena_shape: Tuple[int, int], kb: int, seg: int,
                  flat_len: int, *, ordered: bool, impl: str = "ref",
-                 donate: bool = True) -> Tuple[Callable, bool]:
+                 donate: bool = True, sseg: Optional[int] = None,
+                 cb: Optional[int] = None) -> Tuple[Callable, bool]:
     """fn(arena, desc, flat) -> arena'. ``ordered`` keeps the
     sequential loop (overlapping uniform runs); otherwise the
     vectorized unique-index scatter runs.  The Pallas impl is
-    inherently ordered (sequential grid) so one kernel serves both."""
+    inherently ordered (sequential grid) so one kernel serves both.
+
+    ``(sseg, cb)`` are the :func:`strided_buckets` of the run —
+    **Pallas-only** grid parameters, defaulting to the contiguous
+    family ``(seg, 1)``.  The ref kernels read stride/count from the
+    descriptor table itself (ONE traced formula), so ref callers pass
+    ``None`` and a varying-stride loop never leaves the cached plan.
+    """
     check_flat_addressable(arena_shape)
+    sseg = seg if sseg is None else sseg
+    cb = 1 if cb is None else cb
     key = ("scatter", impl, arena_shape, kb, seg, flat_len, ordered,
-           donate)
+           donate, sseg, cb)
 
     def build():
         if impl == "pallas":
-            fn = functools.partial(_pallas_scatter, seg=seg)
+            fn = functools.partial(_pallas_scatter, seg=seg, sseg=sseg,
+                                   cb=cb)
         else:
             fn = functools.partial(
                 _ref_scatter_ordered if ordered else _ref_scatter_vec,
@@ -598,7 +723,13 @@ def accumulate_plan(arena_shape: Tuple[int, int], kb: int, seg: int,
     kernel is a sequential descriptor grid, valid for both.  Fetch
     runs always take the vectorized ref path (the run builder keeps
     them byte-disjoint, so read-all-then-apply-all is
-    order-equivalent and the gathered old windows come for free)."""
+    order-equivalent and the gathered old windows come for free).
+
+    Strided accumulate runs ride the REF kernels only (the engine's
+    impl picker routes any run containing ``count > 1`` to ref): the
+    Pallas RMW kernel's identity-padded slot layout is pinned to the
+    exact ``kb*seg`` flat buffer, which leaves no room for a padded
+    per-segment window scheme."""
     check_flat_addressable(arena_shape)
     dt = jnp.dtype(dtype)
     if op not in REDUCE_OPS:
@@ -628,14 +759,22 @@ def accumulate_plan(arena_shape: Tuple[int, int], kb: int, seg: int,
 
 
 def gather_plan(arena_shape: Tuple[int, int], kb: int, seg: int, *,
-                impl: str = "ref") -> Tuple[Callable, bool]:
-    """fn(arena, desc) -> (kb, seg) uint8 pad-to-bucket windows."""
+                impl: str = "ref", sseg: Optional[int] = None,
+                cb: Optional[int] = None) -> Tuple[Callable, bool]:
+    """fn(arena, desc) -> (kb, >=seg) uint8 pad-to-bucket windows; each
+    op's bytes pack densely from column 0 of its row (decode reads the
+    first ``nbytes``).  ``(sseg, cb)`` as in :func:`scatter_plan`:
+    Pallas-only, ``None`` (→ ``(seg, 1)``) for the ref impl and for
+    contiguous Pallas runs, whose rows stay exactly ``seg`` wide."""
     check_flat_addressable(arena_shape)
-    key = ("gather", impl, arena_shape, kb, seg)
+    sseg = seg if sseg is None else sseg
+    cb = 1 if cb is None else cb
+    key = ("gather", impl, arena_shape, kb, seg, sseg, cb)
 
     def build():
         if impl == "pallas":
-            return jax.jit(functools.partial(_pallas_gather, seg=seg))
+            return jax.jit(functools.partial(_pallas_gather, seg=seg,
+                                             sseg=sseg, cb=cb))
         return jax.jit(functools.partial(_ref_gather, seg=seg))
 
     return cached_plan(key, build)

@@ -122,6 +122,17 @@ class KVBlockPool:
         after a per-target flush yields the typed block."""
         return self.block_ref(bid).get_nb()
 
+    def read_run_nb(self, unit: int, start: int, count: int, step: int = 1):
+        """Queue ONE segmented gather of ``count`` whole blocks at rows
+        ``start, start+step, ...`` of ``unit`` — a single strided
+        descriptor (seg = block bytes, stride = ``step`` rows) instead
+        of ``count`` per-block ``get_nb`` ops.  ``handle.value()`` is
+        the ``(count, block_elems)`` stack in run order."""
+        if count < 1 or step < 1:
+            raise ValueError(f"need count>=1 step>=1, got {count}/{step}")
+        stop = start + (count - 1) * step + 1
+        return self.ga.at[unit, start:stop:step].get_nb()
+
     def flush_unit(self, unit: int) -> None:
         """Per-target flush of one owner's lane (the
         ``MPI_Win_flush_local(rank, win)`` analogue) — other units'

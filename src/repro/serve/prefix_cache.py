@@ -15,10 +15,12 @@ Protocol (docs/API.md "Serving plane"):
   between any prompts with a common padded prefix.
 * **lookup** — a *full* hit (every chunk key present, terminal key has
   a recorded next token) pins each block with a
-  ``dart_fetch_and_add(+1)`` refcount, then ``fetch()`` reads the
-  blocks with queued one-sided ``ga.at[...].get_nb`` and ONE
-  per-target flush per owner unit — the coalescing engine serves the
-  whole prefix in one dispatch per lane.  Partial overlaps fall back
+  ``dart_fetch_and_add(+1)`` refcount, then ``fetch()`` batches the
+  hit's block rows per owner into arithmetic-progression runs and
+  issues ONE strided segmented gather per run (``read_run_nb``) plus
+  ONE per-target flush per owner unit — the whole prefix restores in
+  one dispatch per lane with O(owners) descriptors, not one
+  ``get_nb`` per block.  Partial overlaps fall back
   to recompute (chunked prefill is future work), so refcounts stay
   exact: only full hits pin.
 * **insert** — after a miss's prefill, each chunk's packed K/V is
@@ -97,6 +99,25 @@ def unpack_kv_blocks(blocks: List[np.ndarray], *, n_layers: int,
     return k, v
 
 
+def _index_runs(indices: List[int]) -> List[Tuple[int, int, int]]:
+    """Split sorted distinct row indices into maximal arithmetic-
+    progression runs ``(start, step, count)`` — each run lowers onto
+    ONE strided gather descriptor in :meth:`KVBlockPool.read_run_nb`."""
+    runs: List[Tuple[int, int, int]] = []
+    i, n = 0, len(indices)
+    while i < n:
+        if i + 1 == n:
+            runs.append((indices[i], 1, 1))
+            break
+        step = indices[i + 1] - indices[i]
+        j = i + 1
+        while j + 1 < n and indices[j + 1] - indices[j] == step:
+            j += 1
+        runs.append((indices[i], step, j - i + 1))
+        i = j + 1
+    return runs
+
+
 @dataclasses.dataclass
 class _DirEntry:
     bid: BlockId
@@ -113,6 +134,7 @@ class PrefixStats:
     shared_blocks: int = 0
     insert_skipped: int = 0
     fetch_get_nb_ops: int = 0
+    fetch_runs: int = 0
     fetch_flushes: int = 0
     fetch_dispatches: int = 0
     publish_put_nb_ops: int = 0
@@ -133,21 +155,36 @@ class PrefixHit:
         self._released = False
 
     def fetch(self) -> List[np.ndarray]:
-        """One-sided read of every block: queued ``get_nb`` per block,
-        then ONE per-target flush per owner unit; values decode from
-        the coalesced gather."""
+        """One-sided read of every block, BATCHED per owner: the hit's
+        block rows on each unit are split into maximal arithmetic-
+        progression runs and each run is ONE strided segmented gather
+        (``pool.read_run_nb``) — so a B-block prefix restores in
+        ``O(owners)`` descriptors and one dispatch per owner lane, not
+        ``B`` per-block ``get_nb`` ops."""
         svc, pool = self.service, self.service.pool
         engine = pool.ctx.engine
         with svc._mutex:
             d0 = engine.dispatch_count
-        handles = [pool.read_nb(bid) for bid in self.blocks]
-        units = sorted({bid.unit for bid in self.blocks})
-        for u in units:
+        by_owner: Dict[int, List[int]] = {}
+        for bid in self.blocks:
+            by_owner.setdefault(bid.unit, []).append(bid.index)
+        pending = []                           # (unit, start, step, handle)
+        for u in sorted(by_owner):
+            for start, step, count in _index_runs(sorted(set(by_owner[u]))):
+                pending.append((u, start, step,
+                                pool.read_run_nb(u, start, count, step)))
+        for u in sorted(by_owner):
             pool.flush_unit(u)                 # per-target flush
-        vals = [np.asarray(h.value()) for h in handles]
+        fetched: Dict[BlockId, np.ndarray] = {}
+        for u, start, step, h in pending:
+            stack = np.asarray(h.value())      # (count, block_elems)
+            for i, row in enumerate(stack):
+                fetched[BlockId(unit=u, index=start + i * step)] = row
+        vals = [fetched[bid] for bid in self.blocks]
         with svc._mutex:
-            svc.stats.fetch_get_nb_ops += len(handles)
-            svc.stats.fetch_flushes += len(units)
+            svc.stats.fetch_get_nb_ops += len(pending)
+            svc.stats.fetch_runs += len(pending)
+            svc.stats.fetch_flushes += len(by_owner)
             svc.stats.fetch_dispatches += engine.dispatch_count - d0
         return vals
 

@@ -264,7 +264,7 @@ def test_engine_profile_machine_readable():
     from benchmarks import put_get
     profile = put_get.engine_profile(repeats=2, quick=True)
     s = profile["series"]
-    assert profile["schema"] == "BENCH_engine/v5"
+    assert profile["schema"] == "BENCH_engine/v6"
     assert s["blocking"]["dispatches"] == profile["n_ops"]
     assert s["coalesced"]["dispatches"] == 1
     assert s["mixed_size_coalesced"]["dispatches"] == 1
@@ -288,6 +288,15 @@ def test_engine_profile_machine_readable():
     assert rp["allreduce_compiles_cold"] >= 1
     assert rp["allreduce_warm_recompiles"] == 0
     assert rp["recompiles_steady_state"] == 0
+    # v6 strided IR: a column of N elements is ONE dispatch, its µs/op
+    # stays within ~2x of the contiguous row path, and a varying-stride
+    # loop at fixed buckets never recompiles (stride is plan DATA)
+    sd = profile["strided"]
+    assert sd["dispatches_per_strided_put"] == 1
+    assert sd["dispatches_per_strided_get"] == 1
+    assert sd["recompiles_steady_state"] == 0
+    nr = profile["narray"]
+    assert nr["get_col_dispatches"] <= nr["owning_tiles"]
     import json
     json.dumps(profile)                  # machine-readable, no jnp leaks
 

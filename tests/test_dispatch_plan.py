@@ -44,7 +44,7 @@ def test_pack_descriptors_pads_with_noops():
         [1, 2, 0], [10, 20, 30], [3, 5, 2],
         [np.full(3, 7, np.uint8), np.full(5, 8, np.uint8),
          np.full(2, 9, np.uint8)])
-    assert desc.shape == (4, 4)                  # k=3 → bucket 4
+    assert desc.shape == (4, 6)                  # k=3 → bucket 4
     assert desc[3, sc.LEN] == 0                  # padding is a no-op
     assert seg == sc.SEG_FLOOR
     assert flat.shape[0] >= 10 + seg             # payload + window margin
@@ -76,7 +76,7 @@ def test_pack_acc_descriptors_identity_padded():
             np.asarray([2.0, 4.0], np.float32).view(np.uint8)]
     desc, flat, seg = sc.pack_acc_descriptors(
         [0, 1], [32, 64], [4, 8], pays, "prod", jnp.float32)
-    assert desc.shape == (4, 5)                    # k=2 → bucket 4, +op col
+    assert desc.shape == (4, 7)                    # k=2 → bucket 4, +op col
     assert list(desc[:, sc.OPCODE]) == [sc.REDUCE_OPS["prod"]] * 4
     np.testing.assert_array_equal(desc[:2, sc.LEN], [4, 8])
     np.testing.assert_array_equal(desc[:, sc.START],

@@ -34,6 +34,12 @@ def test_halo_exchange():
     assert "OK — one-sided halo exchange matches" in out
 
 
+def test_narray_stencil():
+    out = run_example("narray_stencil.py")
+    assert "OK — tiled NArray stencil matches dense reference" in out
+    assert "halo dispatches/step" in out
+
+
 def test_serve_batch():
     out = run_example("serve_batch.py")
     assert "completed 10 requests" in out

@@ -113,27 +113,32 @@ def test_multidim_leading_axis_runs(ctx):
     assert float(np.asarray(ga.at[0, 2, 1].get())) == 7.0
 
 
-def test_non_contiguous_indexing_rejected():
+def test_non_contiguous_indexing_lowers_or_rejects():
+    # strided selections now lower to ONE (seg, stride, count) run
+    assert _element_run((8,), slice(0, 8, 2)) == (0, (4,), 1, 2, 4)
+    assert _element_run((4, 3), (slice(1, 3), 1)) == (4, (2,), 1, 3, 2)
+    assert _element_run((4, 3), (slice(1, 3), slice(0, 2))) == (3, (2, 2), 2, 3, 2)
+    # column selections after a FULL slice are strided runs too
+    assert _element_run((4, 3), (slice(None), 1)) == (1, (4,), 1, 3, 4)
+    assert _element_run((4, 3), (slice(None), slice(0, 2))) == (0, (4, 2), 2, 3, 4)
+    # genuinely unaddressable: >1 strided level after dense-tail collapse
     with pytest.raises(IndexError):
-        _element_run((8,), slice(0, 8, 2))     # strided
-    with pytest.raises(IndexError):
-        _element_run((4, 3), (slice(1, 3), 1))  # int after slice
-    with pytest.raises(IndexError):
-        _element_run((4, 3), (slice(1, 3), slice(0, 2)))  # partial after
+        _element_run((4, 3, 2), (slice(0, 4, 2), slice(0, 2), slice(0, 1)))
     with pytest.raises(IndexError):
         _element_run((4,), (1, 2))             # too many indices
     with pytest.raises(IndexError):
         _element_run((4,), 4)                  # out of range
     with pytest.raises(TypeError):
         _element_run((4,), "x")
-    # column selections after a FULL slice are gathers, not runs
-    with pytest.raises(IndexError):
-        _element_run((4, 3), (slice(None), 1))          # int after full
-    with pytest.raises(IndexError):
-        _element_run((4, 3), (slice(None), slice(0, 2)))  # partial after full
-    # full trailing slices stay contiguous
-    assert _element_run((4, 3), (slice(1, 3), slice(None))) == (3, (2, 3))
-    assert _element_run((4, 3), (slice(None), slice(None))) == (0, (4, 3))
+    with pytest.raises(ValueError):
+        _element_run((8,), slice(None, None, -1))  # negative step
+    # step > extent degenerates to the first element, not an error
+    assert _element_run((8,), slice(0, 8, 16)) == (0, (1,), 1, 0, 1)
+    # empty slice -> zero-element marker run
+    assert _element_run((8,), slice(3, 3)) == (3, (0,), 0, 0, 1)
+    # full trailing slices stay contiguous (stride 0 / count 1 degenerate)
+    assert _element_run((4, 3), (slice(1, 3), slice(None))) == (3, (2, 3), 6, 0, 1)
+    assert _element_run((4, 3), (slice(None), slice(None))) == (0, (4, 3), 12, 0, 1)
 
 
 def test_put_shape_mismatch_raises(ctx):

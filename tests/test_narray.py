@@ -1,0 +1,200 @@
+"""DASH-style NArray container tests (ISSUE 8 tentpole, container half).
+
+Distribution patterns (blocked / cyclic / block-cyclic / tiled) are
+checked for owner-map/index-map consistency and full roundtrips against
+numpy; the algorithm set (``copy`` / ``transform`` / ``min_element`` /
+``reduce``) runs differentially against the same host mirror.  The
+``engine_impl`` fixture runs everything under both batched-kernel
+implementations; tiled column access additionally pins the strided-IR
+dispatch count (one gather per owning tile).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (BlockCyclicDist, BlockedDist, CyclicDist, NArray,
+                        TileDist, dart_exit, dart_init, narray_copy)
+from repro.core.runtime import DartConfig
+
+N_UNITS = 4
+
+
+@pytest.fixture()
+def ctx(engine_impl):
+    c = dart_init(n_units=N_UNITS, config=DartConfig(
+        non_collective_pool_bytes=1 << 14, team_pool_bytes=1 << 14))
+    c.engine.impl = engine_impl
+    yield c
+    dart_exit(c)
+
+
+ALL_1D_DISTS = [BlockedDist(), CyclicDist(), BlockCyclicDist(2),
+                BlockCyclicDist(3)]
+
+
+# ---------------------------------------------------------------------------
+# pattern algebra (no runtime needed)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", ALL_1D_DISTS)
+@pytest.mark.parametrize("total", [1, 4, 11, 16])
+def test_owner_and_index_map_are_inverse(dist, total):
+    shape = dist.bind((total,), N_UNITS)
+    seen = {}
+    for u in range(N_UNITS):
+        gmap = dist.global_index_map(u).reshape(-1)
+        for loc, g in enumerate(gmap):
+            if g >= 0:
+                seen[int(g)] = (u, loc)
+    assert sorted(seen) == list(range(total))      # exact cover, no dupes
+    for g in range(total):
+        assert dist.owner(g) == seen[g]
+
+
+def test_tile_owner_and_index_map_are_inverse():
+    dist = TileDist((2, 2))
+    dist.bind((5, 7), 4)                           # uneven: padded tiles
+    seen = {}
+    for u in range(4):
+        gmap = dist.global_index_map(u).reshape(-1)
+        for loc, g in enumerate(gmap):
+            if g >= 0:
+                seen[int(g)] = (u, loc)
+    assert sorted(seen) == list(range(35))
+    for g in range(35):
+        assert dist.owner(g) == seen[g]
+
+
+def test_dist_validation():
+    with pytest.raises(ValueError):
+        CyclicDist().bind((4, 4), 4)               # cyclic is 1-D
+    with pytest.raises(ValueError):
+        TileDist((3, 2)).bind((6, 6), 4)           # grid != team size
+    with pytest.raises(ValueError):
+        TileDist((2, 2)).bind((6,), 4)             # tiled is 2-D
+    with pytest.raises(ValueError):
+        BlockCyclicDist(0)
+
+
+# ---------------------------------------------------------------------------
+# container roundtrips + element access
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", ALL_1D_DISTS)
+def test_roundtrip_and_scalar_access_1d(ctx, dist):
+    na = NArray(ctx, (13,), jnp.float32, dist=dist)
+    ref = np.random.RandomState(5).randn(13).astype(np.float32)
+    na.from_numpy(ref)
+    np.testing.assert_array_equal(na.to_numpy(), ref)
+    assert float(na[7]) == ref[7]
+    na[7] = -1.5
+    ref[7] = -1.5
+    np.testing.assert_array_equal(na.to_numpy(), ref)
+
+
+def test_roundtrip_blocked_2d_uneven(ctx):
+    na = NArray(ctx, (7, 3), jnp.int32, dist="blocked")
+    ref = np.arange(21, dtype=np.int32).reshape(7, 3)
+    na.from_numpy(ref)
+    np.testing.assert_array_equal(na.to_numpy(), ref)
+    assert int(na[6, 2]) == 20                     # last row (padded unit)
+    with pytest.raises(IndexError):
+        na[7, 0]
+    with pytest.raises(IndexError):
+        na[21]
+
+
+def test_roundtrip_tiled(ctx):
+    na = NArray(ctx, (6, 6), jnp.float32, dist=TileDist((2, 2)))
+    ref = np.random.RandomState(9).randn(6, 6).astype(np.float32)
+    na.from_numpy(ref)
+    np.testing.assert_array_equal(na.to_numpy(), ref)
+    assert float(na[4, 5]) == ref[4, 5]
+
+
+def test_tiled_get_col_is_strided_one_dispatch_per_tile(ctx):
+    """A global column read lowers to ONE strided gather per owning
+    tile (seg = 1 elem, stride = tile cols, count = tile rows)."""
+    na = NArray(ctx, (6, 6), jnp.float32, dist=TileDist((2, 2)), shm=False)
+    ref = np.random.RandomState(2).randn(6, 6).astype(np.float32)
+    na.from_numpy(ref)
+    ctx.engine.flush()
+    d0 = ctx.engine.dispatch_count
+    col = na.get_col(1)
+    used = ctx.engine.dispatch_count - d0
+    np.testing.assert_array_equal(col, ref[:, 1])
+    assert used <= 2                               # 2 owning tiles, not 6 rows
+    with pytest.raises(TypeError):
+        NArray(ctx, (8,), jnp.float32, dist="blocked").get_col(0)
+
+
+# ---------------------------------------------------------------------------
+# algorithm set
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", ALL_1D_DISTS)
+def test_min_element_global_index(ctx, dist):
+    na = NArray(ctx, (11,), jnp.float32, dist=dist)
+    ref = np.random.RandomState(3).randn(11).astype(np.float32)
+    na.from_numpy(ref)
+    g, v = na.min_element()
+    assert g == int(ref.argmin())
+    assert float(v) == ref.min()
+
+
+def test_min_element_tie_resolves_lowest_index(ctx):
+    na = NArray(ctx, (8,), jnp.int32, dist=CyclicDist())
+    ref = np.array([5, 1, 9, 1, 7, 1, 8, 6], np.int32)
+    na.from_numpy(ref)
+    g, v = na.min_element()
+    assert (g, int(v)) == (1, 1)
+
+
+@pytest.mark.parametrize("op", ["sum", "prod", "min", "max"])
+def test_reduce_matches_numpy(ctx, op):
+    na = NArray(ctx, (9,), jnp.int32, dist=BlockCyclicDist(2))
+    ref = np.random.RandomState(4).randint(1, 5, size=9).astype(np.int32)
+    na.from_numpy(ref)
+    want = {"sum": ref.sum(), "prod": ref.prod(),
+            "min": ref.min(), "max": ref.max()}[op]
+    assert int(na.reduce(op)) == int(want)
+
+
+def test_transform_in_place_and_out(ctx):
+    na = NArray(ctx, (10,), jnp.float32, dist=CyclicDist())
+    ref = np.arange(10, dtype=np.float32)
+    na.from_numpy(ref)
+    na.transform(lambda x: x * 3 + 1)
+    np.testing.assert_array_equal(na.to_numpy(), ref * 3 + 1)
+    out = NArray(ctx, (10,), jnp.float32, dist=CyclicDist())
+    na.transform(lambda x: -x, out=out)
+    np.testing.assert_array_equal(out.to_numpy(), -(ref * 3 + 1))
+    bad = NArray(ctx, (10,), jnp.float32, dist="blocked")
+    with pytest.raises(ValueError):
+        na.transform(lambda x: x, out=bad)
+
+
+def test_copy_same_and_cross_distribution(ctx):
+    ref = np.random.RandomState(6).randn(12).astype(np.float32)
+    src = NArray(ctx, (12,), jnp.float32, dist=CyclicDist())
+    src.from_numpy(ref)
+    same = NArray(ctx, (12,), jnp.float32, dist=CyclicDist())
+    narray_copy(src, same)
+    np.testing.assert_array_equal(same.to_numpy(), ref)
+    cross = NArray(ctx, (12,), jnp.float32, dist=BlockCyclicDist(3))
+    narray_copy(src, cross)
+    np.testing.assert_array_equal(cross.to_numpy(), ref)
+    with pytest.raises(ValueError):
+        narray_copy(src, NArray(ctx, (8,), jnp.float32, dist="blocked"))
+
+
+def test_route_stats_count_classifier_decisions(ctx):
+    na = NArray(ctx, (8,), jnp.float32, dist="blocked")       # shm=True
+    na.fill(1.0)
+    na.to_numpy()
+    assert na.route_stats["local"] == N_UNITS      # zero-copy host views
+    nb = NArray(ctx, (8,), jnp.float32, dist="blocked", shm=False)
+    nb.fill(1.0)
+    nb.to_numpy()
+    assert nb.route_stats["onesided"] == N_UNITS   # forced engine path

@@ -217,6 +217,52 @@ def test_prefix_insert_then_lookup_roundtrips_blocks(ctx):
     assert svc.stats.hits == 1 and svc.stats.misses == 1
 
 
+def test_prefix_fetch_batches_one_gather_per_owner(ctx):
+    """SATELLITE: restoring a B-block prefix issues ONE segmented
+    strided gather per owner run — dispatch_count grows by the number
+    of owner lanes, not by B (was: one get_nb per block)."""
+    svc, pool = _svc(ctx, 8)
+    toks = _prompt(*range(16))                     # 4 chunks
+    pays = _payloads(4, seed=7)
+    svc.insert(toks, pays, next_token=9)
+    ctx.engine.flush()                             # drain the insert puts
+    hit = svc.lookup(toks)
+    owners = {b.unit for b in hit.blocks}
+    assert len(hit.blocks) == 4 and len(owners) == N_UNITS
+    d0 = ctx.engine.dispatch_count
+    vals = hit.fetch()
+    used = ctx.engine.dispatch_count - d0
+    assert used == len(owners)                     # 1 dispatch per lane
+    assert used < len(hit.blocks)                  # NOT per-block
+    # round-robin allocation gives consecutive rows per owner -> the
+    # per-owner batch is exactly one arithmetic-progression run
+    assert svc.stats.fetch_runs == len(owners)
+    assert svc.stats.fetch_get_nb_ops == len(owners)
+    for got, want in zip(vals, pays):
+        np.testing.assert_array_equal(got, want)
+    hit.release()
+
+
+def test_pool_read_run_nb_strided_stack(pool):
+    """read_run_nb(step>1) is one strided gather returning the block
+    stack in run order, byte-identical to per-block reads."""
+    rng = np.random.RandomState(11)
+    unit = pool.ga.units[0]
+    rows = [0, 2]                                  # stride-2 row run
+    pays = {r: rng.randn(BLOCK_ELEMS).astype(np.float32) for r in rows}
+    for r, p in pays.items():
+        pool.write_nb(BlockId(unit=unit, index=r), p)
+    d0 = pool.ctx.engine.dispatch_count
+    h = pool.read_run_nb(unit, start=0, count=2, step=2)
+    pool.flush_unit(unit)
+    stack = np.asarray(h.value())
+    assert stack.shape == (2, BLOCK_ELEMS)
+    # one flush: the queued puts and the strided gather ride <=2 dispatches
+    assert pool.ctx.engine.dispatch_count - d0 <= 2
+    for i, r in enumerate(rows):
+        np.testing.assert_array_equal(stack[i], pays[r])
+
+
 def test_prefix_shared_chunks_not_republished(ctx):
     svc, pool = _svc(ctx, 8)
     a = _prompt(*range(8))

@@ -1,0 +1,323 @@
+"""Differential property suite for the strided transfer IR (ISSUE 8).
+
+Every test drives the engine through strided ``(stride, count)`` runs and
+checks the resulting arena / fetched bytes against a naive element-wise
+numpy oracle.  The ``engine_impl`` fixture (conftest.py) runs the whole
+module under BOTH batched-kernel implementations — ``ref`` and the
+hand-tiled ``pallas`` descriptor-grid kernels — so stridedness can never
+become a ref-only feature.
+
+Covered:
+
+* strided put / get / accumulate byte-identity vs the oracle,
+* N-element fixed-stride transfers dispatching as 1 coalesced dispatch,
+* overlap splitting (covering-interval disjointness is conservative:
+  overlapping strided runs demote/split but stay byte-correct),
+* pow2 bucketing of the count column — varying ``count`` loops reuse one
+  plan per bucket (zero steady-state recompiles under ref),
+* randomized interleavings of contiguous + strided puts/accumulates.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import dart_exit, dart_init
+from repro.core.runtime import DartConfig
+from repro.core import runtime as rt
+from repro.kernels.segmented_copy import bucket_pow2
+
+N_UNITS = 4
+POOL = 1 << 13
+
+
+@pytest.fixture()
+def ctx(engine_impl):
+    c = dart_init(n_units=N_UNITS, config=DartConfig(
+        non_collective_pool_bytes=POOL, team_pool_bytes=POOL))
+    c.engine.impl = engine_impl
+    yield c
+    dart_exit(c)
+
+
+def _oracle_scatter(base, off_b, seg_b, stride_b, count, payload):
+    """Element-wise reference: write count segments of seg_b bytes."""
+    out = bytearray(base)
+    for s in range(count):
+        dst = off_b + s * stride_b
+        out[dst:dst + seg_b] = payload[s * seg_b:(s + 1) * seg_b]
+    return bytes(out)
+
+
+def _unit_bytes(ctx, ga, unit):
+    return np.asarray(ga[unit].get()).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# put / get byte-identity + single-dispatch acceptance
+# ---------------------------------------------------------------------------
+
+def test_strided_put_matches_oracle_one_dispatch(ctx):
+    """ACCEPTANCE: a strided put of N elements with fixed stride is ONE
+    coalesced dispatch and byte-identical to the element-wise oracle."""
+    ga = ctx.alloc((6, 5), jnp.float32)
+    base = np.arange(30, dtype=np.float32).reshape(6, 5)
+    ga[1].put(jnp.asarray(base))
+    col = np.array([9., 8., 7., 6., 5., 4.], np.float32)
+    d0 = ctx.engine.dispatch_count
+    h = ga.at[1, :, 3].put_nb(jnp.asarray(col))
+    h.wait()
+    assert ctx.engine.dispatch_count == d0 + 1     # 1, not N=6
+    want = _oracle_scatter(base.tobytes(), off_b=3 * 4, seg_b=4,
+                           stride_b=5 * 4, count=6, payload=col.tobytes())
+    assert _unit_bytes(ctx, ga, 1) == want
+
+
+def test_strided_get_matches_oracle_one_dispatch(ctx):
+    ga = ctx.alloc((8, 3), jnp.int32)
+    base = np.arange(24, dtype=np.int32).reshape(8, 3)
+    ga[2].put(jnp.asarray(base))
+    d0 = ctx.engine.dispatch_count
+    got = ga.at[2, 1:8:3, 0].get()                 # rows 1,4,7 col 0
+    assert ctx.engine.dispatch_count == d0 + 1
+    np.testing.assert_array_equal(np.asarray(got), base[1:8:3, 0])
+
+
+def test_strided_gets_coalesce_across_targets(ctx):
+    """N strided get_nb ops to distinct units flush as ONE dispatch."""
+    ga = ctx.alloc((4, 4), jnp.float32)
+    ref = {}
+    for u in ga.units:
+        m = np.random.RandomState(u).randn(4, 4).astype(np.float32)
+        ga[u].put(jnp.asarray(m))
+        ref[u] = m
+    ctx.engine.flush()
+    d0 = ctx.engine.dispatch_count
+    hs = {u: ga.at[u, :, 2].get_nb() for u in ga.units}
+    ctx.engine.flush()
+    assert ctx.engine.dispatch_count == d0 + 1
+    for u, h in hs.items():
+        np.testing.assert_array_equal(np.asarray(h.value()), ref[u][:, 2])
+
+
+def test_strided_and_contiguous_mix_one_dispatch(ctx):
+    """A flush mixing contiguous and strided puts stays one dispatch
+    (stride 0 / count 1 is the degenerate row of the same descriptor)."""
+    ga = ctx.alloc((4, 4), jnp.float32)
+    ga[0].put(jnp.zeros((4, 4), jnp.float32))
+    ga[1].put(jnp.zeros((4, 4), jnp.float32))
+    ctx.engine.flush()
+    d0 = ctx.engine.dispatch_count
+    ga.at[0, 1].put_nb(jnp.full((4,), 5.0))        # contiguous row
+    ga.at[1, :, 1].put_nb(jnp.full((4,), 7.0))     # strided column
+    ctx.engine.flush()
+    assert ctx.engine.dispatch_count == d0 + 1
+    np.testing.assert_array_equal(np.asarray(ga[0].get())[1], 5.0)
+    np.testing.assert_array_equal(np.asarray(ga[1].get())[:, 1], 7.0)
+
+
+# ---------------------------------------------------------------------------
+# overlap splitting
+# ---------------------------------------------------------------------------
+
+def test_overlapping_strided_puts_last_writer_wins(ctx):
+    """Two strided puts whose covering intervals overlap split/demote
+    but preserve queue order (last-writer-wins), like contiguous ops."""
+    ga = ctx.alloc((16,), jnp.int32)
+    ga[0].put(jnp.zeros((16,), jnp.int32))
+    ctx.engine.flush()
+    ga.at[0, 0:16:2].put_nb(jnp.full((8,), 1, jnp.int32))
+    ga.at[0, 0:16:4].put_nb(jnp.full((4,), 2, jnp.int32))  # overlaps
+    ctx.engine.flush()
+    want = np.zeros(16, np.int32)
+    want[0:16:2] = 1
+    want[0:16:4] = 2
+    np.testing.assert_array_equal(np.asarray(ga[0].get()), want)
+
+
+def test_strided_put_then_covering_contiguous_put(ctx):
+    ga = ctx.alloc((12,), jnp.float32)
+    ga[0].put(jnp.zeros((12,), jnp.float32))
+    ctx.engine.flush()
+    ga.at[0, 0:12:3].put_nb(jnp.full((4,), 3.0))
+    ga.at[0, 2:9].put_nb(jnp.full((7,), 4.0))      # covers part of it
+    ctx.engine.flush()
+    want = np.zeros(12, np.float32)
+    want[0:12:3] = 3.0
+    want[2:9] = 4.0
+    np.testing.assert_array_equal(np.asarray(ga[0].get()), want)
+
+
+def test_disjoint_strided_interleave_still_one_dispatch(ctx):
+    """Interleaved columns (disjoint covering proven per element but
+    conservative intervals overlap) stay byte-correct regardless of
+    how the engine splits them."""
+    ga = ctx.alloc((4, 4), jnp.float32)
+    ga[3].put(jnp.zeros((4, 4), jnp.float32))
+    ctx.engine.flush()
+    ga.at[3, :, 0].put_nb(jnp.full((4,), 1.0))
+    ga.at[3, :, 3].put_nb(jnp.full((4,), 2.0))
+    ctx.engine.flush()
+    got = np.asarray(ga[3].get())
+    np.testing.assert_array_equal(got[:, 0], 1.0)
+    np.testing.assert_array_equal(got[:, 3], 2.0)
+    np.testing.assert_array_equal(got[:, 1:3], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# strided accumulate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op,dt", [("sum", jnp.float32), ("max", jnp.int32),
+                                   ("prod", jnp.float32), ("min", jnp.int32)])
+def test_strided_accumulate_matches_oracle(ctx, op, dt):
+    ga = ctx.alloc((5, 4), dt)
+    rng = np.random.RandomState(17)
+    base = rng.randint(1, 9, size=(5, 4)).astype(np.dtype(dt))
+    ga[0].put(jnp.asarray(base))
+    ctx.engine.flush()
+    upd = rng.randint(1, 9, size=(5,)).astype(np.dtype(dt))
+    ga.at[0, :, 2].accumulate(jnp.asarray(upd), op)
+    ctx.engine.flush()
+    combine = {"sum": np.add, "prod": np.multiply,
+               "min": np.minimum, "max": np.maximum}[op]
+    want = base.copy()
+    want[:, 2] = combine(base[:, 2], upd)
+    np.testing.assert_array_equal(np.asarray(ga[0].get()), want)
+
+
+def test_strided_get_accumulate_returns_pre_values(ctx):
+    ga = ctx.alloc((4, 3), jnp.int32)
+    base = np.arange(12, dtype=np.int32).reshape(4, 3)
+    ga[1].put(jnp.asarray(base))
+    ctx.engine.flush()
+    old = ga.at[1, :, 1].get_accumulate(jnp.full((4,), 10, jnp.int32), "sum")
+    ctx.engine.flush()
+    np.testing.assert_array_equal(np.asarray(old), base[:, 1])
+    got = np.asarray(ga[1].get())
+    np.testing.assert_array_equal(got[:, 1], base[:, 1] + 10)
+
+
+# ---------------------------------------------------------------------------
+# pow2 bucketing of count + plan reuse
+# ---------------------------------------------------------------------------
+
+def test_count_buckets_pow2_zero_steady_state_recompiles(ctx):
+    """A loop over varying (stride, count) geometries reuses cached
+    plans after warmup: under ref the descriptor is pure data, so a
+    second sweep of the SAME bucket shapes compiles nothing new."""
+    if ctx.engine.impl == "pallas":
+        pytest.skip("pallas grids rebucket by (sseg, cb); ref is the "
+                    "plan-stability pin (see check_bench_schema)")
+    ga = ctx.alloc((16, 8), jnp.float32)
+    ga[0].put(jnp.zeros((16, 8), jnp.float32))
+    ctx.engine.flush()
+
+    def sweep():
+        for count in (2, 3, 5, 8, 13):
+            ga.at[0, 0:count, 1].put_nb(
+                jnp.full((count,), float(count)))
+            ctx.engine.flush()
+            _ = ga.at[0, 0:count, 2].get()
+    sweep()                                        # warmup: compiles
+    c0 = ctx.engine.compile_count
+    sweep()                                        # steady state
+    assert ctx.engine.compile_count == c0          # zero recompiles
+    assert ctx.engine.plan_cache_hits > 0
+
+
+def test_bucket_pow2_count_floor():
+    assert bucket_pow2(1, 1) == 1
+    assert bucket_pow2(3, 1) == 4
+    assert bucket_pow2(5, 1) == 8
+    assert bucket_pow2(8, 1) == 8
+
+
+# ---------------------------------------------------------------------------
+# randomized differential interleavings
+# ---------------------------------------------------------------------------
+
+def test_random_interleaved_strided_ops_match_oracle(ctx):
+    """Random mixes of contiguous/strided puts + strided sums against a
+    numpy mirror, flushed at random points — byte-identical arenas."""
+    R, C = 6, 5
+    ga = ctx.alloc((R, C), jnp.float32)
+    rng = np.random.RandomState(23)
+    mirror = {u: np.zeros((R, C), np.float32) for u in ga.units}
+    for u in ga.units:
+        ga[u].put(jnp.zeros((R, C), jnp.float32))
+    ctx.engine.flush()
+    for step in range(40):
+        u = int(rng.choice(ga.units))
+        kind = rng.randint(3)
+        if kind == 0:                              # contiguous row put
+            r = rng.randint(R)
+            v = rng.randn(C).astype(np.float32)
+            ga.at[u, r].put_nb(jnp.asarray(v))
+            mirror[u][r] = v
+        elif kind == 1:                            # strided column put
+            c = rng.randint(C)
+            v = rng.randn(R).astype(np.float32)
+            ga.at[u, :, c].put_nb(jnp.asarray(v))
+            mirror[u][:, c] = v
+        else:                                      # strided column sum
+            c = rng.randint(C)
+            v = rng.randn(R).astype(np.float32)
+            ga.at[u, :, c].add(jnp.asarray(v))
+            mirror[u][:, c] += v
+        if rng.rand() < 0.3:
+            ctx.engine.flush()
+    ctx.engine.flush()
+    for u in ga.units:
+        np.testing.assert_allclose(np.asarray(ga[u].get()), mirror[u],
+                                   rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# slice-edge semantics (satellite: step<0 / step>extent / empty)
+# ---------------------------------------------------------------------------
+
+def test_negative_step_raises_value_error(ctx):
+    ga = ctx.alloc((8,), jnp.float32)
+    with pytest.raises(ValueError):
+        ga.at[0, ::-1].get()
+    with pytest.raises(ValueError):
+        ga.at[0, 6:2:-2].put(jnp.zeros((2,), jnp.float32))
+
+
+def test_step_larger_than_extent_degenerates_to_first(ctx):
+    ga = ctx.alloc((8,), jnp.float32)
+    ga[0].put(jnp.arange(8, dtype=jnp.float32))
+    got = ga.at[0, 0:8:100].get()
+    np.testing.assert_array_equal(np.asarray(got), [0.0])
+
+
+def test_empty_slice_zero_dispatches_born_complete(ctx):
+    ga = ctx.alloc((8,), jnp.float32)
+    ga[0].put(jnp.arange(8, dtype=jnp.float32))
+    ctx.engine.flush()
+    d0 = ctx.engine.dispatch_count
+    assert ga.at[0, 3:3].get().shape == (0,)
+    h = ga.at[0, 5:5].put_nb(jnp.zeros((0,), jnp.float32))
+    assert h.state == "complete"
+    ctx.engine.flush()
+    assert ctx.engine.dispatch_count == d0
+    np.testing.assert_array_equal(np.asarray(ga[0].get()),
+                                  np.arange(8, dtype=np.float32))
+
+
+def test_raw_engine_strided_validation(ctx):
+    """Engine-level guardrails: bad stride/count geometry raises before
+    anything is queued."""
+    g = rt.dart_memalloc(ctx, 256, unit=0)
+    with pytest.raises(ValueError):
+        ctx.engine.put(ctx.heap, ctx.teams_by_slot, g,
+                       jnp.zeros((8,), jnp.float32), stride=2, count=4)
+    with pytest.raises(ValueError):                # overruns the pool
+        ctx.engine.put(ctx.heap, ctx.teams_by_slot, g,
+                       jnp.zeros((8,), jnp.float32), stride=1 << 12,
+                       count=8)
+    with pytest.raises(ValueError):                # count !| total bytes
+        ctx.engine.put(ctx.heap, ctx.teams_by_slot, g,
+                       jnp.zeros((7,), jnp.float32), stride=64, count=3)
+    rt.dart_memfree(ctx, g)
