@@ -342,7 +342,11 @@ def engine_profile(*, repeats: int = 20, quick: bool = False) -> dict:
     schema guard), PLUS — schema v4 — the ``overlap`` block: flush
     latency hidden under a device-compute window by the background
     :class:`~repro.core.progress.ProgressPlane`, progress-on vs
-    progress-off wall time with steady-state recompiles still zero."""
+    progress-off wall time with steady-state recompiles still zero,
+    PLUS — schema v7 — the ``faults`` block: clean vs
+    transient-faulted flush µs/op (bounded retries, nothing
+    exhausted), survivor throughput after a unit death, and zero
+    steady-state recompiles on the retry path."""
     from repro.kernels import segmented_copy as sc
     n_ops = 8 if quick else 16
     nbytes = 4096
@@ -713,8 +717,79 @@ def engine_profile(*, repeats: int = 20, quick: bool = False) -> dict:
         "reduce_us": round(t_red.mean_us, 3),
     }
 
+    # --- fault plane (schema v7) -------------------------------------
+    # Retry/degradation cost model: a clean coalesced flush epoch vs
+    # one with scheduled transient dispatch faults (each absorbed by
+    # the bounded retry loop), plus survivor throughput after a unit
+    # death.  The schema guard pins: retries fired but stayed bounded
+    # (retries_exhausted == 0), degraded-mode throughput > 0, and zero
+    # steady-state recompiles — the retry path replays the SAME
+    # compiled dispatch plan, it never retraces.
+    from repro.core import UnitFailedError
+    team_poolid = ctx.teams[DART_TEAM_ALL].poolid
+
+    def clean_epoch():
+        hs = [rt.dart_put(ctx, gp + i * stride, val)
+              for i in range(n_ops)]
+        rt.dart_flush(ctx)
+        dart_waitall(hs)
+
+    clean_epoch()
+    t_clean = time_call(clean_epoch, repeats=repeats)
+
+    plane = ctx.attach_faults(seed=7)
+    # measure the retry mechanism, not the backoff sleep
+    ctx.engine.retry_base_s = 1e-5
+    ctx.engine.retry_max_s = 1e-4
+
+    def faulty_epoch():
+        # two transient pre-dispatch faults per epoch, both retryable
+        plane.schedule(kind="fail", poolid=team_poolid, times=2)
+        clean_epoch()
+
+    faulty_epoch()                            # warm (plans already hot)
+    r0 = ctx.engine.retries
+    c0 = ctx.engine.compile_count
+    t_faulty = time_call(faulty_epoch, repeats=repeats)
+    retries_fired = ctx.engine.retries - r0
+    fault_recompiles = ctx.engine.compile_count - c0
+
+    # degraded mode: unit 3 dies; survivors 1 and 2 keep flushing
+    dead_unit = 3
+    ctx.engine.mark_unit_dead(dead_unit, reason="bench")
+    n_done = 0
+    t0 = _time.perf_counter()
+    for _ in range(repeats):
+        hs = []
+        for u in (1, 2, dead_unit):
+            try:
+                hs.append(rt.dart_put(ctx, gp.setunit(u), val))
+            except UnitFailedError:
+                pass                          # dead lane fails fast
+        rt.dart_flush(ctx)
+        dart_waitall(hs)
+        n_done += len(hs)
+    degraded_s = _time.perf_counter() - t0
+    stats = ctx.engine.fault_stats()
+    faults_block = {
+        "clean_us_per_op": round(t_clean.mean_us / n_ops, 3),
+        "faulty_us_per_op": round(t_faulty.mean_us / n_ops, 3),
+        "retry_overhead_ratio": round(
+            t_faulty.mean_us / max(t_clean.mean_us, 1e-9), 3),
+        "retries": retries_fired,
+        "retries_exhausted": stats["retries_exhausted"],
+        "at_most_once_aborts": stats["at_most_once_aborts"],
+        "injected_fails": plane.counters["injected_fails"],
+        "dead_unit": dead_unit,
+        "degraded_ops_done": n_done,
+        "degraded_ops_per_s": round(n_done / max(degraded_s, 1e-9), 1),
+        "enqueue_rejections": stats["enqueue_rejections"],
+        "recompiles_steady_state": fault_recompiles,
+    }
+    ctx.engine.attach_faults(None)
+
     profile = {
-        "schema": "BENCH_engine/v6",
+        "schema": "BENCH_engine/v7",
         "n_ops": n_ops,
         "nbytes": nbytes,
         "quick": quick,
@@ -724,6 +799,7 @@ def engine_profile(*, repeats: int = 20, quick: bool = False) -> dict:
         "overlap": overlap,
         "strided": strided,
         "narray": narray,
+        "faults": faults_block,
         "plan_cache": {
             "compile_count": ctx.engine.compile_count,
             "plan_cache_hits": ctx.engine.plan_cache_hits,

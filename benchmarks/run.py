@@ -75,14 +75,17 @@ def main() -> None:
         print(f"# wrote {path}", flush=True)
 
     if "put_get" in suites:
-        # machine-readable engine trajectory (schema BENCH_engine/v6:
+        # machine-readable engine trajectory (schema BENCH_engine/v7:
         # dispatch counts + µs/op for blocking vs coalesced vs
         # per-target vs mixed-size, the flush cost model — cold
         # compile vs warm plan-cache-hit µs/op and steady-state
         # recompile count — plus the v6 strided + narray series:
         # strided-vs-contiguous µs/op ratio, 1-dispatch strided runs,
         # varying-stride zero-recompile pin, tiled NArray column
-        # gather): the perf numbers dashboards diff across PRs.
+        # gather — and the v7 faults series: clean vs faulted
+        # flush µs/op, bounded retries, survivor throughput after
+        # a unit death): the perf numbers dashboards diff across
+        # PRs.
         # scripts/check_bench_schema.py (run by `make verify`) fails
         # CI on schema drift.
         try:

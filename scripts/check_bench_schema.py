@@ -20,7 +20,13 @@ the timed pass), and — v6 — the strided + narray blocks (a strided
 run of N elements is ONE dispatch with µs/op within 2x of the
 contiguous path, a varying-stride loop at fixed buckets recompiles
 nothing, and the tiled NArray's column gather costs one dispatch per
-owning tile, not one per element).
+owning tile, not one per element), and — v7 — the faults block (the
+fault plane's retry/degradation cost model: scheduled transient
+dispatch faults are absorbed by a BOUNDED retry loop — retries fired,
+none exhausted, no at-most-once aborts in a put-only epoch — survivor
+throughput after a unit death stays above zero, and the retry path
+replays the same compiled dispatch plan: zero steady-state
+recompiles).
 """
 
 from __future__ import annotations
@@ -32,7 +38,7 @@ import sys
 PATH = pathlib.Path(__file__).resolve().parents[1] / (
     "benchmarks/out/BENCH_engine.json")
 
-SCHEMA = "BENCH_engine/v6"
+SCHEMA = "BENCH_engine/v7"
 SERIES_KEYS = {"dispatches", "ops", "us_per_op", "us_per_call"}
 REQUIRED_SERIES = {"blocking", "coalesced", "per_target_flush",
                    "mixed_size_coalesced"}
@@ -67,6 +73,11 @@ STRIDED_KEYS = {"elems", "contiguous_put_us_per_op",
                 "dispatches_per_strided_get", "recompiles_steady_state"}
 NARRAY_KEYS = {"dist", "col_elems", "get_col_us_per_elem",
                "get_col_dispatches", "owning_tiles", "reduce_us"}
+FAULTS_KEYS = {"clean_us_per_op", "faulty_us_per_op",
+               "retry_overhead_ratio", "retries", "retries_exhausted",
+               "at_most_once_aborts", "injected_fails", "dead_unit",
+               "degraded_ops_done", "degraded_ops_per_s",
+               "enqueue_rejections", "recompiles_steady_state"}
 #: acceptance (ISSUE 8): strided µs/op within ~2x of contiguous.  The
 #: bound gets slack on the quick/CI profile (2-repeat timings on a
 #: loaded 1-core box are noisy); the invariant that CANNOT flex is the
@@ -184,6 +195,27 @@ def main() -> None:
             fail(f"strided {k} = {sd[k]}x exceeds {ratio_max}x "
                  "(acceptance: strided µs/op within ~2x of contiguous)")
 
+    ft = profile.get("faults", {})
+    if not FAULTS_KEYS <= ft.keys():
+        fail(f"faults lacks {sorted(FAULTS_KEYS - ft.keys())}")
+    if ft["retries"] < 1:
+        fail("faulted epochs never exercised the retry loop")
+    if ft["retries_exhausted"] != 0:
+        fail(f"{ft['retries_exhausted']} retries exhausted — scheduled "
+             "transient faults must stay within the bounded retry "
+             "budget")
+    if ft["at_most_once_aborts"] != 0:
+        fail("a put-only faulted epoch hit the at-most-once abort "
+             "path — idempotent retries regressed")
+    if ft["degraded_ops_per_s"] <= 0:
+        fail("survivor lanes moved nothing after the unit death — "
+             "degraded-mode throughput must stay above zero")
+    if ft["enqueue_rejections"] < 1:
+        fail("dead-unit enqueues were not rejected fail-fast")
+    if ft["recompiles_steady_state"] != 0:
+        fail("the retry path recompiled — retries must replay the "
+             "same compiled dispatch plan")
+
     nr = profile.get("narray", {})
     if not NARRAY_KEYS <= nr.keys():
         fail(f"narray lacks {sorted(NARRAY_KEYS - nr.keys())}")
@@ -209,7 +241,11 @@ def main() -> None:
           f"{sd['put_vs_contiguous_ratio']}x / get "
           f"{sd['get_vs_contiguous_ratio']}x of contiguous, 1 dispatch, "
           f"0 recompiles; narray col {nr['get_col_dispatches']} "
-          f"dispatches/{nr['owning_tiles']} tiles")
+          f"dispatches/{nr['owning_tiles']} tiles; faults clean "
+          f"{ft['clean_us_per_op']}us/op -> faulted "
+          f"{ft['faulty_us_per_op']}us/op ({ft['retries']} retries, "
+          f"0 exhausted), degraded {ft['degraded_ops_per_s']} ops/s, "
+          f"0 recompiles")
 
 
 if __name__ == "__main__":

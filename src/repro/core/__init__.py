@@ -11,6 +11,9 @@ Two layers (docs/API.md):
   ``to_bytes``/``from_bytes``, and unit arithmetic entirely.
 """
 
+from .faults import (DartError, FaultPlane, FaultSpec, FlushTimeoutError,
+                     RetriesExhaustedError, TransientDispatchFault,
+                     UnitFailedError)
 from .gptr import (ADDR_MAX, DART_GPTR_NULL, FLAG_COLLECTIVE, FLAG_SHM,
                    NON_COLLECTIVE_SEG, GlobalPtr)
 from .group import (DartGroup, dart_group_addmember, dart_group_copy,
@@ -58,6 +61,9 @@ from .narray import (BlockCyclicDist, BlockedDist, CyclicDist, NArray,
 __all__ = [
     # typed front-end
     "GlobalArray", "GlobalRef",
+    # fault plane + typed error ladder
+    "DartError", "FaultPlane", "FaultSpec", "FlushTimeoutError",
+    "RetriesExhaustedError", "TransientDispatchFault", "UnitFailedError",
     # DASH-style distributed containers
     "NArray", "BlockedDist", "CyclicDist", "BlockCyclicDist", "TileDist",
     "narray_copy",

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .faults import DartError
 from .gptr import (FLAG_COLLECTIVE, NON_COLLECTIVE_SEG, GlobalPtr)
 
 #: allocation granularity (bytes).  128 matches the TPU lane width so a
@@ -50,15 +51,21 @@ def align_up(n: int, a: int = ALIGNMENT) -> int:
     return (n + a - 1) // a * a
 
 
-class OutOfGlobalMemory(RuntimeError):
-    pass
+class OutOfGlobalMemory(DartError):
+    """Allocation failure in a symmetric-heap pool (typed: part of the
+    :class:`~repro.core.faults.DartError` ladder, still a
+    ``RuntimeError``)."""
 
 
-class WindowDestroyedError(KeyError):
+class WindowDestroyedError(DartError, KeyError):
     """A global pointer was dereferenced against a team whose window
     (collective pool) is no longer live — the pool was dropped by
     ``dart_team_destroy`` and the teamlist slot may since have been
-    reused by an unrelated team (paper §IV.B.2)."""
+    reused by an unrelated team (paper §IV.B.2).  Doubly parented:
+    :class:`~repro.core.faults.DartError` (the typed ladder) and the
+    historical ``KeyError`` (registry lookup semantics), so both
+    established handler shapes keep working.  Instances raised through
+    the engine's drop path carry ``poolid`` and ``teamid``."""
 
 
 class BlockAllocator:

@@ -114,9 +114,10 @@ import bisect
 import contextlib
 import dataclasses
 import functools
+import random
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -124,8 +125,11 @@ import numpy as np
 
 from repro.kernels import segmented_copy as _sc
 
-from .globmem import (HeapState, SymmetricHeap, copy_state, from_bytes,
-                      nbytes_of, to_bytes)
+from .faults import (DartError, FaultPlane, FlushTimeoutError,
+                     RetriesExhaustedError, TransientDispatchFault,
+                     UnitFailedError)
+from .globmem import (HeapState, SymmetricHeap, WindowDestroyedError,
+                      copy_state, from_bytes, nbytes_of, to_bytes)
 from .gptr import GlobalPtr
 
 
@@ -210,7 +214,7 @@ class Handle:
         self.arrays = tuple(arrays)
         self._engine = engine
         self._issued = engine is None
-        self._error: Optional[str] = None
+        self._error: Optional[BaseException] = None
 
     @property
     def state(self) -> str:
@@ -226,14 +230,27 @@ class Handle:
         self.arrays = tuple(arrays)
         self._issued = True
 
-    def _fail(self, message: str) -> None:
-        """Mark a queued op as permanently failed (its target window was
-        destroyed before dispatch); wait/test surface the error."""
-        self._error = message
+    def _fail(self, error) -> None:
+        """Mark the op as terminally **failed** (window destroyed
+        before dispatch, target unit dead, retries exhausted, ...);
+        wait/test raise the typed error.  Accepts an exception from
+        the :class:`~repro.core.faults.DartError` ladder, or a bare
+        message (wrapped in ``DartError``)."""
+        if isinstance(error, str):
+            error = DartError(error)
+        self._error = error
 
     def _check_failed(self) -> None:
         if self._error is not None:
-            raise RuntimeError(self._error)
+            raise self._error
+
+    def _dropped_error(self) -> DartError:
+        err = DartError(
+            f"queued op ({self._lane_repr()}) was dropped before "
+            "dispatch (engine cleared by dart_exit?)")
+        err.poolid = getattr(self, "poolid", None)
+        err.row = getattr(self, "row", None)
+        return err
 
     def _lane_repr(self) -> str:
         return (f"pool {getattr(self, 'poolid', '?')}, "
@@ -253,9 +270,7 @@ class Handle:
                                getattr(self, "row", None))
             self._check_failed()
             if not self._issued:
-                raise RuntimeError(
-                    f"queued op ({self._lane_repr()}) was dropped "
-                    "before dispatch (engine cleared by dart_exit?)")
+                raise self._dropped_error()
         _block_ready(self.arrays)
 
     def test(self) -> bool:
@@ -312,9 +327,7 @@ class GetHandle(Handle):
                 self._batch.host()[self._batch_idx], self.shape,
                 self.dtype))
         if self._value is None:
-            raise RuntimeError(
-                f"queued get ({self._lane_repr()}) was dropped before "
-                "dispatch (engine cleared by dart_exit?)")
+            raise self._dropped_error()
         return self._value
 
 
@@ -446,6 +459,7 @@ class _PendingPut:
     ts: float = 0.0             # monotonic enqueue time (progress plane)
     stride: int = 0             # byte distance between strided segments
     count: int = 1              # segments (1 = contiguous)
+    unit: int = -1              # absolute target unitid (fault plane)
 
 
 @dataclasses.dataclass(eq=False)
@@ -458,6 +472,7 @@ class _PendingGet:
     ts: float = 0.0
     stride: int = 0
     count: int = 1
+    unit: int = -1
 
 
 @dataclasses.dataclass(eq=False)
@@ -477,6 +492,7 @@ class _PendingAcc:
     ts: float = 0.0
     stride: int = 0
     count: int = 1
+    unit: int = -1
 
 
 def _check_strided(off: int, total: int, stride: int, count: int,
@@ -562,12 +578,131 @@ class CommEngine:
         self.ops_coalesced = 0
         self.compile_count = 0
         self.plan_cache_hits = 0
+        # -- fault plane (docs/API.md "Failure model & fault plane") ----
+        #: attached injector (None = fault-free: zero-overhead dispatch)
+        self.faults: Optional[FaultPlane] = None
+        #: absolute unitids declared dead — enqueues fail fast
+        self.dead_units: Set[int] = set()
+        #: (pool, row) -> the DartError that killed the lane; enqueues
+        #: to a failed lane fail fast until clear_lane()
+        self.failed_lanes: Dict[Tuple[int, int], DartError] = {}
+        # retry/deadline knobs (DartConfig overrides these defaults)
+        self.retry_limit = 3            # retries after the first attempt
+        self.retry_base_s = 0.001       # backoff = base * 2^retry
+        self.retry_max_s = 0.05         # backoff cap
+        self.flush_deadline_s: Optional[float] = None   # None = no deadline
+        # deterministic jitter stream (differential chaos replays need
+        # the backoff schedule reproducible, like everything else)
+        self._retry_rng = random.Random(0xDA27)
+        # fault counters (fault_stats())
+        self.retries = 0
+        self.retries_exhausted = 0
+        self.flush_timeouts = 0
+        self.at_most_once_aborts = 0
+        self.failed_runs = 0
+        self.enqueue_rejections = 0
         if impl == "auto":
             impl = "pallas" if jax.default_backend() == "tpu" else "ref"
         self.impl = impl
 
     def bind(self, holder) -> None:
         self._holder = holder
+
+    # -- fault plane -----------------------------------------------------
+    def attach_faults(self, plane: Optional[FaultPlane]) -> None:
+        """Attach (or detach, with None) a fault injector.  With no
+        plane attached the dispatch path takes the historical zero-
+        overhead route — no gates, no retry loop."""
+        with self.lock:
+            self.faults = plane
+
+    def mark_unit_dead(self, unit: int, reason: str = "") -> int:
+        """Declare an absolute unit dead: every op queued against it
+        fails with :class:`UnitFailedError` and subsequent enqueues to
+        it fail fast.  Surviving lanes are untouched — their queued
+        epochs keep flushing.  Returns the number of queued ops
+        doomed."""
+        with self.lock:
+            return self._mark_unit_dead_locked(unit, reason)
+
+    def _mark_unit_dead_locked(self, unit: int, reason: str = "") -> int:
+        if unit in self.dead_units:
+            return 0
+        self.dead_units.add(unit)
+        doomed = [op for op in self._pending
+                  if getattr(op, "unit", -1) == unit]
+        if doomed:
+            self._pending = [op for op in self._pending
+                             if getattr(op, "unit", -1) != unit]
+            err = UnitFailedError(
+                f"unit {unit} declared dead"
+                f"{' (' + reason + ')' if reason else ''} with this op "
+                "still queued")
+            err.unit = unit
+            for op in doomed:
+                op.handle._fail(err)
+        return len(doomed)
+
+    def revive_unit(self, unit: int) -> None:
+        """Clear a unit's dead mark (elastic re-admission); already-
+        failed handles stay failed."""
+        with self.lock:
+            self.dead_units.discard(unit)
+
+    def clear_lane(self, poolid: int, row: int) -> Optional[DartError]:
+        """Clear a failed lane so new enqueues flow again; returns the
+        error the lane carried (None if it was not failed)."""
+        with self.lock:
+            return self.failed_lanes.pop((poolid, row), None)
+
+    def _precheck_enqueue(self, poolid: int, row: int,
+                          unit: int) -> None:
+        """Enqueue-boundary fault hook + fail-fast checks.  Called
+        under the engine lock before appending a pending op: polls the
+        injector's poison/unit-death schedule, then rejects ops bound
+        for dead units or failed lanes with the recorded typed error."""
+        if self.faults is not None:
+            for spec in self.faults.poll_enqueue(poolid, row, unit):
+                if spec.kind == "unit_dead":
+                    dead = unit if spec.unit is None else spec.unit
+                    self._mark_unit_dead_locked(dead,
+                                                reason="fault injection")
+                else:                                   # poison
+                    err = DartError(
+                        f"lane (pool {poolid}, row {row}) poisoned by "
+                        "fault injection")
+                    err.poolid, err.row = poolid, row
+                    self.failed_lanes[(poolid, row)] = err
+        if unit in self.dead_units:
+            self.enqueue_rejections += 1
+            err = UnitFailedError(
+                f"unit {unit} is dead; op rejected at enqueue "
+                f"(lane: pool {poolid}, row {row})")
+            err.unit, err.poolid, err.row = unit, poolid, row
+            raise err
+        lane_err = self.failed_lanes.get((poolid, row))
+        if lane_err is not None:
+            self.enqueue_rejections += 1
+            raise lane_err
+
+    def fault_stats(self) -> Dict[str, object]:
+        """Process-wide fault counters: the engine's retry/abort/
+        rejection totals plus (when attached) the injector's own."""
+        with self.lock:
+            s: Dict[str, object] = {
+                "retries": self.retries,
+                "retries_exhausted": self.retries_exhausted,
+                "flush_timeouts": self.flush_timeouts,
+                "at_most_once_aborts": self.at_most_once_aborts,
+                "failed_runs": self.failed_runs,
+                "enqueue_rejections": self.enqueue_rejections,
+                "dead_units": sorted(self.dead_units),
+                "failed_lanes": sorted(self.failed_lanes),
+            }
+            plane = self.faults
+        if plane is not None:
+            s["injector"] = plane.stats()
+        return s
 
     def set_progress_notifier(self, cb: Optional[Callable[[], None]]
                               ) -> None:
@@ -608,9 +743,11 @@ class CommEngine:
         h.poolid = poolid
         h.row = row
         with self.lock:
+            self._precheck_enqueue(poolid, row, gptr.unitid)
             self._pending.append(_PendingPut(poolid, row, off, payload,
                                              h, time.monotonic(),
-                                             stride=stride, count=count))
+                                             stride=stride, count=count,
+                                             unit=gptr.unitid))
             self.ops_enqueued += 1
         self._notify_enqueue()
         return h
@@ -630,9 +767,11 @@ class CommEngine:
         h.poolid = poolid
         h.row = row
         with self.lock:
+            self._precheck_enqueue(poolid, row, gptr.unitid)
             self._pending.append(_PendingGet(poolid, row, off, n, h,
                                              time.monotonic(),
-                                             stride=stride, count=count))
+                                             stride=stride, count=count,
+                                             unit=gptr.unitid))
             self.ops_enqueued += 1
         self._notify_enqueue()
         return h
@@ -690,10 +829,12 @@ class CommEngine:
         h.poolid = poolid
         h.row = row
         with self.lock:
+            self._precheck_enqueue(poolid, row, gptr.unitid)
             self._pending.append(_PendingAcc(poolid, row, off, payload,
                                              op, str(dt), False, h,
                                              time.monotonic(),
-                                             stride=stride, count=count))
+                                             stride=stride, count=count,
+                                             unit=gptr.unitid))
             self.ops_enqueued += 1
         self._notify_enqueue()
         return h
@@ -712,10 +853,12 @@ class CommEngine:
         h.poolid = poolid
         h.row = row
         with self.lock:
+            self._precheck_enqueue(poolid, row, gptr.unitid)
             self._pending.append(_PendingAcc(poolid, row, off, payload,
                                              op, str(dt), True, h,
                                              time.monotonic(),
-                                             stride=stride, count=count))
+                                             stride=stride, count=count,
+                                             unit=gptr.unitid))
             self.ops_enqueued += 1
         self._notify_enqueue()
         return h
@@ -767,6 +910,15 @@ class CommEngine:
         donates the arenas), handle resolution, and the holder-state
         swap — runs under the engine lock, so concurrent flushes
         serialize and no thread can observe a half-donated state.
+
+        **Failure isolation** (docs/API.md "Failure model"): a run
+        whose dispatch fails terminally (retries exhausted, deadline,
+        at-most-once abort) fails *its own* handles with the typed
+        error and marks its lanes failed — later ops on those lanes in
+        this epoch fail too (program order: op N dropped ⇒ op N+1 must
+        not apply), while runs on surviving lanes keep dispatching.
+        ``flush`` itself never raises for an injected fault; waiters
+        see the error through ``wait()``/``test()``.
         """
         with self.lock:
             if poolid is None:
@@ -785,39 +937,166 @@ class CommEngine:
             if not todo:
                 return self._holder.state
             state = copy_state(self._holder.state)
+            failed_now: Set[Tuple[int, int]] = set()
             for run, disjoint in _coalesced_runs(todo):
                 pid = run[0].poolid
-                if isinstance(run[0], _PendingPut):
-                    state[pid] = self._dispatch_put_run(state[pid], run,
-                                                        disjoint)
+                if failed_now:
+                    # program order on a lane that just failed: fail
+                    # the lane's later ops instead of dispatching them
+                    # past the hole the dropped run left
+                    live = []
                     for op in run:
-                        op.handle._resolve((state[pid],))
-                elif isinstance(run[0], _PendingAcc):
-                    state[pid] = self._dispatch_acc_run(state[pid], run,
-                                                        disjoint)
-                else:
-                    self._dispatch_get_run(state[pid], run)
+                        lane = (op.poolid, op.row)
+                        if lane in failed_now:
+                            op.handle._fail(self.failed_lanes[lane])
+                        else:
+                            live.append(op)
+                    if not live:
+                        continue
+                    run = live
+                try:
+                    if isinstance(run[0], _PendingPut):
+                        cell = {"arena": state[pid]}
+
+                        def _put(cell=cell, run=run, disjoint=disjoint):
+                            cell["arena"] = self._dispatch_put_run(
+                                cell["arena"], run, disjoint)
+                        try:
+                            self._guarded("put", run, _put,
+                                          retryable_post=True)
+                        finally:
+                            state[pid] = cell["arena"]
+                        for op in run:
+                            op.handle._resolve((state[pid],))
+                    elif isinstance(run[0], _PendingAcc):
+                        cell = {"arena": state[pid]}
+
+                        def _acc(cell=cell, run=run, disjoint=disjoint):
+                            cell["arena"] = self._dispatch_acc_run(
+                                cell["arena"], run, disjoint)
+                        try:
+                            # at-most-once: a post-dispatch fault on an
+                            # RMW run must never re-issue
+                            self._guarded("gacc" if run[0].fetch
+                                          else "acc", run, _acc,
+                                          retryable_post=False)
+                        finally:
+                            state[pid] = cell["arena"]
+                    else:
+                        def _get(run=run, arena=state[pid]):
+                            self._dispatch_get_run(arena, run)
+                        self._guarded("get", run, _get,
+                                      retryable_post=True)
+                except DartError as e:
+                    self.failed_runs += 1
+                    lanes = {(op.poolid, op.row) for op in run}
+                    for op in run:
+                        op.handle._fail(e)
+                    for lane in lanes:
+                        self.failed_lanes[lane] = e
+                    failed_now |= lanes
             self._pending = rest
             self._holder.state = state
             self.epoch += 1
             return state
 
-    def drop_pool(self, poolid: int, reason: str = "") -> int:
+    def _guarded(self, kind: str, run: Sequence, attempt: Callable[[], None],
+                 retryable_post: bool) -> None:
+        """Run one coalesced dispatch with fault gates + retry/deadline
+        semantics.  ``attempt()`` performs one dispatch attempt,
+        threading the arena through a caller-owned cell — critical for
+        retry: the batched kernels DONATE the arena, so a retry after a
+        post-dispatch fault re-applies the same packed descriptors to
+        the attempt's *result* arena (idempotent for puts — the same
+        bytes land at the same offsets — and for gets, which only
+        read).  Accumulate runs pass ``retryable_post=False``: a fault
+        after the RMW kernel ran aborts instead of re-issuing
+        (at-most-once).
+
+        Transient faults retry with exponential backoff + deterministic
+        jitter up to ``retry_limit`` times, bounded by the per-flush
+        ``flush_deadline_s``; exhaustion raises
+        :class:`RetriesExhaustedError` / :class:`FlushTimeoutError`.
+        With no injector attached this is a zero-overhead passthrough.
+        """
+        if self.faults is None:
+            attempt()
+            return
+        # a coalesced run can span rows (one batched dispatch for many
+        # lanes): consult the gate for EVERY distinct lane, and on a
+        # terminal failure the whole run shares the dispatch's fate —
+        # flush marks all its lanes failed.
+        lanes = sorted({(op.poolid, op.row) for op in run})
+        deadline = (None if self.flush_deadline_s is None
+                    else time.monotonic() + self.flush_deadline_s)
+        retries = 0
+        while True:
+            issued = False
+            poolid, row = lanes[0]
+            try:
+                for poolid, row in lanes:
+                    self.faults.dispatch_gate(kind, poolid, row, "pre")
+                poolid, row = lanes[0]
+                attempt()
+                issued = True
+                for poolid, row in lanes:
+                    self.faults.dispatch_gate(kind, poolid, row, "post")
+                return
+            except TransientDispatchFault as e:
+                e.poolid, e.row = poolid, row
+                if issued and not retryable_post:
+                    self.at_most_once_aborts += 1
+                    err = DartError(
+                        f"{kind} run on lane (pool {poolid}, row {row}) "
+                        "faulted after dispatch; not retried "
+                        "(at-most-once — re-issuing a read-modify-write "
+                        "could double-apply it)")
+                    err.poolid, err.row = poolid, row
+                    raise err from e
+                if retries >= self.retry_limit:
+                    self.retries_exhausted += 1
+                    err = RetriesExhaustedError(
+                        f"{kind} run on lane (pool {poolid}, row {row}) "
+                        f"still faulting after {retries} retries: {e}")
+                    err.poolid, err.row = poolid, row
+                    raise err from e
+                backoff = min(self.retry_max_s,
+                              self.retry_base_s * (1 << retries))
+                backoff *= 0.5 + self._retry_rng.random()
+                if (deadline is not None
+                        and time.monotonic() + backoff > deadline):
+                    self.flush_timeouts += 1
+                    err = FlushTimeoutError(
+                        f"flush deadline ({self.flush_deadline_s}s) "
+                        f"exceeded retrying {kind} run on lane "
+                        f"(pool {poolid}, row {row}): {e}")
+                    err.poolid, err.row = poolid, row
+                    raise err from e
+                retries += 1
+                self.retries += 1
+                time.sleep(backoff)
+
+    def drop_pool(self, poolid: int, reason: str = "",
+                  teamid: Optional[int] = None) -> int:
         """Discard queued ops targeting ``poolid`` and fail their
         handles (the pool's window is being destroyed, so dispatching —
-        or silently dropping — them would be wrong).  Returns the number
-        of ops dropped."""
+        or silently dropping — them would be wrong).  The failure is a
+        typed :class:`~repro.core.globmem.WindowDestroyedError`
+        carrying ``poolid`` (and ``teamid`` when the drop came from
+        ``dart_team_destroy``).  Returns the number of ops dropped."""
         with self.lock:
             dropped = [op for op in self._pending if op.poolid == poolid]
             if not dropped:
                 return 0
             self._pending = [op for op in self._pending
                              if op.poolid != poolid]
-            msg = (f"window destroyed: pool {poolid} was dropped with "
-                   f"this op still queued"
-                   f"{' (' + reason + ')' if reason else ''}")
+            err = WindowDestroyedError(
+                f"window destroyed: pool {poolid} was dropped with "
+                f"this op still queued"
+                f"{' (' + reason + ')' if reason else ''}")
+            err.poolid, err.teamid = poolid, teamid
             for op in dropped:
-                op.handle._fail(msg)
+                op.handle._fail(err)
             return len(dropped)
 
     def _dispatch_put_run(self, arena: jax.Array,

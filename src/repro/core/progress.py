@@ -51,7 +51,11 @@ class ProgressPlane:
     * ``watermark_flushes`` / ``idle_flushes`` — split by trigger;
     * ``errors`` — exceptions raised by background flushes (the thread
       records and keeps running; handles carry the failure to their
-      waiters through the normal ``_fail`` path).
+      waiters through the normal ``_fail`` path);
+    * ``drains_skipped`` — sweeps suppressed by an attached
+      :class:`~repro.core.faults.FaultPlane` drain gate (chaos
+      schedules use this to strand a lane and prove the foreground
+      flush path still completes it).
     """
 
     def __init__(self, engine, *, watermark_bytes: int = 1 << 16,
@@ -69,6 +73,7 @@ class ProgressPlane:
         self.flushes = 0
         self.watermark_flushes = 0
         self.idle_flushes = 0
+        self.drains_skipped = 0
         self.errors: List[BaseException] = []
         self._cond = threading.Condition()
         self._wake = False
@@ -151,6 +156,10 @@ class ProgressPlane:
                        or nbytes >= self.watermark_bytes)
             by_idle = now - oldest >= self.idle_s
             if not (by_mark or by_idle):
+                continue
+            faults = getattr(self.engine, "faults", None)
+            if faults is not None and not faults.drain_gate(poolid, row):
+                self.drains_skipped += 1
                 continue
             try:
                 self.engine.flush(poolid, row)

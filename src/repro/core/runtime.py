@@ -48,6 +48,13 @@ class DartConfig:
     progress_watermark_bytes: int = 1 << 16
     progress_watermark_ops: int = 32
     progress_idle_s: float = 0.005
+    # fault plane / retry knobs (docs/API.md "Failure model"): a flush
+    # retrying past flush_deadline_s raises FlushTimeoutError; None
+    # bounds retries only by flush_retry_limit.
+    flush_deadline_s: Optional[float] = None
+    flush_retry_limit: int = 3
+    flush_retry_base_s: float = 0.001
+    flush_retry_max_s: float = 0.05
 
 
 class DartContext:
@@ -73,9 +80,17 @@ class DartContext:
         # dart_get_nb enqueue here; dart_flush / handle.wait() dispatch
         # coalesced batches against self.state.
         self.engine = _os.CommEngine(holder=self)
+        self.engine.retry_limit = config.flush_retry_limit
+        self.engine.retry_base_s = config.flush_retry_base_s
+        self.engine.retry_max_s = config.flush_retry_max_s
+        self.engine.flush_deadline_s = config.flush_deadline_s
         # background progress plane (None until start_progress);
         # owns the daemon that drains queued lanes at the watermarks.
         self.progress: Optional["_prog.ProgressPlane"] = None
+        # heartbeat monitor (None until attach_heartbeat_monitor);
+        # sweep_failures() maps its dead hosts onto engine unit deaths.
+        self.heartbeats = None
+        self._devices_per_host = 1
         self._initialized = False
 
     # -- typed front-end (docs/API.md) ---------------------------------
@@ -122,6 +137,50 @@ class DartContext:
         still queued is flushed — shutdown never drops ops."""
         if self.progress is not None:
             self.progress.stop(drain=drain)
+
+    # -- fault plane (docs/API.md "Failure model & fault plane") --------
+
+    def attach_faults(self, plane=None, **kw):
+        """Attach a :class:`~repro.core.faults.FaultPlane` to the
+        engine's dispatch boundary (and, transitively, the progress
+        plane's drain loop).  Pass an existing plane, or keyword args
+        (``seed``, ``fail_rate``, ...) to build one.  Returns it."""
+        from .faults import FaultPlane
+        if plane is None:
+            plane = FaultPlane(**kw)
+        self.engine.attach_faults(plane)
+        return plane
+
+    def attach_heartbeat_monitor(self, monitor,
+                                 devices_per_host: int = 1) -> None:
+        """Bind a :class:`~repro.ft.elastic.HeartbeatMonitor`;
+        :meth:`sweep_failures` maps its dead *hosts* onto engine unit
+        deaths (``devices_per_host`` units per host, contiguous)."""
+        if devices_per_host < 1:
+            raise ValueError("devices_per_host must be >= 1")
+        self.heartbeats = monitor
+        self._devices_per_host = int(devices_per_host)
+
+    def sweep_failures(self):
+        """Sweep the attached heartbeat monitor and declare every unit
+        of each newly dead host dead on the engine: their queued ops
+        fail with :class:`~repro.core.faults.UnitFailedError`, later
+        enqueues fail fast, and surviving lanes keep flushing.
+        Returns the list of newly dead units (empty without a
+        monitor)."""
+        if self.heartbeats is None:
+            return []
+        from ..ft.elastic import units_of_host
+        newly_dead_hosts = self.heartbeats.sweep()
+        dead_units = []
+        for host in newly_dead_hosts:
+            for u in units_of_host(host, self._devices_per_host):
+                if u >= self.n_units or u in self.engine.dead_units:
+                    continue
+                self.engine.mark_unit_dead(
+                    u, reason=f"host {host} missed heartbeats")
+                dead_units.append(u)
+        return dead_units
 
     @property
     def windows(self):
@@ -220,7 +279,8 @@ def dart_team_destroy(ctx: DartContext, teamid: int) -> None:
     # dispatched (their arena is going away): fail their handles now
     # with a clear error instead of KeyError-ing a later flush of
     # unrelated pools.
-    ctx.engine.drop_pool(meta.poolid, reason=f"team {teamid} destroyed")
+    ctx.engine.drop_pool(meta.poolid, reason=f"team {teamid} destroyed",
+                         teamid=teamid)
     ctx.state.pop(meta.poolid, None)
     ctx.heap.drop_pool(meta.poolid)
 

@@ -28,6 +28,15 @@ import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 
+def units_of_host(host: int, devices_per_host: int) -> Tuple[int, ...]:
+    """DART units living on ``host``: units are the flattened device
+    space, ``devices_per_host`` contiguous units per host — the mapping
+    :meth:`DartContext.sweep_failures` uses to turn a dead host into
+    engine unit deaths."""
+    base = host * devices_per_host
+    return tuple(range(base, base + devices_per_host))
+
+
 @dataclasses.dataclass
 class ClusterState:
     n_hosts: int

@@ -40,6 +40,7 @@ import numpy as np
 
 from ..core import (DART_TEAM_ALL, DartConfig, DartContext, dart_init,
                     dart_team_memalloc_aligned)
+from ..core.faults import DartError
 from ..models import api
 from ..models.config import ModelConfig
 from .kv_blocks import KVBlockPool, pool_bytes_needed
@@ -56,8 +57,14 @@ class Request:
     prompt: np.ndarray                  # (prompt_len,) int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    # wall-clock budget from submit: a request older than this retires
+    # with finish_reason "timeout" (and frees its slot) instead of
+    # pinning a slot forever.  None = no deadline.
+    deadline_s: Optional[float] = None
     # filled by the engine:
     output: Optional[np.ndarray] = None
+    # "eos" | "length" | "timeout" | "unit_failed" (None until done)
+    finish_reason: Optional[str] = None
     done: threading.Event = dataclasses.field(
         default_factory=threading.Event)
     # wall-clock marks for the serving bench (open-loop latency)
@@ -267,6 +274,10 @@ class ContinuousEngine:
         self.prefill_shape_misses = 0
         self.decode_steps = 0
         self.prefills = 0
+        # fault-plane accounting (docs/API.md "Failure model")
+        self.timeouts = 0
+        self.unit_failed_retired = 0
+        self.degraded_fetches = 0
 
         # the PGAS serving plane: KV blocks + prefix directory live in
         # a DART team window sized for the pool
@@ -296,20 +307,28 @@ class ContinuousEngine:
 
     # -- client API ------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
-               eos_id: Optional[int] = None) -> Request:
+               eos_id: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> Request:
         """Thread-safe enqueue.  Validates that the prompt's pow2
-        prefill bucket plus the decode budget fits ``max_seq``."""
+        prefill bucket plus the decode budget fits ``max_seq``.
+        ``deadline_s`` bounds the request's wall clock from now: past
+        it the sequence retires with finish_reason ``"timeout"`` and
+        frees its slot (a stuck request can never pin a slot)."""
         prompt = np.asarray(prompt, np.int32)
         bucket = self._bucket(len(prompt))
         if bucket + max_new_tokens > self.max_seq:
             raise ValueError(
                 f"prompt bucket {bucket} + max_new_tokens "
                 f"{max_new_tokens} exceeds max_seq {self.max_seq}")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive, "
+                             f"got {deadline_s}")
         with self._rid_lock:
             rid = self._next_rid
             self._next_rid += 1
         req = Request(rid=rid, prompt=prompt,
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      deadline_s=deadline_s,
                       t_submit=time.perf_counter())
         self._q.put(req)
         return req
@@ -320,6 +339,7 @@ class ContinuousEngine:
         before = self.scheduler.retired
         while True:
             self._ingest()
+            self._sweep_deadlines()
             self._admit_all()
             if self.scheduler.n_resident == 0:
                 if self._q.empty() and not self.scheduler.waiting:
@@ -347,6 +367,9 @@ class ContinuousEngine:
             "retired": self.scheduler.retired,
             "engine_dispatches": self.dart.engine.dispatch_count,
             "engine_plan_compiles": self.dart.engine.compile_count,
+            "timeouts": self.timeouts,
+            "unit_failed_retired": self.unit_failed_retired,
+            "degraded_fetches": self.degraded_fetches,
         }
         if self.prefix is not None:
             s["prefix"] = self.prefix.stats.snapshot()
@@ -356,6 +379,7 @@ class ContinuousEngine:
     def _loop(self):
         while not self._stop.is_set():
             self._ingest(block=True)
+            self._sweep_deadlines()
             self._admit_all()
             if self.scheduler.n_resident:
                 self._decode_once()
@@ -382,6 +406,49 @@ class ContinuousEngine:
             if seq is None:
                 return
             self._admit(seq)
+
+    # -- fault plane / degradation ---------------------------------------
+    def _expired(self, req, now: float) -> bool:
+        return (req.deadline_s is not None
+                and now - req.t_submit >= req.deadline_s)
+
+    def _sweep_deadlines(self) -> None:
+        """Retire residents past their wall-clock deadline (freeing
+        their slots) and time out expired waiting requests before they
+        ever take a slot."""
+        now = time.perf_counter()
+        for seq in self.scheduler.residents:
+            if self._expired(seq.req, now):
+                self._retire(seq.slot, reason="timeout")
+        if any(self._expired(r, now) for r in self.scheduler.waiting):
+            keep = []
+            for req in self.scheduler.waiting:
+                if self._expired(req, now):
+                    self.timeouts += 1
+                    self._finalize(req, np.zeros(0, np.int32), "timeout")
+                else:
+                    keep.append(req)
+            self.scheduler.waiting = type(self.scheduler.waiting)(keep)
+
+    def note_unit_death(self, unit: int) -> int:
+        """Degrade around a dead PGAS unit: the DART engine fails the
+        unit's lanes fast, the KV pool and prefix directory stop
+        handing out its blocks, and residents whose restored prefix
+        lives on it retire with finish_reason ``"unit_failed"`` (the
+        client retries; everyone else keeps decoding).  Returns the
+        number of residents retired."""
+        self.dart.engine.mark_unit_dead(unit, reason="serve plane")
+        if self.kv_pool is not None:
+            self.kv_pool.note_unit_dead(unit)
+        if self.prefix is not None:
+            self.prefix.note_unit_dead(unit)
+        retired = 0
+        for seq in self.scheduler.residents:
+            if unit in seq.block_owners:
+                self._retire(seq.slot, reason="unit_failed")
+                self.unit_failed_retired += 1
+                retired += 1
+        return retired
 
     def _bucket(self, plen: int) -> int:
         return max(self.block_tokens, _next_pow2(plen))
@@ -417,8 +484,16 @@ class ContinuousEngine:
 
         hit = self.prefix.lookup(padded) if self.prefix else None
         if hit is not None:
-            # one-sided restore: get_nb per block + per-target flush
-            blocks = hit.fetch()
+            # one-sided restore: get_nb per block + per-target flush.
+            # A fetch that trips over a dead owner (death raced the
+            # pin) degrades to a recompute, never a crash.
+            try:
+                blocks = hit.fetch()
+            except DartError:
+                hit.release()
+                self.degraded_fetches += 1
+                hit = None
+        if hit is not None:
             k, v = unpack_kv_blocks(
                 blocks, n_layers=cfg.n_layers, kv_heads=cfg.n_kv_heads,
                 head_dim=cfg.head_dim, block_tokens=self.block_tokens,
@@ -427,6 +502,8 @@ class ContinuousEngine:
                           "k": jnp.asarray(k), "v": jnp.asarray(v)}
             nxt = hit.next_token
             seq.prefix_hit = True
+            seq.block_owners = tuple(sorted(
+                {bid.unit for bid in hit.blocks}))
             seq.on_retire = lambda s, h=hit: h.release()
         else:
             key = (1, bucket)
@@ -459,9 +536,18 @@ class ContinuousEngine:
             if self.scheduler.note_token(seq.slot, int(toks[seq.slot])):
                 self._retire(seq.slot)
 
-    def _retire(self, slot: int) -> None:
+    def _retire(self, slot: int, reason: Optional[str] = None) -> None:
         seq = self.scheduler.retire(slot)    # runs on_retire (unpin)
-        req = seq.req
-        req.output = np.asarray(seq.emitted, np.int32)
+        if reason is None:
+            reason = "eos" if seq.eos_seen else "length"
+        if reason == "timeout":
+            self.timeouts += 1
+        self._finalize(seq.req, np.asarray(seq.emitted, np.int32),
+                       reason)
+
+    def _finalize(self, req: Request, output: np.ndarray,
+                  reason: str) -> None:
+        req.output = output
+        req.finish_reason = reason
         req.t_done = time.perf_counter()
         req.done.set()

@@ -34,11 +34,14 @@ from typing import Deque
 import jax.numpy as jnp
 
 from ..core import DART_TEAM_ALL, GlobalPtr, GlobalRef
+from ..core.faults import DartError
 from ..core.globmem import ALIGNMENT, align_up
 
 
-class PoolExhausted(RuntimeError):
-    """No free block and (if the caller tried) nothing evictable."""
+class PoolExhausted(DartError):
+    """No free block and (if the caller tried) nothing evictable.
+    Part of the typed :class:`~repro.core.faults.DartError` ladder
+    (still a ``RuntimeError``)."""
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -82,6 +85,11 @@ class KVBlockPool:
             BlockId(unit=units[b % n_units], index=b // n_units)
             for b in range(self.n_blocks))
         self._lock = threading.Lock()
+        # units declared dead (note_unit_dead): their blocks are never
+        # handed out again and their refcount cells are unreachable —
+        # rc_add against them degrades to a no-op instead of an
+        # engine-path UnitFailedError.
+        self.dead_units: set = set()
 
     # -- allocation (controller-local metadata) --------------------------
     @property
@@ -97,7 +105,22 @@ class KVBlockPool:
 
     def free(self, bid: BlockId) -> None:
         with self._lock:
+            if bid.unit in self.dead_units:
+                return          # dead owner's capacity is gone, not free
             self._freelist.append(bid)
+
+    def note_unit_dead(self, unit: int) -> int:
+        """Degrade around a dead owner: purge its blocks from the
+        freelist (the pool shrinks — its HBM is gone) and stop touching
+        its refcount cells.  Returns the number of free blocks purged;
+        in-use blocks on the unit are the caller's to retire
+        (``PrefixCacheService.note_unit_dead`` / the serve engine)."""
+        with self._lock:
+            self.dead_units.add(unit)
+            before = len(self._freelist)
+            self._freelist = deque(b for b in self._freelist
+                                   if b.unit != unit)
+            return before - len(self._freelist)
 
     # -- addressing ------------------------------------------------------
     def block_ref(self, bid: BlockId) -> GlobalRef:
@@ -145,7 +168,11 @@ class KVBlockPool:
 
     def rc_add(self, bid: BlockId, delta: int) -> int:
         """Atomic ``dart_fetch_and_add`` on the block's refcount cell;
-        returns the pre-update count."""
+        returns the pre-update count.  Against a dead owner this is a
+        no-op returning 0 — the cell's HBM is gone and pin/unpin
+        accounting on it is moot (degradation, not an exception)."""
+        if bid.unit in self.dead_units:
+            return 0
         return self.rc_ref(bid).fetch_add(delta)
 
     def rc_load(self, bid: BlockId) -> int:

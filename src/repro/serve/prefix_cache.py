@@ -138,6 +138,8 @@ class PrefixStats:
     fetch_flushes: int = 0
     fetch_dispatches: int = 0
     publish_put_nb_ops: int = 0
+    dead_block_purges: int = 0
+    dead_misses: int = 0
 
     def snapshot(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -163,6 +165,16 @@ class PrefixHit:
         ``B`` per-block ``get_nb`` ops."""
         svc, pool = self.service, self.service.pool
         engine = pool.ctx.engine
+        dead = {bid.unit for bid in self.blocks} & pool.dead_units
+        if dead:
+            # owner died between pin and fetch (lookup already filters
+            # dead owners): surface the typed error so the caller can
+            # degrade to recompute instead of reading a dead lane
+            from ..core.faults import UnitFailedError
+            err = UnitFailedError(
+                f"prefix blocks owned by dead unit(s) {sorted(dead)}")
+            err.unit = min(dead)
+            raise err
         with svc._mutex:
             d0 = engine.dispatch_count
         by_owner: Dict[int, List[int]] = {}
@@ -226,6 +238,18 @@ class PrefixCacheService:
             entries = [self._dir.get(k) for k in keys]
             nxt = self._next_token.get(keys[-1])
             if any(e is None for e in entries) or nxt is None:
+                self.stats.misses += 1
+                return None
+            # blocks on a dead owner are unreadable: purge them and
+            # degrade to a miss (recompute), never an exception
+            dead = [k for k, e in zip(keys, entries)
+                    if e.bid.unit in self.pool.dead_units]
+            if dead:
+                for k in dead:
+                    self._dir.pop(k, None)
+                    self._next_token.pop(k, None)
+                    self.stats.dead_block_purges += 1
+                self.stats.dead_misses += 1
                 self.stats.misses += 1
                 return None
             # pin under the directory mutex: the evictor also holds it
@@ -308,6 +332,22 @@ class PrefixCacheService:
                     self.pool.free(ent.bid)
                     return True
                 return False
+
+    # -- degradation -----------------------------------------------------
+    def note_unit_dead(self, unit: int) -> int:
+        """Drop every directory entry whose block lives on ``unit``:
+        the bytes are unreadable, so later lookups of those prefixes
+        miss and recompute.  The blocks are NOT freed back to the pool
+        (the pool already purged the dead owner's capacity).  Returns
+        the number of entries purged."""
+        with self._mutex:
+            dead_keys = [k for k, e in self._dir.items()
+                         if e.bid.unit == unit]
+            for k in dead_keys:
+                del self._dir[k]
+                self._next_token.pop(k, None)
+                self.stats.dead_block_purges += 1
+            return len(dead_keys)
 
     def __len__(self) -> int:
         with self._mutex:

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, List, Optional
+from typing import Callable, Deque, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -38,6 +38,10 @@ class SeqState:
     emitted: List[int] = dataclasses.field(default_factory=list)
     eos_seen: bool = False
     prefix_hit: bool = False
+    # owner units of the prefix-cache blocks this sequence restored
+    # from (empty for prefilled sequences) — the serve engine retires
+    # residents whose owner set intersects a dead unit.
+    block_owners: Tuple[int, ...] = ()
     on_retire: Optional[Callable[["SeqState"], None]] = None
 
     @property

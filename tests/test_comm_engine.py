@@ -264,7 +264,7 @@ def test_engine_profile_machine_readable():
     from benchmarks import put_get
     profile = put_get.engine_profile(repeats=2, quick=True)
     s = profile["series"]
-    assert profile["schema"] == "BENCH_engine/v6"
+    assert profile["schema"] == "BENCH_engine/v7"
     assert s["blocking"]["dispatches"] == profile["n_ops"]
     assert s["coalesced"]["dispatches"] == 1
     assert s["mixed_size_coalesced"]["dispatches"] == 1

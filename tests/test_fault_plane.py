@@ -1,0 +1,556 @@
+"""Fault plane tests: typed error ladder, retry/deadline semantics,
+unit-death degradation, drain gating, and the seeded chaos harness.
+
+The chaos tests (``-m chaos``) replay a seeded random op schedule with
+injected faults against a fault-free oracle context and assert the
+survivable-fault contract: surviving lanes' final arenas are
+byte-identical to the oracle, and every failed handle raises a typed
+:class:`~repro.core.faults.DartError` subclass.  Both engine impls run
+via the shared ``engine_impl`` fixture.
+"""
+
+import random
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (DartConfig, DartError, FaultPlane, FaultSpec,
+                        FlushTimeoutError, RetriesExhaustedError,
+                        TransientDispatchFault, UnitFailedError,
+                        WindowDestroyedError, dart_accumulate, dart_exit,
+                        dart_get, dart_get_blocking, dart_init,
+                        dart_memalloc, dart_put, dart_team_create,
+                        dart_team_destroy, dart_waitall)
+from repro.core.group import DartGroup
+from repro.ft.elastic import (ClusterState, HeartbeatMonitor,
+                              StragglerTracker, plan_remesh, units_of_host)
+
+N_UNITS = 4
+WORLD = 0                        # WORLD poolid
+
+
+@pytest.fixture()
+def ctx(engine_impl):
+    c = dart_init(n_units=N_UNITS, config=DartConfig(
+        non_collective_pool_bytes=8192, team_pool_bytes=8192))
+    c.engine.impl = engine_impl
+    yield c
+    dart_exit(c)
+
+
+def _plane(ctx, **kw):
+    return ctx.attach_faults(seed=kw.pop("seed", 0), **kw)
+
+
+# ------------------------------------------------------- error ladder ----
+
+def test_error_ladder_parentage():
+    for cls in (UnitFailedError, FlushTimeoutError, RetriesExhaustedError,
+                TransientDispatchFault):
+        assert issubclass(cls, DartError)
+        assert issubclass(cls, RuntimeError)
+    assert issubclass(WindowDestroyedError, DartError)
+    assert issubclass(WindowDestroyedError, KeyError)
+    e = DartError("x")
+    assert e.poolid is None and e.unit is None and e.teamid is None
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(kind="explode")
+    with pytest.raises(ValueError, match="fail_rate"):
+        FaultPlane(fail_rate=1.5)
+    plane = FaultPlane(seed=3)
+    with pytest.raises(TypeError, match="not both"):
+        plane.schedule(FaultSpec(kind="fail"), poolid=0)
+
+
+# ------------------------------------------------- retry semantics -------
+
+def test_transient_fault_retries_and_recovers(ctx):
+    plane = _plane(ctx)
+    plane.schedule(kind="fail", poolid=WORLD, row=1, times=2)
+    g = dart_memalloc(ctx, 256, unit=1)
+    h = dart_put(ctx, g, np.arange(16, dtype=np.uint8))
+    ctx.engine.flush()
+    h.wait()                                 # recovered, not failed
+    out = dart_get_blocking(ctx, g, (16,), np.uint8)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.arange(16, dtype=np.uint8))
+    fs = ctx.engine.fault_stats()
+    assert fs["retries"] == 2
+    assert fs["failed_runs"] == 0
+    assert fs["injector"]["injected_fails"] == 2
+
+
+def test_drop_fault_is_retried_like_pre_fail(ctx):
+    plane = _plane(ctx)
+    plane.schedule(kind="drop", poolid=WORLD, row=2, times=1)
+    g = dart_memalloc(ctx, 128, unit=2)
+    h = dart_put(ctx, g, np.full(8, 7, np.uint8))
+    h.wait()
+    assert ctx.engine.fault_stats()["injector"]["injected_drops"] == 1
+    np.testing.assert_array_equal(
+        np.asarray(dart_get_blocking(ctx, g, (8,), np.uint8)), 7)
+
+
+def test_delay_fault_counts_and_completes(ctx):
+    plane = _plane(ctx)
+    plane.schedule(kind="delay", poolid=WORLD, row=0, delay_s=0.001,
+                   times=1)
+    g = dart_memalloc(ctx, 128, unit=0)
+    dart_put(ctx, g, np.full(8, 9, np.uint8)).wait()
+    assert ctx.engine.fault_stats()["injector"]["injected_delays"] == 1
+
+
+def test_retries_exhausted_typed_and_lane_fails_fast(ctx):
+    plane = _plane(ctx)
+    plane.schedule(kind="fail", poolid=WORLD, row=2, times=0)  # unlimited
+    g = dart_memalloc(ctx, 128, unit=2)
+    h = dart_put(ctx, g, np.arange(8, dtype=np.uint8))
+    ctx.engine.flush()                       # flush itself never raises
+    with pytest.raises(RetriesExhaustedError) as ei:
+        h.wait()
+    assert ei.value.poolid == WORLD and ei.value.row == 2
+    assert isinstance(ei.value, RuntimeError)
+    assert h.state == "failed"
+    with pytest.raises(RetriesExhaustedError):
+        h.test()                             # test() propagates too
+    # the lane is failed: enqueues fail fast until cleared
+    with pytest.raises(RetriesExhaustedError):
+        dart_put(ctx, g, np.arange(8, dtype=np.uint8))
+    assert ctx.engine.fault_stats()["enqueue_rejections"] == 1
+    # clear the lane, clear the (still-firing) spec: lane usable again
+    err = ctx.engine.clear_lane(WORLD, 2)
+    assert isinstance(err, RetriesExhaustedError)
+    plane.specs.clear()
+    dart_put(ctx, g, np.full(8, 5, np.uint8)).wait()
+    np.testing.assert_array_equal(
+        np.asarray(dart_get_blocking(ctx, g, (8,), np.uint8)), 5)
+
+
+def test_flush_deadline_typed_timeout(ctx):
+    ctx.engine.flush_deadline_s = 1e-4
+    ctx.engine.retry_limit = 1_000_000       # deadline must bind first
+    plane = _plane(ctx)
+    plane.schedule(kind="fail", poolid=WORLD, row=1, times=0)
+    g = dart_memalloc(ctx, 128, unit=1)
+    h = dart_put(ctx, g, np.arange(8, dtype=np.uint8))
+    ctx.engine.flush()
+    with pytest.raises(FlushTimeoutError) as ei:
+        h.wait()
+    assert ei.value.poolid == WORLD and ei.value.row == 1
+    assert ctx.engine.fault_stats()["flush_timeouts"] == 1
+
+
+def test_put_post_dispatch_fault_is_idempotently_retried(ctx):
+    plane = _plane(ctx)
+    plane.schedule(kind="fail", poolid=WORLD, row=1, times=1,
+                   issued=True)              # strikes AFTER the kernel
+    g = dart_memalloc(ctx, 128, unit=1)
+    h = dart_put(ctx, g, np.arange(16, dtype=np.uint8))
+    h.wait()
+    np.testing.assert_array_equal(
+        np.asarray(dart_get_blocking(ctx, g, (16,), np.uint8)),
+        np.arange(16, dtype=np.uint8))
+    assert ctx.engine.fault_stats()["retries"] == 1
+
+
+def test_accumulate_post_fault_at_most_once(ctx):
+    """A post-dispatch fault on an accumulate run aborts instead of
+    retrying, and the differential assertion: the target holds exactly
+    ONE application of the op (the faulted attempt's kernel ran)."""
+    g = dart_memalloc(ctx, 128, unit=1)
+    dart_put(ctx, g, np.full(8, 10, np.int32)).wait()
+    plane = _plane(ctx)
+    plane.schedule(kind="fail", poolid=WORLD, row=1, times=1,
+                   issued=True, op_kind="acc")
+    h = dart_accumulate(ctx, g, np.full(8, 3, np.int32))
+    ctx.engine.flush()
+    with pytest.raises(DartError, match="at-most-once"):
+        h.wait()
+    fs = ctx.engine.fault_stats()
+    assert fs["at_most_once_aborts"] == 1
+    assert fs["retries"] == 0                # never re-issued
+    ctx.engine.clear_lane(WORLD, 1)
+    out = np.asarray(dart_get_blocking(ctx, g, (8,), np.int32))
+    np.testing.assert_array_equal(out, 13)   # applied exactly once
+
+
+def test_accumulate_pre_fault_retries(ctx):
+    """A pre-dispatch accumulate fault provably never issued: retrying
+    is safe and the result is exactly one application."""
+    g = dart_memalloc(ctx, 128, unit=2)
+    dart_put(ctx, g, np.full(8, 1, np.int32)).wait()
+    plane = _plane(ctx)
+    plane.schedule(kind="fail", poolid=WORLD, row=2, times=2,
+                   op_kind="acc")
+    h = dart_accumulate(ctx, g, np.full(8, 5, np.int32))
+    h.wait()
+    assert ctx.engine.fault_stats()["retries"] == 2
+    np.testing.assert_array_equal(
+        np.asarray(dart_get_blocking(ctx, g, (8,), np.int32)), 6)
+
+
+def test_failed_run_fails_later_ops_on_lane_program_order(ctx):
+    """Op N failing must doom op N+1 on the same lane within the same
+    flush (the later write must not apply past the hole), while other
+    pools' runs in the same flush dispatch normally.  (The innocent op
+    lives in a different pool: WORLD-pool runs can legitimately span
+    rows, and a run shares its dispatch's fate.)"""
+    from repro.core import dart_team_memalloc_aligned
+    plane = _plane(ctx)
+    plane.schedule(kind="fail", poolid=WORLD, row=1, times=0)
+    g1 = dart_memalloc(ctx, 256, unit=1)
+    gt = dart_team_memalloc_aligned(ctx, 0, 256).setunit(3)
+    h_a = dart_put(ctx, g1, np.full(16, 1, np.uint8))
+    # overlapping second put splits the run → two runs on lane (0, 1)
+    h_b = dart_put(ctx, g1 + 8, np.full(16, 2, np.uint8))
+    h_c = dart_put(ctx, gt, np.full(16, 3, np.uint8))
+    ctx.engine.flush()
+    with pytest.raises(RetriesExhaustedError):
+        h_a.wait()
+    with pytest.raises(DartError):
+        h_b.wait()
+    h_c.wait()                               # other pool unaffected
+    np.testing.assert_array_equal(
+        np.asarray(dart_get_blocking(ctx, gt, (16,), np.uint8)), 3)
+
+
+def test_dart_waitall_propagates_typed_error(ctx):
+    plane = _plane(ctx)
+    plane.schedule(kind="fail", poolid=WORLD, row=2, times=0)
+    g_ok = dart_memalloc(ctx, 128, unit=0)
+    g_bad = dart_memalloc(ctx, 128, unit=2)
+    hs = [dart_put(ctx, g_ok, np.full(8, 1, np.uint8)),
+          dart_put(ctx, g_bad, np.full(8, 2, np.uint8))]
+    ctx.engine.flush()
+    with pytest.raises(RetriesExhaustedError):
+        dart_waitall(hs)
+
+
+# ------------------------------------------- enqueue-boundary faults -----
+
+def test_poison_spec_fails_lane_at_enqueue(ctx):
+    plane = _plane(ctx)
+    plane.schedule(kind="poison", poolid=WORLD, row=1, after=1)
+    g = dart_memalloc(ctx, 128, unit=1)
+    dart_put(ctx, g, np.full(8, 4, np.uint8)).wait()   # op 1 passes
+    with pytest.raises(DartError, match="poisoned"):
+        dart_put(ctx, g, np.full(8, 5, np.uint8))
+    assert plane.stats()["poisons"] == 1
+    err = ctx.engine.clear_lane(WORLD, 1)
+    assert err is not None
+    dart_put(ctx, g, np.full(8, 6, np.uint8)).wait()
+
+
+def test_unit_dead_spec_at_op_n(ctx):
+    """'unit dies at op N': the first N enqueues to the unit succeed,
+    the N+1st (and everything after) fails with UnitFailedError."""
+    plane = _plane(ctx)
+    plane.schedule(kind="unit_dead", unit=3, after=2)
+    g = dart_memalloc(ctx, 256, unit=3)
+    h1 = dart_put(ctx, g, np.full(8, 1, np.uint8))
+    h2 = dart_put(ctx, g + 64, np.full(8, 2, np.uint8))
+    with pytest.raises(UnitFailedError) as ei:
+        dart_put(ctx, g + 128, np.full(8, 3, np.uint8))
+    assert ei.value.unit == 3
+    # death also doomed the two queued ops on the dead unit's lanes
+    for h in (h1, h2):
+        with pytest.raises(UnitFailedError):
+            h.wait()
+    assert 3 in ctx.engine.dead_units
+
+
+def test_mark_unit_dead_dooms_queued_ops_and_spares_survivors(ctx):
+    g1 = dart_memalloc(ctx, 128, unit=1)
+    g2 = dart_memalloc(ctx, 128, unit=2)
+    h_dead = dart_put(ctx, g2, np.full(8, 9, np.uint8))
+    h_live = dart_put(ctx, g1, np.full(8, 8, np.uint8))
+    doomed = ctx.engine.mark_unit_dead(2, reason="test kill")
+    assert doomed == 1
+    with pytest.raises(UnitFailedError, match="declared dead"):
+        h_dead.wait()
+    h_live.wait()                            # surviving lane flushes
+    np.testing.assert_array_equal(
+        np.asarray(dart_get_blocking(ctx, g1, (8,), np.uint8)), 8)
+    # fail-fast on new enqueues, idempotent re-kill, then revive
+    with pytest.raises(UnitFailedError):
+        dart_put(ctx, g2, np.full(8, 1, np.uint8))
+    assert ctx.engine.mark_unit_dead(2) == 0
+    ctx.engine.revive_unit(2)
+    dart_put(ctx, g2, np.full(8, 7, np.uint8)).wait()
+
+
+def test_get_on_dead_unit_rejected(ctx):
+    g = dart_memalloc(ctx, 128, unit=1)
+    ctx.engine.mark_unit_dead(1)
+    with pytest.raises(UnitFailedError):
+        dart_get(ctx, g, (8,), np.uint8)
+
+
+# ------------------------------------------------- window destruction ----
+
+def test_team_destroy_raises_typed_window_error(ctx):
+    from repro.core import dart_team_memalloc_aligned
+    tid = dart_team_create(ctx, 0, DartGroup((0, 1)))
+    gt = dart_team_memalloc_aligned(ctx, tid, 256)
+    h = dart_put(ctx, gt, np.full(8, 1, np.uint8))
+    poolid = h.poolid
+    dart_team_destroy(ctx, tid)
+    with pytest.raises(WindowDestroyedError) as ei:
+        h.wait()
+    assert ei.value.teamid == tid and ei.value.poolid == poolid
+    assert isinstance(ei.value, KeyError)
+    assert isinstance(ei.value, RuntimeError)
+    assert "window destroyed" in str(ei.value)
+
+
+# ------------------------------------------------- progress drain gate ---
+
+def test_progress_drain_gate_skips_background_drain(ctx):
+    plane = _plane(ctx)
+    plane.schedule(kind="skip_drain", poolid=WORLD, row=1, times=0)
+    pp = ctx.start_progress(watermark_ops=1, idle_s=0.001)
+    g = dart_memalloc(ctx, 128, unit=1)
+    h = dart_put(ctx, g, np.full(8, 3, np.uint8))
+    deadline = time.monotonic() + 2.0
+    while pp.drains_skipped == 0:
+        assert time.monotonic() < deadline, "drain gate never consulted"
+        time.sleep(0.002)
+    assert h.state == "queued"               # stranded by the gate
+    h.wait()                                 # foreground flush ignores it
+    assert h.state == "complete"
+    ctx.stop_progress()
+
+
+# ---------------------------------------------------- heartbeat wiring ---
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_sweep_boundary_exactly_threshold():
+    clk = _FakeClock()
+    cluster = ClusterState(n_hosts=2, devices_per_host=1)
+    mon = HeartbeatMonitor(cluster, interval_s=1.0, miss_threshold=3,
+                           clock=clk)
+    clk.t = 3.0 - 1e-9                       # just under: alive
+    assert mon.sweep() == []
+    clk.t = 3.0                              # exactly threshold: dead
+    assert mon.sweep() == [0, 1]
+    assert mon.sweep() == []                 # only *newly* dead reported
+
+
+def test_sweep_failures_marks_units_dead(ctx):
+    clk = _FakeClock()
+    cluster = ClusterState(n_hosts=2, devices_per_host=2)
+    mon = HeartbeatMonitor(cluster, interval_s=1.0, miss_threshold=2,
+                           clock=clk)
+    ctx.attach_heartbeat_monitor(mon, devices_per_host=2)
+    assert ctx.sweep_failures() == []
+    clk.t = 10.0
+    mon.beat(0)                              # host 0 stays alive
+    assert ctx.sweep_failures() == [2, 3]    # host 1 = units 2, 3
+    g = dart_memalloc(ctx, 128, unit=2)
+    with pytest.raises(UnitFailedError, match="unit 2 is dead"):
+        dart_put(ctx, g, np.full(8, 1, np.uint8))
+    # surviving unit unaffected
+    g0 = dart_memalloc(ctx, 128, unit=0)
+    dart_put(ctx, g0, np.full(8, 2, np.uint8)).wait()
+
+
+def test_units_of_host():
+    assert units_of_host(0, 4) == (0, 1, 2, 3)
+    assert units_of_host(2, 4) == (8, 9, 10, 11)
+    assert units_of_host(3, 1) == (3,)
+
+
+# --------------------------------------------------- elastic satellites --
+
+def test_plan_remesh_zero_survivors():
+    cluster = ClusterState(n_hosts=2, devices_per_host=4)
+    for h in range(2):
+        cluster.alive[h] = False
+    with pytest.raises(RuntimeError, match="not enough devices"):
+        plan_remesh(cluster, model_parallel=4)
+
+
+def test_plan_remesh_survivors_below_model_parallel():
+    cluster = ClusterState(n_hosts=4, devices_per_host=2)
+    for h in (1, 2, 3):
+        cluster.alive[h] = False             # 2 devices < model=4
+    with pytest.raises(RuntimeError, match="model_parallel=4"):
+        plan_remesh(cluster, model_parallel=4)
+
+
+def test_straggler_rebalance_single_alive_host():
+    tr = StragglerTracker(n_hosts=3)
+    tr.record(0, 1.0)                        # only host 0 ever reports
+    assert tr.stragglers() == []             # no peers to be slower than
+    plan = tr.rebalance_plan({0: 4})
+    assert plan == {0: 4}                    # nothing to shift, no crash
+
+
+# --------------------------------------------------------- chaos ---------
+
+ACC_DTYPE = np.int32
+SLOT_ELEMS = 16                              # int32 per slot (64 B)
+SLOTS = 3
+
+
+class _Mirror:
+    """One context's view of the chaos schedule's allocations."""
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+        self.gptrs = {u: dart_memalloc(ctx, SLOTS * SLOT_ELEMS * 4, u)
+                      for u in range(N_UNITS)}
+
+    def slot(self, u, s):
+        return self.gptrs[u] + s * SLOT_ELEMS * 4
+
+
+def _chaos_schedule(rng, n_ops):
+    """Seeded op schedule: (kind, unit, slot, payload-seed) tuples plus
+    flush points."""
+    ops = []
+    for i in range(n_ops):
+        kind = rng.choice(["put", "put", "acc", "get"])
+        ops.append((kind, rng.randrange(N_UNITS), rng.randrange(SLOTS),
+                    rng.randrange(1, 100)))
+        if rng.random() < 0.15:
+            ops.append(("flush", None, None, None))
+    ops.append(("flush", None, None, None))
+    return ops
+
+
+def _run_schedule(ctx, mirror, ops, accept=None):
+    """Apply the schedule; returns (handles, accepted-op index set).
+    ``accept`` (oracle replay) restricts to the subject's accepted ops
+    so both sides applied the identical op sequence."""
+    handles, accepted = [], set()
+    for i, (kind, u, s, seed) in enumerate(ops):
+        if kind == "flush":
+            ctx.engine.flush()
+            continue
+        if accept is not None and i not in accept:
+            continue
+        val = (np.arange(SLOT_ELEMS, dtype=ACC_DTYPE) * seed) % 251
+        try:
+            if kind == "put":
+                handles.append(dart_put(ctx, mirror.slot(u, s), val))
+            elif kind == "acc":
+                handles.append(dart_accumulate(ctx, mirror.slot(u, s),
+                                               val))
+            else:
+                handles.append(ctx.engine.get(
+                    ctx.heap, ctx.teams_by_slot, mirror.slot(u, s),
+                    (SLOT_ELEMS,), ACC_DTYPE))
+        except DartError:
+            continue                         # enqueue rejected (subject)
+        accepted.add(i)
+    ctx.engine.flush()
+    return handles, accepted
+
+
+def _assert_differential(subject, oracle, handles):
+    """The survivable-fault contract: every failed handle raises a
+    typed DartError, and every surviving lane is byte-identical to the
+    fault-free oracle."""
+    n_failed = 0
+    for h in handles:
+        if h.state == "failed":
+            n_failed += 1
+            with pytest.raises(DartError):
+                h.wait()
+    dead = subject.ctx.engine.dead_units
+    failed_rows = {row for (pid, row) in subject.ctx.engine.failed_lanes
+                   if pid == WORLD}
+    surviving = [u for u in range(N_UNITS)
+                 if u not in dead and u not in failed_rows]
+    assert surviving, "chaos schedule killed every lane"
+    for u in surviving:
+        got = np.asarray(dart_get_blocking(
+            subject.ctx, subject.gptrs[u],
+            (SLOTS * SLOT_ELEMS,), ACC_DTYPE))
+        want = np.asarray(dart_get_blocking(
+            oracle.ctx, oracle.gptrs[u],
+            (SLOTS * SLOT_ELEMS,), ACC_DTYPE))
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"lane (0, {u}) diverged")
+    return n_failed
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_differential_vs_oracle(engine_impl, seed):
+    """Randomized fault schedules vs the fault-free oracle: transient
+    faults (absorbed by retry), a mid-schedule unit death, and a lane
+    poisoning — surviving lanes must match the oracle byte-for-byte."""
+    cfg = DartConfig(non_collective_pool_bytes=8192,
+                     team_pool_bytes=8192)
+    subj_ctx = dart_init(n_units=N_UNITS, config=cfg)
+    orac_ctx = dart_init(n_units=N_UNITS, config=cfg)
+    subj_ctx.engine.impl = orac_ctx.engine.impl = engine_impl
+    try:
+        rng = random.Random(1000 + seed)
+        plane = subj_ctx.attach_faults(seed=seed)
+        # recoverable transients on two lanes
+        plane.schedule(kind="fail", poolid=WORLD, row=rng.randrange(2),
+                       times=rng.randrange(1, 3))
+        plane.schedule(kind="delay", poolid=WORLD, row=1,
+                       delay_s=0.0005, times=2)
+        # unit 3 dies mid-schedule; lane (0, 2) poisoned later
+        plane.schedule(kind="unit_dead", unit=3,
+                       after=rng.randrange(2, 6))
+        plane.schedule(kind="poison", poolid=WORLD, row=2,
+                       after=rng.randrange(4, 10))
+
+        subject, oracle = _Mirror(subj_ctx), _Mirror(orac_ctx)
+        ops = _chaos_schedule(rng, n_ops=40)
+        handles, accepted = _run_schedule(subj_ctx, subject, ops)
+        _run_schedule(orac_ctx, oracle, ops, accept=accepted)
+        _assert_differential(subject, oracle, handles)
+        fs = subj_ctx.engine.fault_stats()
+        assert fs["retries"] <= subj_ctx.engine.retry_limit * max(
+            1, fs["injector"]["specs_fired"])       # retries bounded
+    finally:
+        dart_exit(subj_ctx)
+        dart_exit(orac_ctx)
+
+
+@pytest.mark.chaos
+def test_chaos_rate_driven_faults_all_absorbed(engine_impl):
+    """Pure rate-driven transients well under the retry budget: every
+    handle completes and the arenas match the oracle exactly (the
+    retry loop is invisible to callers)."""
+    cfg = DartConfig(non_collective_pool_bytes=8192,
+                     team_pool_bytes=8192)
+    subj_ctx = dart_init(n_units=N_UNITS, config=cfg)
+    orac_ctx = dart_init(n_units=N_UNITS, config=cfg)
+    subj_ctx.engine.impl = orac_ctx.engine.impl = engine_impl
+    subj_ctx.engine.retry_limit = 8          # 0.15^9 ≈ never exhausts
+    subj_ctx.engine.retry_base_s = 1e-5
+    try:
+        subj_ctx.attach_faults(seed=42, fail_rate=0.15)
+        subject, oracle = _Mirror(subj_ctx), _Mirror(orac_ctx)
+        rng = random.Random(77)
+        # puts/gets only: rate faults can strike post-acc (at-most-once
+        # aborts are scheduled-fault territory, asserted separately)
+        ops = [op for op in _chaos_schedule(rng, n_ops=30)
+               if op[0] != "acc"]
+        handles, accepted = _run_schedule(subj_ctx, subject, ops)
+        _run_schedule(orac_ctx, oracle, ops, accept=accepted)
+        n_failed = _assert_differential(subject, oracle, handles)
+        assert n_failed == 0
+        assert not subj_ctx.engine.failed_lanes
+        assert subj_ctx.engine.fault_stats()["retries"] > 0
+    finally:
+        dart_exit(subj_ctx)
+        dart_exit(orac_ctx)

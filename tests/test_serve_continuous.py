@@ -487,3 +487,123 @@ def test_continuous_submit_rejects_overflowing_budget(engine):
     prompt = np.arange(1, 40, dtype=np.int32)      # bucket 64
     with pytest.raises(ValueError):
         engine.submit(prompt, max_new_tokens=10)   # 64 + 10 > max_seq 64
+
+
+# ---------------------------------------------------------------------------
+# fault plane: per-request deadlines + dead-owner degradation
+# ---------------------------------------------------------------------------
+
+def test_continuous_deadline_frees_pinned_slot(engine):
+    """A stuck sequence cannot pin a slot forever: past its wall-clock
+    deadline it retires with finish_reason 'timeout' and the slot is
+    immediately reusable."""
+    import time as _time
+
+    free0 = engine.scheduler.n_free
+    req = engine.submit(np.arange(1, 6, dtype=np.int32),
+                        max_new_tokens=40, deadline_s=0.02)
+    engine._ingest()
+    engine._admit_all()
+    assert engine.scheduler.n_free == free0 - 1    # resident, pinned
+    _time.sleep(0.03)
+    engine._sweep_deadlines()
+    assert req.done.is_set()
+    assert req.finish_reason == "timeout"
+    assert engine.scheduler.n_free == free0        # slot freed
+    assert engine.stats()["timeouts"] >= 1
+
+
+def test_continuous_deadline_times_out_waiting_request(engine):
+    """An already-expired waiting request is finalized with 'timeout'
+    before it ever takes a slot; fresh requests still complete."""
+    import time as _time
+
+    expired = engine.submit(np.arange(1, 5, dtype=np.int32),
+                            max_new_tokens=4, deadline_s=1e-4)
+    fresh = engine.submit(np.arange(1, 5, dtype=np.int32),
+                          max_new_tokens=4)
+    _time.sleep(0.002)
+    engine.run_until_idle()
+    assert expired.finish_reason == "timeout"
+    assert expired.output.size == 0
+    assert fresh.done.is_set() and fresh.finish_reason in ("eos", "length")
+    assert fresh.output.shape == (4,)
+
+
+def test_continuous_submit_rejects_nonpositive_deadline(engine):
+    with pytest.raises(ValueError, match="deadline_s"):
+        engine.submit(np.arange(1, 5, dtype=np.int32), deadline_s=0.0)
+
+
+@pytest.fixture()
+def fresh_engine(engine):
+    """A private engine (unit death is permanent, so these tests must
+    not poison the module-scoped one).  Reuses the module fixture's
+    cfg/params — only the serve+DART planes are rebuilt."""
+    from repro.serve import ContinuousEngine
+
+    return ContinuousEngine(engine.cfg, engine.params, max_batch=3,
+                            max_seq=64, block_tokens=8, n_units=4,
+                            n_cache_blocks=32)
+
+
+def test_continuous_dead_owner_degrades_to_recompute(fresh_engine):
+    """Killing a block-owner unit degrades the serve plane instead of
+    crashing it: the dead owner's cache entries become misses
+    (recompute), its blocks leave the pool, and every request not
+    owned by the dead unit completes."""
+    eng = fresh_engine
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(1, 100, size=n).astype(np.int32)
+               for n in (13, 9, 11)]
+    for p in prompts:
+        eng.submit(p, max_new_tokens=3)
+    assert eng.run_until_idle() == 3
+
+    padded = eng._padded_prompt(prompts[0])
+    hit = eng.prefix.lookup(padded)
+    assert hit is not None
+    owners = {bid.unit for bid in hit.blocks}
+    hit.release()
+    victim = min(owners)
+
+    dir0 = len(eng.prefix)
+    eng.note_unit_death(victim)
+    assert victim in eng.dart.engine.dead_units
+    assert victim in eng.kv_pool.dead_units
+    assert len(eng.prefix) < dir0                  # dead entries purged
+    assert all(b.unit != victim for b in eng.kv_pool._freelist)
+    assert eng.prefix.stats.dead_block_purges > 0
+
+    # the dead owner's prefix now misses → recompute, and it completes
+    prefills0 = eng.prefills
+    reqs = [eng.submit(p, max_new_tokens=3) for p in prompts]
+    assert eng.run_until_idle() == 3
+    for r in reqs:
+        assert r.done.is_set() and r.finish_reason in ("eos", "length")
+        assert r.output.shape == (3,)
+    assert eng.prefills > prefills0                # recomputed, not crashed
+
+
+def test_continuous_resident_on_dead_owner_retires_unit_failed(fresh_engine):
+    """A resident restored from prefix blocks owned by a dying unit is
+    retired with finish_reason 'unit_failed' (slot freed); residents
+    not touching the dead owner keep decoding."""
+    eng = fresh_engine
+    prompt = np.arange(1, 14, dtype=np.int32)
+    eng.submit(prompt, max_new_tokens=3)
+    assert eng.run_until_idle() == 1               # publish the prefix
+
+    req = eng.submit(prompt, max_new_tokens=30)
+    eng._ingest()
+    eng._admit_all()                               # admitted via prefix hit
+    seq = next(s for s in eng.scheduler.residents if s.req is req)
+    assert seq.prefix_hit and seq.block_owners
+    victim = seq.block_owners[0]
+
+    retired = eng.note_unit_death(victim)
+    assert retired == 1
+    assert req.done.is_set()
+    assert req.finish_reason == "unit_failed"
+    assert eng.scheduler.n_resident == 0           # slot freed
+    assert eng.stats()["unit_failed_retired"] == 1
