@@ -346,7 +346,12 @@ def engine_profile(*, repeats: int = 20, quick: bool = False) -> dict:
     PLUS — schema v7 — the ``faults`` block: clean vs
     transient-faulted flush µs/op (bounded retries, nothing
     exhausted), survivor throughput after a unit death, and zero
-    steady-state recompiles on the retry path."""
+    steady-state recompiles on the retry path, PLUS — schema v8 —
+    the ``shm_plane`` block: intra-node zero-copy puts through the
+    shared-memory window vs the jitted blocking path (the guard pins
+    shm ≥ 5× faster µs/op), shm-direct broadcast/gather/scatter at
+    ZERO jitted dispatches, and zero steady-state recompiles (the shm
+    route never traces anything)."""
     from repro.kernels import segmented_copy as sc
     n_ops = 8 if quick else 16
     nbytes = 4096
@@ -788,8 +793,71 @@ def engine_profile(*, repeats: int = 20, quick: bool = False) -> dict:
     }
     ctx.engine.attach_faults(None)
 
+    # --- shm plane (schema v8) ---------------------------------------
+    # Write-side zero-copy: blocking puts on a FLAG_SHM pointer route
+    # through the shared-memory window (locked host memcpy, zero
+    # jitted dispatches) vs the identical puts on the non-shm `gp`
+    # riding the jitted scatter.  Collectives on the shm pool go
+    # shm-direct: the guard pins all three at 0 dispatches.
+    from repro.core import dart_team_memalloc_shared
+    ctx.engine.revive_unit(dead_unit)          # heal the faults block
+    gshm = dart_team_memalloc_shared(ctx, DART_TEAM_ALL, 1 << 20)
+    tshm = gshm.setunit(1)
+
+    def shm_put():
+        for i in range(n_ops):
+            rt.dart_put_blocking(ctx, tshm + i * stride, val)
+
+    def jitted_put():
+        for i in range(n_ops):
+            rt.dart_put_blocking(ctx, gp.setunit(1) + i * stride, val)
+
+    shm_put()
+    jitted_put()                               # plans hot
+    c0 = ctx.engine.compile_count
+    d0 = ctx.engine.dispatch_count
+    t_shm_put = time_call(shm_put, repeats=repeats)
+    shm_put_dispatches = ctx.engine.dispatch_count - d0
+    t_jit_put = time_call(jitted_put, repeats=repeats)
+
+    def shm_get():
+        for i in range(n_ops):
+            rt.dart_get_blocking(ctx, tshm + i * stride, (n,), jnp.float32)
+
+    shm_get()
+    t_shm_get = time_call(shm_get, repeats=repeats)
+
+    rt.dart_flush(ctx)
+    d0 = ctx.engine.dispatch_count
+    rt.dart_bcast(ctx, gshm, nbytes).wait()
+    bcast_dispatches = ctx.engine.dispatch_count - d0
+    d0 = ctx.engine.dispatch_count
+    gat, gh = rt.dart_gather(ctx, gshm, nbytes)
+    gh.wait()
+    gather_dispatches = ctx.engine.dispatch_count - d0
+    d0 = ctx.engine.dispatch_count
+    rt.dart_scatter(ctx, gshm, np.asarray(gat)).wait()
+    scatter_dispatches = ctx.engine.dispatch_count - d0
+    t_bcast = time_call(lambda: rt.dart_bcast(ctx, gshm, nbytes).wait(),
+                        repeats=repeats)
+    shm_plane = {
+        "shm_put_us_per_op": round(t_shm_put.mean_us / n_ops, 3),
+        "jitted_put_us_per_op": round(t_jit_put.mean_us / n_ops, 3),
+        "shm_put_speedup": round(
+            t_jit_put.mean_us / max(t_shm_put.mean_us, 1e-9), 2),
+        "shm_get_us_per_op": round(t_shm_get.mean_us / n_ops, 3),
+        "shm_put_dispatches": shm_put_dispatches,
+        "broadcast_us": round(t_bcast.mean_us, 3),
+        "broadcast_dispatches": bcast_dispatches,
+        "gather_dispatches": gather_dispatches,
+        "scatter_dispatches": scatter_dispatches,
+        "shm_puts": ctx.engine.shm_puts,
+        "shm_collective_ops": ctx.engine.shm_collective_ops,
+        "recompiles_steady_state": ctx.engine.compile_count - c0,
+    }
+
     profile = {
-        "schema": "BENCH_engine/v7",
+        "schema": "BENCH_engine/v8",
         "n_ops": n_ops,
         "nbytes": nbytes,
         "quick": quick,
@@ -800,6 +868,7 @@ def engine_profile(*, repeats: int = 20, quick: bool = False) -> dict:
         "strided": strided,
         "narray": narray,
         "faults": faults_block,
+        "shm_plane": shm_plane,
         "plan_cache": {
             "compile_count": ctx.engine.compile_count,
             "plan_cache_hits": ctx.engine.plan_cache_hits,

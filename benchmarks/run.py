@@ -75,7 +75,7 @@ def main() -> None:
         print(f"# wrote {path}", flush=True)
 
     if "put_get" in suites:
-        # machine-readable engine trajectory (schema BENCH_engine/v7:
+        # machine-readable engine trajectory (schema BENCH_engine/v8:
         # dispatch counts + µs/op for blocking vs coalesced vs
         # per-target vs mixed-size, the flush cost model — cold
         # compile vs warm plan-cache-hit µs/op and steady-state

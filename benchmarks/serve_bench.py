@@ -24,7 +24,7 @@ recompiles (jit cache sizes + prefill buckets + DART plan compiles all
 flat).
 
 Results merge as the ``serving`` block into
-``benchmarks/out/BENCH_engine.json`` (schema BENCH_engine/v7) —
+``benchmarks/out/BENCH_engine.json`` (schema BENCH_engine/v8) —
 run ``python -m benchmarks.run --quick`` first;
 ``scripts/check_bench_schema.py`` enforces the acceptance pins.
 """
@@ -195,7 +195,7 @@ def main() -> None:
         profile = json.loads(jpath.read_text())
     else:   # standalone run: a serving-only stub (CI runs benchmarks.run
             # first, so the full profile is normally already there)
-        profile = {"schema": "BENCH_engine/v7"}
+        profile = {"schema": "BENCH_engine/v8"}
     profile["serving"] = serving
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     with open(jpath, "w") as f:

@@ -10,11 +10,13 @@
 #    engine vs the synchronous wave under one open-loop Poisson trace,
 #    merged as the `serving` block into BENCH_engine.json
 # 4. BENCH_engine schema guard: the machine-readable engine trajectory
-#    (benchmarks/out/BENCH_engine.json) must keep the BENCH_engine/v7
+#    (benchmarks/out/BENCH_engine.json) must keep the BENCH_engine/v8
 #    shape and its dispatch/flush-cost/overlap/serving/strided/narray/
-#    faults invariants (incl. the varying-stride zero-recompile pin
-#    and the bounded-retry/degraded-throughput pins), so perf diffs
-#    stay comparable across PRs
+#    faults/shm_plane invariants (incl. the varying-stride
+#    zero-recompile pin, the bounded-retry/degraded-throughput pins,
+#    and the shm-plane pins: shm put >= 5x faster than jitted,
+#    shm-direct collectives at 0 dispatches), so perf diffs stay
+#    comparable across PRs
 # 5. threaded stress suite, re-run standalone: the progress-plane
 #    differential and the atomics/lock contention tests exercise real
 #    thread interleavings, so an extra pass catches schedules the
@@ -23,7 +25,8 @@
 #    differential (subject with injected faults vs fault-free oracle,
 #    under both engine impls) — quick and deterministic, but it is
 #    the only pass that drives the retry/degradation machinery
-#    end-to-end, so it gets its own step
+#    end-to-end, so it gets its own step; the shm-plane chaos tests
+#    (fault-plane parity on the zero-copy write path) ride along
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -36,7 +39,7 @@ echo "== threaded stress suite =="
 python -m pytest -x -q tests/test_progress_plane.py tests/test_atomics_stress.py tests/test_core_lock.py
 
 echo "== chaos fault schedules =="
-python -m pytest -x -q -m chaos tests/test_fault_plane.py
+python -m pytest -x -q -m chaos tests/test_fault_plane.py tests/test_shm_plane.py
 
 echo "== benchmarks (quick) =="
 python -m benchmarks.run --quick

@@ -12,8 +12,8 @@ Two layers (docs/API.md):
 """
 
 from .faults import (DartError, FaultPlane, FaultSpec, FlushTimeoutError,
-                     RetriesExhaustedError, TransientDispatchFault,
-                     UnitFailedError)
+                     RetriesExhaustedError, ShmBoundsError,
+                     TransientDispatchFault, UnitFailedError)
 from .gptr import (ADDR_MAX, DART_GPTR_NULL, FLAG_COLLECTIVE, FLAG_SHM,
                    NON_COLLECTIVE_SEG, GlobalPtr)
 from .group import (DartGroup, dart_group_addmember, dart_group_copy,
@@ -36,8 +36,9 @@ from .collectives import (team_all_gather, team_all_to_all, team_barrier,
 from .atomics import AtomicsProvider, Cell, ThreadedAtomics
 from .lock import FREE, DartLock, LockService
 from .progress import ProgressPlane
-from .shm import (Locality, classify_locality, dart_shm_view,
-                  dart_team_memalloc_shared, mint_shm, shm_supported)
+from .shm import (Locality, classify_locality, dart_shm_put, dart_shm_view,
+                  dart_team_memalloc_shared, invalidate_shm_cache, mint_shm,
+                  shm_supported, shm_writable, try_shm_put, try_shm_view)
 from .atomic_ops import (HeapAtomicsProvider, dart_compare_and_swap,
                          dart_fetch_and_add, dart_fetch_and_store)
 from .runtime import (DartConfig, DartContext, dart_accumulate,
@@ -63,7 +64,8 @@ __all__ = [
     "GlobalArray", "GlobalRef",
     # fault plane + typed error ladder
     "DartError", "FaultPlane", "FaultSpec", "FlushTimeoutError",
-    "RetriesExhaustedError", "TransientDispatchFault", "UnitFailedError",
+    "RetriesExhaustedError", "ShmBoundsError", "TransientDispatchFault",
+    "UnitFailedError",
     # DASH-style distributed containers
     "NArray", "BlockedDist", "CyclicDist", "BlockCyclicDist", "TileDist",
     "narray_copy",
@@ -95,9 +97,10 @@ __all__ = [
     "AtomicsProvider", "Cell", "ThreadedAtomics", "HeapAtomicsProvider",
     "dart_compare_and_swap", "dart_fetch_and_add", "dart_fetch_and_store",
     "FREE", "DartLock", "LockService",
-    # shared-memory windows
-    "Locality", "classify_locality", "dart_shm_view",
-    "dart_team_memalloc_shared", "mint_shm", "shm_supported",
+    # shared-memory windows (read views + the zero-copy write plane)
+    "Locality", "classify_locality", "dart_shm_put", "dart_shm_view",
+    "dart_team_memalloc_shared", "invalidate_shm_cache", "mint_shm",
+    "shm_supported", "shm_writable", "try_shm_put", "try_shm_view",
     # runtime
     "DartConfig", "DartContext", "dart_accumulate",
     "dart_accumulate_blocking", "dart_allreduce", "dart_barrier",

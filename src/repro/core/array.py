@@ -213,7 +213,9 @@ class GlobalRef:
 
     # -- data plane (lowers onto the CommEngine, never around it) --------
     def put(self, value) -> None:
-        """Blocking put (enqueue + flush + completion)."""
+        """Blocking put, locality-routed: SHM-writable targets take the
+        zero-copy window write (no jitted dispatch); everything else is
+        enqueue + flush + completion through the engine."""
         from . import runtime as rt
         if self.size == 0:
             return
@@ -222,7 +224,9 @@ class GlobalRef:
 
     def put_nb(self, value):
         """Non-blocking put: queued on the engine; coalesces with its
-        neighbours at the next epoch close.  Returns the Handle."""
+        neighbours at the next epoch close.  Returns the Handle.
+        Never shm-routed — a direct write would defeat the queued
+        coalescing this method exists for."""
         from . import runtime as rt
         if self.size == 0:
             return self._empty_handle()
@@ -365,10 +369,13 @@ class GlobalArray:
               team: int = DART_TEAM_ALL, shm: bool = True) -> "GlobalArray":
         """Collective symmetric allocation, typed.
 
-        ``shm=True`` (default) mints a ``FLAG_SHM`` pointer so reads of
-        host-visible blocks take the zero-copy locality fast path;
-        pass ``shm=False`` to force every read through the jitted
-        one-sided path (useful for benchmarking the substrate).
+        ``shm=True`` (default) mints a ``FLAG_SHM`` pointer so, on
+        host-visible arenas, blocking reads AND writes take the
+        zero-copy locality fast path and the data-moving collectives
+        (``broadcast``/``gather``/``scatter``) go shm-direct with zero
+        jitted dispatches; pass ``shm=False`` to force everything
+        through the jitted one-sided path (useful for benchmarking the
+        substrate, or when a test pins engine dispatch counts).
         """
         from . import runtime as rt
         from .shm import mint_shm
@@ -479,7 +486,9 @@ class GlobalArray:
 
     def broadcast(self, root: int):
         """Broadcast ``root``'s block to every member.  Returns the
-        collective's Handle (born issued)."""
+        collective's Handle (born issued).  Shm-direct (zero jitted
+        dispatches) on SHM-writable pools; one jitted dispatch
+        otherwise."""
         from . import runtime as rt
         return rt.dart_bcast(self.ctx,
                              self.gptr.setunit(self._check_unit(root)),
@@ -487,7 +496,9 @@ class GlobalArray:
 
     def gather(self) -> jax.Array:
         """Gather every member's block → typed ``(team_size, *shape)``
-        array, in team-relative order, in one jitted dispatch."""
+        array, in team-relative order — shm-direct (zero jitted
+        dispatches) on host-visible pools, one jitted dispatch
+        otherwise."""
         from . import runtime as rt
         vals, _ = rt.dart_gather_typed(self.ctx, self.gptr, self.shape,
                                        self.dtype)
@@ -495,7 +506,8 @@ class GlobalArray:
 
     def scatter(self, values) -> None:
         """Scatter row i of ``values`` (``(team_size, *shape)``) to the
-        team's i-th member."""
+        team's i-th member — shm-direct on SHM-writable pools, one
+        jitted dispatch otherwise."""
         values = jnp.asarray(values, dtype=self.dtype)
         want = (self.team_size,) + self.shape
         if values.shape != want:

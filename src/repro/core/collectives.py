@@ -301,6 +301,15 @@ def _pre_collective(state, poolid, engine):
     freshly flushed state — the caller-passed ``state`` is superseded
     (runtime callers always pass ``ctx.state`` where ``ctx`` is the
     holder).  Pass ``engine=None`` to thread state purely functionally.
+
+    Routing note: the runtime wrappers (``runtime.dart_bcast`` etc.)
+    only reach this module's data movers when the shm-direct path
+    declined — FLAG_SHM pointers on host-writable arenas are served by
+    ``shm.try_shm_bcast``/``try_shm_gather``/``try_shm_scatter`` as
+    memcpy loops with zero jitted dispatches (and therefore zero
+    ``dispatch_count`` increments).  The ordering contract is shared:
+    both paths flush the whole pool first, so queued one-sided ops are
+    ordered before the collective either way.
     """
     if engine is not None:
         state = engine.flush(poolid)

@@ -45,8 +45,8 @@ from typing import Dict, List, Optional
 
 __all__ = [
     "DartError", "UnitFailedError", "FlushTimeoutError",
-    "RetriesExhaustedError", "TransientDispatchFault", "FaultSpec",
-    "FaultPlane",
+    "RetriesExhaustedError", "ShmBoundsError", "TransientDispatchFault",
+    "FaultSpec", "FaultPlane",
 ]
 
 
@@ -84,6 +84,21 @@ class FlushTimeoutError(DartError):
 
 class RetriesExhaustedError(DartError):
     """A run kept faulting past the engine's retry budget."""
+
+
+class ShmBoundsError(DartError, ValueError):
+    """A shared-memory window access (``dart_shm_view`` / shm-plane
+    read) whose byte span overruns the unit's pool partition.
+
+    Previously the view sliced ``host[row, off:off+n]`` unchecked: the
+    overrun silently truncated and surfaced as a bare numpy reshape
+    ``ValueError``.  Also a ``ValueError`` so pre-existing handlers of
+    that symptom keep catching the (now typed, lane-addressed) error.
+    Carries ``poolid``/``row``/``off``/``nbytes``.
+    """
+
+    off: Optional[int] = None
+    nbytes: Optional[int] = None
 
 
 class TransientDispatchFault(DartError):

@@ -578,6 +578,21 @@ class CommEngine:
         self.ops_coalesced = 0
         self.compile_count = 0
         self.plan_cache_hits = 0
+        # -- shm plane (repro.core.shm; docs/API.md "Shared-memory
+        # plane") ------------------------------------------------------
+        #: locked host-side writes routed through the shm window (each
+        #: one a put that cost ZERO jitted dispatches)
+        self.shm_puts = 0
+        #: collectives served as memcpy loops through the shm window
+        self.shm_collective_ops = 0
+        #: poolid -> jitted READ outputs (gather / fetch-accumulate
+        #: batches) dispatched against that pool's arena and possibly
+        #: still in flight.  An in-place shm write must not mutate an
+        #: arena a dispatched-but-unmaterialized read is still sourcing
+        #: from, so the shm plane blocks + clears a pool's fences
+        #: before writing (_drain_read_fences).  Bounded: draining
+        #: clears, and the recorder caps the per-pool backlog.
+        self._read_fences: Dict[int, List[jax.Array]] = {}
         # -- fault plane (docs/API.md "Failure model & fault plane") ----
         #: attached injector (None = fault-free: zero-overhead dispatch)
         self.faults: Optional[FaultPlane] = None
@@ -684,6 +699,46 @@ class CommEngine:
         if lane_err is not None:
             self.enqueue_rejections += 1
             raise lane_err
+
+    def _check_lane_live(self, poolid: int, row: int, unit: int) -> None:
+        """Passive (no injector poll) dead-unit / failed-lane fail-fast
+        — the shm plane re-checks a lane AFTER its ordering flush ran:
+        if a queued op on the lane just failed, the host write behind
+        it must not apply (program order), but the op already paid its
+        one ``poll_enqueue`` in :meth:`_precheck_enqueue`."""
+        if unit in self.dead_units:
+            self.enqueue_rejections += 1
+            err = UnitFailedError(
+                f"unit {unit} is dead; shm write rejected "
+                f"(lane: pool {poolid}, row {row})")
+            err.unit, err.poolid, err.row = unit, poolid, row
+            raise err
+        lane_err = self.failed_lanes.get((poolid, row))
+        if lane_err is not None:
+            self.enqueue_rejections += 1
+            raise lane_err
+
+    # -- shm-plane read fences ------------------------------------------
+
+    def _record_read_fence(self, poolid: int, arr) -> None:
+        """Under the engine lock: remember a jitted read's output so an
+        shm write to the pool can block on it before mutating the
+        arena in place.  Caps the backlog (pure-engine workloads never
+        drain) by blocking + dropping the oldest entries."""
+        fences = self._read_fences.setdefault(poolid, [])
+        fences.append(arr)
+        if len(fences) > 64:
+            drop = fences[: len(fences) - 64]
+            del fences[: len(fences) - 64]
+            _block_ready(drop)
+
+    def _drain_read_fences(self, poolid: int) -> None:
+        """Under the engine lock: block until every recorded jitted
+        read of the pool's arena has materialized, then forget them —
+        after this an in-place host write cannot race a reader."""
+        fences = self._read_fences.pop(poolid, None)
+        if fences:
+            _block_ready(fences)
 
     def fault_stats(self) -> Dict[str, object]:
         """Process-wide fault counters: the engine's retry/abort/
@@ -1085,6 +1140,7 @@ class CommEngine:
         carrying ``poolid`` (and ``teamid`` when the drop came from
         ``dart_team_destroy``).  Returns the number of ops dropped."""
         with self.lock:
+            self._read_fences.pop(poolid, None)
             dropped = [op for op in self._pending if op.poolid == poolid]
             if not dropped:
                 return 0
@@ -1158,6 +1214,7 @@ class CommEngine:
         if first.fetch:
             arena, old = fn(arena, desc, flat)
             batch = _GatherBatch(old)
+            self._record_read_fence(first.poolid, old)
             for i, op in enumerate(run):
                 op.handle._resolve_gather(batch, i)
         else:
@@ -1190,6 +1247,7 @@ class CommEngine:
             cb=cb)
         self._note_plan(hit)
         batch = _GatherBatch(fn(arena, desc))
+        self._record_read_fence(run[0].poolid, batch.raws)
         for i, op in enumerate(run):
             op.handle._resolve_gather(batch, i)
 
@@ -1209,6 +1267,7 @@ class CommEngine:
         """Drop queued ops without dispatching (dart_exit teardown)."""
         with self.lock:
             self._pending = []
+            self._read_fences.clear()
 
 
 def _kind_key(op) -> Tuple:

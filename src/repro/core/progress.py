@@ -21,7 +21,12 @@ Design:
 * the sweep calls the ordinary per-target ``engine.flush(pool, row)``
   path, which serializes on the engine lock with every foreground
   flush, waiter, and raw-state reader — the plane adds no new
-  synchronization rules, it is just another caller.
+  synchronization rules, it is just another caller.  That includes the
+  shm write plane (``shm.dart_shm_put`` and the shm-direct
+  collectives): its flush-then-write-then-reinstall sequence runs
+  under one ``engine.lock`` hold, so a drain-loop sweep either lands
+  entirely before the host write or observes the re-installed arena
+  after it — never a half-written window.
 
 Lock ordering: the plane's condition variable is *never* held while
 calling into the engine, and the engine's enqueue notifier is invoked

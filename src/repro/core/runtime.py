@@ -34,6 +34,7 @@ from .team import (DART_TEAM_ALL, FreeListTeamList, Team, TeamList,
 from . import onesided as _os
 from . import collectives as _coll
 from . import progress as _prog
+from . import shm as _shm
 
 
 @dataclasses.dataclass
@@ -253,6 +254,7 @@ def dart_exit(ctx: DartContext) -> None:
     ctx.teams.clear()
     ctx.teams_by_slot.clear()
     ctx.heap.windows.clear()
+    _shm.invalidate_shm_cache(ctx)     # every probe result dies with the heap
     ctx._initialized = False
 
 
@@ -283,6 +285,9 @@ def dart_team_destroy(ctx: DartContext, teamid: int) -> None:
                          teamid=teamid)
     ctx.state.pop(meta.poolid, None)
     ctx.heap.drop_pool(meta.poolid)
+    # drop the dropped pool's shm-support cache entry (poolids are never
+    # reused, but a stale positive must not outlive its arena)
+    _shm.invalidate_shm_cache(ctx, meta.poolid)
 
 
 def dart_team_get_group(ctx: DartContext, teamid: int) -> DartGroup:
@@ -364,7 +369,21 @@ def dart_put(ctx: DartContext, gptr: GlobalPtr, value, *,
 
 def dart_put_blocking(ctx: DartContext, gptr: GlobalPtr, value, *,
                       stride: int = 0, count: int = 1) -> None:
-    """Blocking put: enqueue + flush + local/remote completion."""
+    """Blocking put, locality-routed (write-side mirror of
+    :func:`dart_get_blocking`).
+
+    SHM-writable targets (FLAG_SHM pointer + host-writable arena) take
+    the zero-copy window path: the target's queued lane is flushed
+    (program order), then the bytes land via a locked host-side write
+    with ZERO jitted dispatches — ``shm.try_shm_put``.  Everything else
+    (device-only arenas, plain pointers) enqueues + flushes through the
+    engine's jitted scatter exactly as before.  Non-blocking
+    ``dart_put`` always stays on the engine: its contract is queued
+    coalescing, which a direct write would defeat.
+    """
+    if _shm.try_shm_put(ctx, gptr, value, stride=stride,
+                        count=count) is not None:
+        return
     h = ctx.engine.put(ctx.heap, ctx.teams_by_slot, gptr, value,
                        stride=stride, count=count)
     h.wait()
@@ -438,14 +457,16 @@ def dart_get_blocking(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
     """Blocking get, locality-routed.
 
     SHM_LOCAL targets (FLAG_SHM pointer + host-visible arena) bypass
-    XLA entirely: the queued ops on the pool are flushed and the bytes
-    are read through the zero-copy view — no jitted dispatch.  Remote
-    targets take the engine's jitted gather path.
+    XLA entirely: the queued ops on the target's lane are flushed and
+    the bytes are read through the zero-copy view — no jitted dispatch,
+    and (satellite 3) ONE engine-lock acquisition covering deref +
+    cached probe + flush + view; the support probe itself runs once per
+    pool, never per deref.  Remote targets take the engine's jitted
+    gather path.
     """
-    from . import shm as _shm
-    if _shm.classify_locality(ctx, gptr) is _shm.Locality.SHM_LOCAL:
-        # dart_shm_view flushes the target's (pool, row) lane itself
-        return _shm.dart_shm_view(ctx, gptr, shape, dtype)
+    view = _shm.try_shm_view(ctx, gptr, shape, dtype)
+    if view is not None:
+        return view
     h = ctx.engine.get(ctx.heap, ctx.teams_by_slot, gptr, shape, dtype)
     return h.value()
 
@@ -477,8 +498,21 @@ def dart_flush(ctx: DartContext, gptr: Optional[GlobalPtr] = None,
 # swap in a state snapshot that misses the flush's writes (or hand the
 # collective a mid-donation arena).  The lock is an RLock, so the
 # nested engine.flush inside _pre_collective re-enters cleanly.
+#
+# Data-moving collectives (bcast/gather/scatter + typed) are
+# locality-routed first: when every member is SHM_LOCAL — on the
+# single controller, when the pool arena is host-writable — the
+# shm-direct memcpy path serves them with ZERO jitted dispatches
+# (shm.try_shm_*); otherwise (or when the shm routine declines, e.g. a
+# masked out-of-range request) they fall back to the engine's
+# one-dispatch jitted kernels.  Computing collectives
+# (allreduce/reduce) always stay on the engine — they are arithmetic,
+# not memcpy.
 
 def dart_bcast(ctx: DartContext, root_gptr: GlobalPtr, nbytes: int):
+    h = _shm.try_shm_bcast(ctx, root_gptr, nbytes)
+    if h is not None:
+        return h
     with ctx.engine.lock:
         ctx.state, h = _coll.dart_bcast(ctx.state, ctx.heap,
                                         ctx.teams_by_slot, root_gptr,
@@ -487,6 +521,9 @@ def dart_bcast(ctx: DartContext, root_gptr: GlobalPtr, nbytes: int):
 
 
 def dart_gather(ctx: DartContext, gptr: GlobalPtr, per_unit_nbytes: int):
+    shm_out = _shm.try_shm_gather(ctx, gptr, per_unit_nbytes)
+    if shm_out is not None:
+        return shm_out
     with ctx.engine.lock:
         out, h = _coll.dart_gather(ctx.state, ctx.heap, ctx.teams_by_slot,
                                    gptr, per_unit_nbytes, engine=ctx.engine)
@@ -495,6 +532,9 @@ def dart_gather(ctx: DartContext, gptr: GlobalPtr, per_unit_nbytes: int):
 
 def dart_gather_typed(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
     """Typed gather: every row's value at ``gptr.addr`` → (n_rows, *shape)."""
+    shm_out = _shm.try_shm_gather_typed(ctx, gptr, shape, dtype)
+    if shm_out is not None:
+        return shm_out
     with ctx.engine.lock:
         out, h = _coll.dart_gather_typed(ctx.state, ctx.heap,
                                          ctx.teams_by_slot, gptr, shape,
@@ -504,6 +544,9 @@ def dart_gather_typed(ctx: DartContext, gptr: GlobalPtr, shape, dtype):
 
 def dart_scatter_typed(ctx: DartContext, gptr: GlobalPtr, values):
     """Typed scatter: row i of ``values`` ((n_rows, *shape)) → unit i."""
+    h = _shm.try_shm_scatter_typed(ctx, gptr, values)
+    if h is not None:
+        return h
     with ctx.engine.lock:
         ctx.state, h = _coll.dart_scatter_typed(ctx.state, ctx.heap,
                                                 ctx.teams_by_slot, gptr,
@@ -512,6 +555,9 @@ def dart_scatter_typed(ctx: DartContext, gptr: GlobalPtr, values):
 
 
 def dart_scatter(ctx: DartContext, gptr: GlobalPtr, values):
+    h = _shm.try_shm_scatter(ctx, gptr, values)
+    if h is not None:
+        return h
     with ctx.engine.lock:
         ctx.state, h = _coll.dart_scatter(ctx.state, ctx.heap,
                                           ctx.teams_by_slot, gptr, values,

@@ -264,7 +264,7 @@ def test_engine_profile_machine_readable():
     from benchmarks import put_get
     profile = put_get.engine_profile(repeats=2, quick=True)
     s = profile["series"]
-    assert profile["schema"] == "BENCH_engine/v7"
+    assert profile["schema"] == "BENCH_engine/v8"
     assert s["blocking"]["dispatches"] == profile["n_ops"]
     assert s["coalesced"]["dispatches"] == 1
     assert s["mixed_size_coalesced"]["dispatches"] == 1
@@ -297,6 +297,17 @@ def test_engine_profile_machine_readable():
     assert sd["recompiles_steady_state"] == 0
     nr = profile["narray"]
     assert nr["get_col_dispatches"] <= nr["owning_tiles"]
+    # v8 shm plane: a locality-routed put on a host-visible arena is a
+    # locked host-side memcpy — zero jitted dispatches, >= 5x faster
+    # than the jitted blocking put — and intra-node collectives run
+    # shm-direct at zero dispatches with no steady-state recompiles
+    sp = profile["shm_plane"]
+    assert sp["shm_put_dispatches"] == 0
+    assert sp["shm_put_speedup"] >= 5.0
+    assert sp["broadcast_dispatches"] == 0
+    assert sp["gather_dispatches"] == 0
+    assert sp["scatter_dispatches"] == 0
+    assert sp["recompiles_steady_state"] == 0
     import json
     json.dumps(profile)                  # machine-readable, no jnp leaks
 

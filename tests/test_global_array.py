@@ -235,7 +235,10 @@ def test_collectives_ordered_after_queued_puts(ctx):
 
 
 def test_gather_is_one_dispatch(ctx):
-    ga = ctx.alloc((8,), jnp.float32)
+    # shm=False pins the ENGINE contract — the default shm=True alloc
+    # goes shm-direct on host-visible arenas (0 dispatches; covered by
+    # tests/test_shm_plane.py)
+    ga = ctx.alloc((8,), jnp.float32, shm=False)
     ga[0].put(jnp.ones((8,), jnp.float32))     # settle the pool
     d0 = ctx.engine.dispatch_count
     ga.gather()

@@ -36,17 +36,23 @@ def test_shm_view_zero_copy_roundtrip(ctx):
     assert not view.flags.writeable            # read-only snapshot
 
 
-def test_shm_view_is_epoch_snapshot(ctx):
-    """Views bind the current heap state; a later put starts a new
-    epoch (functional update) and needs a fresh view."""
+def test_shm_view_is_live_window(ctx):
+    """Views are LIVE windows on the arena (MPI-3 shm semantics): a
+    later shm-routed put through the same window is visible in a view
+    taken earlier, because the shm write mutates the arena in place
+    instead of donating a successor.  (An ENGINE-path write — e.g. any
+    put on a shm=False pool — still re-installs a new arena, which an
+    old view does not follow.)"""
     if not shm_supported(ctx):
         pytest.skip("backend arenas not host-visible")
     g = dart_team_memalloc_shared(ctx, DART_TEAM_ALL, 64)
     dart_put_blocking(ctx, g, jnp.full((4,), 1.0, jnp.float32))
     v1 = dart_shm_view(ctx, g, (4,), jnp.float32)
+    assert np.all(v1 == 1.0)
     dart_put_blocking(ctx, g, jnp.full((4,), 2.0, jnp.float32))
     v2 = dart_shm_view(ctx, g, (4,), jnp.float32)
-    assert np.all(v1 == 1.0) and np.all(v2 == 2.0)
+    assert np.all(v2 == 2.0)
+    assert np.all(v1 == 2.0)    # v1 observed the in-place window write
 
 
 def test_shm_requires_flag(ctx):

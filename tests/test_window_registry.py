@@ -400,7 +400,9 @@ def test_shm_supported_probes_addressed_pool(ctx):
 # ------------------------------------- typed collectives: one dispatch -----
 
 def test_gather_typed_single_counted_dispatch(ctx):
-    ga = ctx.alloc((4,), jnp.float32)
+    # shm=False: this test pins the jitted-engine dispatch contract;
+    # the shm-direct (0-dispatch) route is tests/test_shm_plane.py's
+    ga = ctx.alloc((4,), jnp.float32, shm=False)
     for u in range(4):
         ga[u].put(jnp.full((4,), float(u), jnp.float32))
     d0 = ctx.engine.dispatch_count
@@ -412,7 +414,7 @@ def test_gather_typed_single_counted_dispatch(ctx):
 
 
 def test_scatter_typed_single_counted_dispatch(ctx):
-    ga = ctx.alloc((4,), jnp.int32)
+    ga = ctx.alloc((4,), jnp.int32, shm=False)
     vals = jnp.arange(16, dtype=jnp.int32).reshape(4, 4)
     d0 = ctx.engine.dispatch_count
     rt.dart_scatter_typed(ctx, ga.gptr, vals)
